@@ -1,0 +1,74 @@
+"""Fig. 5 + Table V — three designs on the eight Table IV datasets.
+
+Latency of conventional MM (96x96, same BW), FPIC same-BW (8 units) and
+FPIC same-buffer (32 units) normalized to the synchronized 64x64 mesh,
+for A x A^T in density order — the paper's headline 1.5-39x / 2-30x plot.
+"""
+from __future__ import annotations
+
+from repro.core.mesh_sim import (bandwidth_kb_per_cycle, buffer_kb,
+                                 conv_mesh_same_bw, conventional_mm_latency,
+                                 fpic_latency, fpic_units_same_buffer,
+                                 fpic_units_same_bw, sync_mesh_latency)
+from repro.data.datasets import TABLE4_DATASETS, scaled, synthesize
+
+N_SYNCH = 64
+
+
+def table5():
+    """Design-parameter table (paper Table V)."""
+    return [
+        {"design": "this-work", "units": f"1x{N_SYNCH}x{N_SYNCH}",
+         "bw_kb_cycle": bandwidth_kb_per_cycle(N_SYNCH),
+         "macs": N_SYNCH * N_SYNCH, "buffer_kb": buffer_kb(N_SYNCH)},
+        {"design": "fpic-same-bw", "units": f"{fpic_units_same_bw(N_SYNCH)}x8x8",
+         "bw_kb_cycle": bandwidth_kb_per_cycle(N_SYNCH),
+         "macs": 64 * fpic_units_same_bw(N_SYNCH),
+         "buffer_kb": fpic_units_same_bw(N_SYNCH) * 2 * 64 * 32 * 48 / 8
+         / 1024},
+        {"design": "fpic-same-buffer",
+         "units": f"{fpic_units_same_buffer(N_SYNCH)}x8x8",
+         "bw_kb_cycle": bandwidth_kb_per_cycle(
+             8 * fpic_units_same_buffer(N_SYNCH)),
+         "macs": 64 * fpic_units_same_buffer(N_SYNCH),
+         "buffer_kb": buffer_kb(N_SYNCH)},
+        {"design": "conv-mm", "units": f"1x{conv_mesh_same_bw(N_SYNCH)}x"
+         f"{conv_mesh_same_bw(N_SYNCH)}",
+         "bw_kb_cycle": bandwidth_kb_per_cycle(N_SYNCH),
+         "macs": conv_mesh_same_bw(N_SYNCH) ** 2, "buffer_kb": 0.0},
+    ]
+
+
+def run(factor: float = 0.35, seed: int = 0):
+    rows = []
+    for name, spec0 in TABLE4_DATASETS.items():
+        spec = scaled(spec0, factor)
+        a = synthesize(spec, seed)
+        sync = sync_mesh_latency(a, a, mesh=N_SYNCH).cycles
+        f_bw = fpic_latency(a, a, k_fpic=fpic_units_same_bw(N_SYNCH)).cycles
+        f_buf = fpic_latency(
+            a, a, k_fpic=fpic_units_same_buffer(N_SYNCH)).cycles
+        conv = conventional_mm_latency(
+            spec.m, spec.m, spec.n, mesh=conv_mesh_same_bw(N_SYNCH)).cycles
+        rows.append({"dataset": name, "density": spec.density,
+                     "sync_cycles": sync,
+                     "conv_over_sync": conv / sync,
+                     "fpic_bw_over_sync": f_bw / sync,
+                     "fpic_buf_over_sync": f_buf / sync})
+    return rows
+
+
+def main():
+    for t in table5():
+        print(f"table5,{t['design']},units={t['units']},"
+              f"bw={t['bw_kb_cycle']:.1f}kb/cyc,macs={t['macs']},"
+              f"buffer={t['buffer_kb']:.0f}kB")
+    for r in sorted(run(), key=lambda x: -x["density"]):
+        print(f"fig5,{r['dataset']},D={r['density']:.4f},"
+              f"conv/sync={r['conv_over_sync']:.1f},"
+              f"fpicBW/sync={r['fpic_bw_over_sync']:.1f},"
+              f"fpicBUF/sync={r['fpic_buf_over_sync']:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Kernel micro-benchmarks (interpret mode on CPU — correctness-path
+timings plus DERIVED work metrics; real-TPU timing comes from the roofline
+terms, not from this host)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bsr import BSR, magnitude_block_mask
+from repro.data.datasets import DatasetSpec, synthesize
+from repro.kernels import ops
+
+
+def _time(fn, *args, reps: int = 3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6      # us
+
+
+def run(seed: int = 0):
+    rng = np.random.default_rng(seed)
+    rows = []
+    m = k = n = 256
+    a = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    us = _time(lambda x, y: ops.dense_mm(x, y), a, b)
+    rows.append(("dense_mm_256", us, f"flops={2*m*k*n:.3g}"))
+
+    d = rng.normal(size=(512, 512)).astype(np.float32)
+    b512 = jnp.asarray(rng.normal(size=(512, n)).astype(np.float32))
+    for density in (0.25, 0.5):
+        mask = magnitude_block_mask(d, (128, 128), density)
+        bsr = BSR.from_mask(d, mask, (128, 128))
+        us = _time(lambda x: ops.bsr_matmul(bsr, x), b512)
+        useful = 2 * bsr.nnz_blocks * 128 * 128 * n
+        rows.append((f"bsr_spmm_d{density}", us,
+                     f"useful_flops={useful:.3g};"
+                     f"skipped={1-bsr.block_density:.2f}"))
+
+    spec = DatasetSpec("kb", 128, 1024, 0.03)
+    a_sp = synthesize(spec, seed)
+    us = _time(lambda: ops.index_match_matmul(a_sp, a_sp, rounds=128))
+    rows.append(("index_match_spmm", us, f"nnz={a_sp.nnz}"))
+
+    from repro.core.incrs import InCRS
+    inc = InCRS.from_crs(a_sp)
+    us = _time(lambda: ops.incrs_to_dense(inc))
+    rows.append(("incrs_gather", us, f"sections={inc.n_sections}"))
+    return rows
+
+
+def main():
+    for name, us, derived in run():
+        print(f"kernel,{name},{us:.0f}us,{derived}")
+
+
+if __name__ == "__main__":
+    main()

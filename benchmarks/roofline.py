@@ -1,0 +1,119 @@
+"""Roofline analysis: three terms per (arch x shape x mesh) from the
+dry-run artifacts.
+
+  compute    = HLO_flops_per_device / 197e12       (bf16 TFLOP/s per v5e)
+  memory     = HLO_bytes_per_device / 819e9        (HBM GB/s)
+  collective = wire_bytes_per_device / 50e9        (~ICI GB/s per link)
+
+Inputs: roofline_all.json (loop-corrected costs, see launch/dryrun.py
+--roofline) and dryrun_all.json (compile proof + memory analysis).
+
+MODEL_FLOPS uses 6*N_active*tokens for training (fwd 2 + bwd 4) and
+2*N_active*tokens for inference steps; the MODEL/HLO ratio exposes remat
+and replication waste (ratios << 1 mean the compiled module does much more
+work than the math requires — e.g. unshardable heads replicating attention
+over the model axis).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip (v5e)
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+
+def model_flops_per_device(rec: Dict, cfgs) -> float:
+    cfg = cfgs.get(rec["arch"])
+    n_act = cfg.active_param_count()
+    shape = rec["shape"]
+    from repro.configs.shapes import SHAPES
+    sp = SHAPES[shape]
+    if sp.kind == "train":
+        tokens = sp.global_batch * sp.seq_len
+        total = 6.0 * n_act * tokens
+    elif sp.kind == "prefill":
+        tokens = sp.global_batch * sp.seq_len
+        total = 2.0 * n_act * tokens
+    else:
+        total = 2.0 * n_act * sp.global_batch        # one token per lane
+    return total / rec["n_devices"]
+
+
+def analyze(roofline_path: str, dryrun_path: Optional[str] = None
+            ) -> List[Dict]:
+    import repro.configs as C
+    cfgs = {n: C.get(n) for n in C.ARCH_NAMES}
+    recs = json.load(open(roofline_path))
+    mem = {}
+    if dryrun_path and os.path.exists(dryrun_path):
+        for r in json.load(open(dryrun_path)):
+            if not r.get("skipped") and not r.get("error"):
+                mem[(r["arch"], r["shape"], r["mesh"])] = r
+    rows = []
+    for r in recs:
+        if r.get("skipped"):
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "skipped": True, "reason": r["reason"]})
+            continue
+        if r.get("error"):
+            continue
+        t_c = r["flops_per_device"] / PEAK_FLOPS
+        t_m = r["bytes_per_device"] / HBM_BW
+        t_w = r["wire_per_device"] / ICI_BW
+        dom = max((t_c, "compute"), (t_m, "memory"),
+                  (t_w, "collective"))[1]
+        mf = model_flops_per_device(r, cfgs)
+        step = max(t_c, t_m, t_w)
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "skipped": False,
+            "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_w,
+            "dominant": dom,
+            "model_flops_per_device": mf,
+            "useful_ratio": mf / max(r["flops_per_device"], 1.0),
+            "roofline_fraction": (mf / PEAK_FLOPS) / max(step, 1e-30),
+            "mem_record": mem.get((r["arch"], r["shape"], r["mesh"])),
+        })
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--roofline-json", default="roofline_all.json")
+    ap.add_argument("--dryrun-json", default="dryrun_all.json")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args(argv)
+    rows = analyze(args.roofline_json, args.dryrun_json)
+    if args.md:
+        print("| arch | shape | compute s | memory s | collective s | "
+              "dominant | MODEL/HLO | roofline frac |")
+        print("|---|---|---|---|---|---|---|---|")
+        for r in rows:
+            if r.get("skipped"):
+                print(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                      f"skip | — | — |")
+            else:
+                print(f"| {r['arch']} | {r['shape']} | "
+                      f"{r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} | "
+                      f"{r['t_collective_s']:.3e} | {r['dominant']} | "
+                      f"{r['useful_ratio']:.2f} | "
+                      f"{r['roofline_fraction']:.2%} |")
+    else:
+        for r in rows:
+            if r.get("skipped"):
+                print(f"roofline,{r['arch']},{r['shape']},skipped")
+            else:
+                print(f"roofline,{r['arch']},{r['shape']},"
+                      f"tc={r['t_compute_s']:.3e},tm={r['t_memory_s']:.3e},"
+                      f"tw={r['t_collective_s']:.3e},dom={r['dominant']},"
+                      f"useful={r['useful_ratio']:.2f},"
+                      f"frac={r['roofline_fraction']:.2%}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Quickstart: the paper's two contributions in five minutes.
+
+1. InCRS — random access into a row-stored sparse matrix at ~b/2+1 memory
+   accesses instead of CRS's ~N*D/2.
+2. The synchronized-mesh SpMM — Algorithm 2 exactness + the TPU-native
+   round-densified kernel (index_match_spmm) and the block-sparse kernel
+   steered by prefix counters (bsr_spmm).
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core.crs import CRS
+from repro.core.incrs import InCRS
+from repro.core.mesh_sim import (conventional_mm_latency, fpic_latency,
+                                 node_alg2, sync_mesh_latency)
+from repro.data.datasets import DatasetSpec, synthesize
+from repro.kernels import ops
+
+
+def main():
+    # ---- 1. InCRS random access -------------------------------------
+    spec = DatasetSpec("demo", 64, 2048, 0.04)
+    crs = synthesize(spec, seed=0)
+    inc = InCRS.from_crs(crs)
+    rng = np.random.default_rng(0)
+    ma_crs = ma_inc = 0
+    for _ in range(200):
+        i, j = int(rng.integers(64)), int(rng.integers(2048))
+        v1, a1 = crs.locate(i, j)
+        v2, a2 = inc.locate(i, j)
+        assert v1 == v2
+        ma_crs += a1
+        ma_inc += a2
+    print(f"[InCRS] avg accesses/locate: CRS {ma_crs/200:.1f} -> "
+          f"InCRS {ma_inc/200:.1f}  ({ma_crs/ma_inc:.1f}x fewer)")
+    print(f"[InCRS] storage ratio (CRS/InCRS): {inc.storage_ratio():.3f}")
+
+    # ---- 2. Algorithm 2 is exact ------------------------------------
+    ai, av, _ = crs.get_row(3)
+    bi, bv, _ = crs.get_row(7)
+    dot, cycles, occ = node_alg2(ai, av, bi, bv, rounds=32)
+    dense = crs.to_dense()
+    assert abs(dot - dense[3] @ dense[7]) < 1e-6
+    print(f"[Alg2] exact sparse dot in {cycles} cycles "
+          f"(max buffer occupancy {occ} <= R=32)")
+
+    # ---- 3. Cycle-level design comparison ---------------------------
+    sync = sync_mesh_latency(crs, crs, mesh=64).cycles
+    fpic = fpic_latency(crs, crs, k_fpic=8).cycles
+    conv = conventional_mm_latency(64, 64, 2048, mesh=96).cycles
+    print(f"[mesh] A@A^T latency: sync {sync}  fpic(sameBW) {fpic}  "
+          f"conventional {conv} cycles")
+
+    # ---- 4. TPU kernels (interpret mode on CPU) ---------------------
+    out = np.asarray(ops.index_match_matmul(crs, crs, rounds=128))
+    ref = dense.astype(np.float32) @ dense.astype(np.float32).T
+    err = np.abs(out - ref).max() / max(np.abs(ref).max(), 1)
+    print(f"[pallas] index_match_spmm matches dense: rel err {err:.2e}")
+
+    from repro.core.bsr import BSR
+    w = rng.normal(size=(256, 256)).astype(np.float32)
+    bsr = BSR.from_dense(np.where(rng.random((256, 256)) < 0.5, w, 0),
+                         (128, 128))
+    x = rng.normal(size=(256, 64)).astype(np.float32)
+    y = np.asarray(ops.bsr_matmul(bsr, x))
+    err = np.abs(y - bsr.to_dense() @ x).max()
+    print(f"[pallas] bsr_spmm (prefix-counter steered) abs err {err:.2e}")
+    print("quickstart OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""End-to-end driver for the paper's OWN workload: batched SpMM serving.
+
+A queue of requests (multiply sparse dataset A against incoming dense
+batches B) is served through the InCRS access layer + the TPU kernels —
+the accelerator-as-a-service framing of the paper's Fig. 5 experiment.
+The dense baseline runs the same requests through the conventional tiled
+MXU matmul for a useful-FLOPs comparison.
+
+Run: PYTHONPATH=src python examples/spmm_serve.py [--requests 8]
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.configs.paper_spmm import WORKLOADS
+from repro.core.incrs import InCRS
+from repro.data.datasets import scaled, synthesize
+from repro.kernels import ops
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", default="incrs-docword",
+                    choices=sorted(WORKLOADS))
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch-cols", type=int, default=64)
+    ap.add_argument("--scale", type=float, default=0.06)
+    args = ap.parse_args(argv)
+
+    wl = WORKLOADS[args.workload]
+    spec = scaled(wl.dataset, args.scale)
+    a = synthesize(spec, seed=0)
+    inc = InCRS.from_crs(a)
+    print(f"workload={wl.name} A={spec.m}x{spec.n} D={spec.density:.3f} "
+          f"nnz={a.nnz}")
+    # TPU adaptation note (DESIGN.md §2): at these densities UNSTRUCTURED
+    # sparsity leaves no 128x128 MXU block empty (P(empty) ~ e^{-16384*D}),
+    # so the accelerated path needs BLOCK-structured sparsity. We impose
+    # the paper-dataset's column skew at block granularity: keep the top
+    # 30% of blocks by mass (what sparse.prune does to weights).
+
+    # Ahead-of-time format prep (the paper's InCRS construction)
+    import jax.numpy as jnp
+    rng = np.random.default_rng(1)
+    dense_a = jnp.asarray(a.to_dense().astype(np.float32))
+
+    t_sparse = t_dense = 0.0
+    for r in range(args.requests):
+        b = jnp.asarray(rng.normal(
+            size=(spec.n, args.batch_cols)).astype(np.float32))
+        # sparse path: A in BSR (128-blocks) through the prefix-counter
+        # kernel — only non-zero tiles hit the MXU
+        from repro.core.bsr import BSR, magnitude_block_mask
+        t0 = time.perf_counter()
+        bm = 128
+        mp = -(-spec.m // bm) * bm
+        kp = -(-spec.n // bm) * bm
+        ad = np.zeros((mp, kp), np.float32)
+        ad[:spec.m, :spec.n] = np.asarray(dense_a)
+        mask = magnitude_block_mask(ad, (bm, bm), 0.3)
+        bsr = BSR.from_mask(ad, mask, (bm, bm))
+        bp = jnp.pad(b, ((0, kp - spec.n), (0, 0)))
+        y_sparse = ops.bsr_matmul(bsr, bp)[:spec.m]
+        y_sparse.block_until_ready()
+        t_sparse += time.perf_counter() - t0
+        # dense baseline on the SAME block-pruned operand
+        t0 = time.perf_counter()
+        y_dense = ops.dense_mm(
+            jnp.asarray(bsr.to_dense()[:spec.m, :spec.n]), b)
+        y_dense.block_until_ready()
+        t_dense += time.perf_counter() - t0
+        err = float(np.abs(np.asarray(y_sparse) - np.asarray(y_dense)).max())
+        assert err < 1e-2, err
+        useful = bsr.block_density
+        if r == 0:
+            print(f"  block density {useful:.2f} -> "
+                  f"{(1-useful)*100:.0f}% of MXU tiles skipped")
+    print(f"served {args.requests} requests: sparse-path "
+          f"{t_sparse:.2f}s, dense-path {t_dense:.2f}s "
+          f"(interpret-mode timings; the roofline report carries the "
+          f"real TPU numbers)")
+
+
+if __name__ == "__main__":
+    main()

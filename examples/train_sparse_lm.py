@@ -1,0 +1,71 @@
+"""End-to-end training driver: a ~small LM with BLOCK-SPARSE FFNs (the
+paper's SpMM as a training-time feature) vs its dense twin.
+
+Defaults are CPU-sized; pass --d-model 768 --layers 12 --steps 300 for the
+~100M-parameter configuration on real hardware.
+
+Run: PYTHONPATH=src python examples/train_sparse_lm.py --steps 30
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.pipeline import Prefetcher, SyntheticTokens
+from repro.models.config import BlockSparsity, ModelConfig
+from repro.train import trainer
+from repro.train.optimizer import AdamWConfig
+
+
+def build(name, d_model, layers, vocab, sparse, block):
+    return ModelConfig(
+        name, layers, d_model, max(2, d_model // 64), max(1, d_model // 128),
+        4 * d_model, vocab, dtype="float32",
+        sparsity=BlockSparsity(block=block, density=0.5) if sparse else None)
+
+
+def run(cfg, steps, batch, seq, seed=0):
+    opt = AdamWConfig(lr=1e-3, warmup_steps=max(2, steps // 10),
+                      total_steps=steps)
+    params, opt_state, axes = trainer.init_train_state(
+        cfg, opt, jax.random.PRNGKey(seed))
+    n = sum(p.size for p in jax.tree.leaves(params))
+    step = trainer.build_train_step(cfg, opt, axes, n_micro=1)
+    data = Prefetcher(SyntheticTokens(cfg.vocab_size, batch, seq, seed=1),
+                      timeout_s=30.0)
+    t0, first, last = time.time(), None, None
+    for i in range(steps):
+        b = {k: jnp.asarray(v) for k, v in next(data).items()}
+        params, opt_state, m = step(params, opt_state, b)
+        if first is None:
+            first = float(m["loss"])
+        last = float(m["loss"])
+    data.close()
+    dt = time.time() - t0
+    print(f"  {cfg.name}: {n/1e6:.1f}M params, loss {first:.3f} -> "
+          f"{last:.3f} in {steps} steps ({batch*seq*steps/dt:,.0f} tok/s)")
+    return last
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--vocab", type=int, default=512)
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--block", type=int, default=32)
+    args = ap.parse_args(argv)
+    print("dense FFN vs block-sparse FFN (50% blocks, paper's SpMM path):")
+    dense = run(build("dense-lm", args.d_model, args.layers, args.vocab,
+                      False, args.block), args.steps, args.batch, args.seq)
+    sparse = run(build("sparse-lm", args.d_model, args.layers, args.vocab,
+                       True, args.block), args.steps, args.batch, args.seq)
+    print(f"  final losses: dense {dense:.3f}, sparse {sparse:.3f} "
+          f"(sparse FFN trains at half the FFN FLOPs)")
+
+
+if __name__ == "__main__":
+    main()

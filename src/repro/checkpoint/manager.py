@@ -1,0 +1,163 @@
+"""Fault-tolerant checkpointing: atomic, async, retained, elastic.
+
+  * ATOMIC     — write to ``<dir>/tmp.<step>`` then ``os.rename`` (POSIX
+                 atomic), so a crash mid-write never corrupts the latest
+                 checkpoint; a manifest records completion.
+  * ASYNC      — a writer thread drains a queue; the train loop donates a
+                 host copy and keeps stepping (save() blocks only on the
+                 previous pending write, double-buffer style).
+  * RETENTION  — keep the newest ``keep`` checkpoints (+ every ``keep_every``
+                 milestone).
+  * ELASTIC    — arrays are stored UNSHARDED (gathered); ``restore`` places
+                 them onto whatever mesh/sharding the *new* job uses, so a
+                 512-chip checkpoint restores onto 256 or 1024 chips
+                 (N -> M reshape is just a different device_put).
+  * AUTO-RESUME — ``latest_step`` + ``restore`` pick up after preemption;
+                 partial writes are ignored (no manifest entry).
+
+Pytrees are flattened to ``path -> array`` with '/'-joined keys; the
+treedef is reconstructed from the target template on restore.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix="") -> Dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def _unflatten_like(template, flat: Dict[str, np.ndarray], prefix=""):
+    if isinstance(template, dict):
+        return {k: _unflatten_like(v, flat, f"{prefix}{k}/")
+                for k, v in template.items()}
+    if isinstance(template, (list, tuple)):
+        t = [_unflatten_like(v, flat, f"{prefix}{i}/")
+             for i, v in enumerate(template)]
+        return type(template)(t)
+    return flat[prefix[:-1]]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3,
+                 keep_every: Optional[int] = None, async_write: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.keep_every = keep_every
+        os.makedirs(directory, exist_ok=True)
+        self._q: "queue.Queue" = queue.Queue(maxsize=1)
+        self._err: Optional[BaseException] = None
+        self._thread = None
+        if async_write:
+            self._thread = threading.Thread(target=self._writer, daemon=True)
+            self._thread.start()
+
+    # ------------------------------------------------------------------
+    def _manifest_path(self):
+        return os.path.join(self.dir, "manifest.json")
+
+    def _load_manifest(self) -> Dict[str, Any]:
+        try:
+            with open(self._manifest_path()) as f:
+                return json.load(f)
+        except (FileNotFoundError, json.JSONDecodeError):
+            return {"steps": []}
+
+    def _write_manifest(self, man):
+        tmp = self._manifest_path() + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(man, f)
+        os.rename(tmp, self._manifest_path())
+
+    # ------------------------------------------------------------------
+    def _write(self, step: int, flat: Dict[str, np.ndarray]):
+        path = os.path.join(self.dir, f"step_{step:08d}.npz")
+        tmp = os.path.join(self.dir, f"tmp.{step}.{os.getpid()}")
+        with open(tmp, "wb") as f:
+            np.savez(f, **flat)
+        os.rename(tmp, path)                       # atomic publish
+        man = self._load_manifest()
+        man["steps"] = sorted(set(man["steps"] + [step]))
+        man["updated"] = time.time()
+        self._write_manifest(man)
+        self._gc(man)
+
+    def _gc(self, man):
+        steps = man["steps"]
+        protect = set(steps[-self.keep:])
+        if self.keep_every:
+            protect |= {s for s in steps if s % self.keep_every == 0}
+        drop = [s for s in steps if s not in protect]
+        for s in drop:
+            try:
+                os.remove(os.path.join(self.dir, f"step_{s:08d}.npz"))
+            except FileNotFoundError:
+                pass
+        man["steps"] = [s for s in steps if s in protect]
+        self._write_manifest(man)
+
+    def _writer(self):
+        while True:
+            step, flat = self._q.get()
+            try:
+                self._write(step, flat)
+            except BaseException as e:     # surfaced on next save/wait
+                self._err = e
+            self._q.task_done()
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree) -> None:
+        """Gather to host and enqueue (async) or write inline (sync)."""
+        if self._err:
+            raise RuntimeError("async checkpoint writer failed") from self._err
+        flat = {k: np.asarray(jax.device_get(v))
+                for k, v in _flatten(tree).items()}
+        if self._thread is None:
+            self._write(step, flat)
+        else:
+            self._q.put((step, flat))     # blocks if previous still writing
+
+    def wait(self):
+        self._q.join()
+        if self._err:
+            raise RuntimeError("async checkpoint writer failed") from self._err
+
+    # ------------------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        steps = self._load_manifest()["steps"]
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, template, shardings=None):
+        """Load arrays and place them. ``shardings`` (same structure as
+        template, or None) enables elastic restore onto any mesh."""
+        path = os.path.join(self.dir, f"step_{step:08d}.npz")
+        with np.load(path) as z:
+            flat = {k: z[k] for k in z.files}
+        tree = _unflatten_like(template, flat)
+        # cast to template dtypes (checkpoint stores exact dtypes already)
+        def place(x, t, s):
+            arr = np.asarray(x).astype(np.asarray(t).dtype
+                                       if hasattr(t, "dtype") else x.dtype)
+            return jax.device_put(arr, s) if s is not None else \
+                jax.device_put(arr)
+        if shardings is None:
+            return jax.tree.map(lambda x, t: place(x, t, None), tree,
+                                template)
+        return jax.tree.map(place, tree, template, shardings)

@@ -1,0 +1,231 @@
+"""InCRS — Indexed Compressed Row Storage (the paper's §III contribution).
+
+CRS augmented with one 64-bit *counter-vector* per (row, section):
+
+  bits [0, prefix_bits)                      : # non-zeros in this row BEFORE
+                                               this section ("first part")
+  bits [prefix_bits + k·count_bits, +count_bits): # non-zeros INSIDE block k
+                                               of this section, k = 0..n_blocks-1
+
+Paper defaults: section S=256 columns, block b=32 columns, prefix 16 bits,
+6 bits per block count → 16 + 8·6 = 64 bits exactly. Locating B[i][j] costs
+1 access (the counter-vector is a single word) + a scan limited to j's block
+(avg b/2) — §III-A: ``≈ b/2 + 1``.
+
+The 64-bit word is stored as two uint32 halves (JAX default disables x64);
+pack/unpack are exact bit operations on the conceptual 64-bit layout, so the
+storage accounting (1 word per section) is faithful.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from .crs import CRS, CTR_BASE, IDX_BASE, PTR_BASE, VAL_BASE
+
+S_DEFAULT = 256
+B_DEFAULT = 32
+PREFIX_BITS = 16
+COUNT_BITS = 6
+
+
+def _pack64(prefix: np.ndarray, blocks: np.ndarray,
+            prefix_bits: int = PREFIX_BITS, count_bits: int = COUNT_BITS
+            ) -> Tuple[np.ndarray, np.ndarray]:
+    """Pack (prefix, blocks[..., n_blocks]) into (lo32, hi32) uint32 words."""
+    word = prefix.astype(np.uint64)
+    nb = blocks.shape[-1]
+    assert prefix_bits + nb * count_bits <= 64, "counter-vector must fit a word"
+    for k in range(nb):
+        word = word | (blocks[..., k].astype(np.uint64)
+                       << np.uint64(prefix_bits + k * count_bits))
+    lo = (word & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    hi = (word >> np.uint64(32)).astype(np.uint32)
+    return lo, hi
+
+
+def _unpack64(lo: np.ndarray, hi: np.ndarray, n_blocks: int,
+              prefix_bits: int = PREFIX_BITS, count_bits: int = COUNT_BITS
+              ) -> Tuple[np.ndarray, np.ndarray]:
+    word = lo.astype(np.uint64) | (hi.astype(np.uint64) << np.uint64(32))
+    prefix = (word & np.uint64((1 << prefix_bits) - 1)).astype(np.int64)
+    blocks = np.stack(
+        [((word >> np.uint64(prefix_bits + k * count_bits))
+          & np.uint64((1 << count_bits) - 1)).astype(np.int64)
+         for k in range(n_blocks)], axis=-1)
+    return prefix, blocks
+
+
+@dataclasses.dataclass
+class InCRS:
+    """CRS + packed counter-vectors ``counters`` of shape (M, n_sections, 2)
+    (uint32 lo/hi halves of the 64-bit counter word)."""
+
+    crs: CRS
+    counters: np.ndarray          # (M, n_sections, 2) uint32
+    section: int = S_DEFAULT      # S
+    block: int = B_DEFAULT        # b
+
+    # ------------------------------------------------------------------
+    @property
+    def shape(self):
+        return self.crs.shape
+
+    @property
+    def n_sections(self) -> int:
+        return self.counters.shape[1]
+
+    @property
+    def n_blocks(self) -> int:
+        return self.section // self.block
+
+    def storage_words(self) -> int:
+        """InCRS storage = CRS words + one 64-bit word per (row, section)."""
+        m = self.shape[0]
+        return self.crs.storage_words() + m * self.n_sections
+
+    def storage_ratio(self) -> float:
+        """Paper Table II 'storage ratio' = CRS words / InCRS words
+        (≈ 2DS / (2DS + 1))."""
+        return self.crs.storage_words() / float(self.storage_words())
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def from_crs(crs: CRS, section: int = S_DEFAULT, block: int = B_DEFAULT,
+                 prefix_bits: int = PREFIX_BITS,
+                 count_bits: int = COUNT_BITS) -> "InCRS":
+        m, n = crs.shape
+        assert section % block == 0
+        n_blocks = section // block
+        assert block <= (1 << count_bits) - 1 or block == (1 << count_bits) - 1 \
+            or block < (1 << count_bits), "block count must fit count_bits"
+        n_sections = -(-n // section)
+        prefix = np.zeros((m, n_sections), dtype=np.int64)
+        blocks = np.zeros((m, n_sections, n_blocks), dtype=np.int64)
+        for i in range(m):
+            s, e = crs.row_ptr[i], crs.row_ptr[i + 1]
+            cols = crs.col_idx[s:e]
+            sec = cols // section
+            blk = (cols % section) // block
+            np.add.at(blocks, (i, sec, blk), 1)
+            # prefix[i, t] = NZs before section t in row i
+            per_sec = np.bincount(sec, minlength=n_sections)
+            prefix[i] = np.concatenate([[0], np.cumsum(per_sec)[:-1]])
+        if prefix.max(initial=0) >= (1 << prefix_bits):
+            raise ValueError("row has more NZs than prefix field can count "
+                             f"({prefix.max()} >= 2^{prefix_bits})")
+        lo, hi = _pack64(prefix, blocks, prefix_bits, count_bits)
+        return InCRS(crs, np.stack([lo, hi], axis=-1), section, block)
+
+    @staticmethod
+    def from_dense(dense: np.ndarray, section: int = S_DEFAULT,
+                   block: int = B_DEFAULT) -> "InCRS":
+        return InCRS.from_crs(CRS.from_dense(dense), section, block)
+
+    # ------------------------------------------------------------------
+    def counter(self, i: int, sec: int) -> Tuple[int, np.ndarray]:
+        lo, hi = self.counters[i, sec, 0], self.counters[i, sec, 1]
+        p, b = _unpack64(np.asarray(lo), np.asarray(hi), self.n_blocks)
+        return int(p), b
+
+    def locate(self, i: int, j: int,
+               trace: Optional[List[int]] = None) -> Tuple[float, int]:
+        """§III-A access path. Returns (value, memory_accesses).
+
+        1 access: counter-vector word.  1 access: row_ptr.  Then scan only
+        inside j's block (≤ block-count elements, avg b/2)."""
+        sec, off = j // self.section, j % self.section
+        blk = off // self.block
+        ma = 1  # the counter-vector (single word)
+        if trace is not None:
+            trace.append(CTR_BASE + (i * self.n_sections + sec))
+        prefix, blocks = self.counter(i, sec)
+        n_before = prefix + int(blocks[:blk].sum())
+        n_in_blk = int(blocks[blk])
+        ma += 1  # row_ptr[i]
+        if trace is not None:
+            trace.append(PTR_BASE + i)
+        base = int(self.crs.row_ptr[i]) + n_before
+        for k in range(base, base + n_in_blk):
+            ma += 1
+            if trace is not None:
+                trace.append(IDX_BASE + k)
+            c = int(self.crs.col_idx[k])
+            if c == j:
+                ma += 1
+                if trace is not None:
+                    trace.append(VAL_BASE + k)
+                return float(self.crs.values[k]), ma
+            if c > j:
+                break
+        return 0.0, ma
+
+    def locate_binary(self, i: int, j: int,
+                      trace: Optional[List[int]] = None
+                      ) -> Tuple[float, int]:
+        """Footnote-2 variant: binary search INSIDE the block instead of a
+        linear scan (the paper skipped it citing poor cache locality; we
+        implement both so benchmarks/table1 can measure the claim)."""
+        sec, off = j // self.section, j % self.section
+        blk = off // self.block
+        ma = 1
+        if trace is not None:
+            trace.append(CTR_BASE + (i * self.n_sections + sec))
+        prefix, blocks = self.counter(i, sec)
+        n_before = prefix + int(blocks[:blk].sum())
+        n_in_blk = int(blocks[blk])
+        ma += 1
+        if trace is not None:
+            trace.append(PTR_BASE + i)
+        lo = int(self.crs.row_ptr[i]) + n_before
+        hi = lo + n_in_blk
+        while lo < hi:
+            mid = (lo + hi) // 2
+            ma += 1
+            if trace is not None:
+                trace.append(IDX_BASE + mid)
+            c = int(self.crs.col_idx[mid])
+            if c == j:
+                ma += 1
+                if trace is not None:
+                    trace.append(VAL_BASE + mid)
+                return float(self.crs.values[mid]), ma
+            if c < j:
+                lo = mid + 1
+            else:
+                hi = mid
+        return 0.0, ma
+
+    def get_column(self, j: int,
+                   trace: Optional[List[int]] = None) -> Tuple[np.ndarray, int]:
+        m = self.shape[0]
+        col = np.zeros(m, dtype=self.crs.values.dtype)
+        ma = 0
+        for i in range(m):
+            col[i], a = self.locate(i, j, trace)
+            ma += a
+        return col, ma
+
+    def get_row(self, i: int, trace: Optional[List[int]] = None):
+        """Row-order access is identical to CRS (paper §V-B)."""
+        return self.crs.get_row(i, trace)
+
+
+# ----------------------------------------------------------------------
+# Analytical models (paper §III-C), used by benchmarks/table2.
+def expected_ma_incrs(block: int = B_DEFAULT) -> float:
+    """≈ b/2 + 1 accesses to locate a random element."""
+    return block / 2.0 + 1.0
+
+
+def expected_ma_reduction(n_cols: int, density: float,
+                          block: int = B_DEFAULT) -> float:
+    """Paper: MA reduces by a factor ≈ N·D / (b + 2)."""
+    return n_cols * density / (block + 2.0)
+
+
+def expected_storage_ratio(density: float, section: int = S_DEFAULT) -> float:
+    """Paper: CRS/InCRS storage ≈ 2DS / (2DS + 1)."""
+    return 2 * density * section / (2 * density * section + 1.0)

@@ -1,0 +1,2 @@
+from .datasets import (TABLE2_DATASETS, TABLE4_DATASETS, DatasetSpec,
+                       synthesize)  # noqa: F401

@@ -1,0 +1,218 @@
+"""Public kernel API: format preparation + jit'd wrappers.
+
+On CPU (this container) the kernels run in Pallas ``interpret`` mode; on a
+real TPU backend they compile to Mosaic. ``INTERPRET`` is resolved once from
+the backend.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.bsr import BSR
+from ..core.crs import CRS
+from ..core.incrs import InCRS
+from . import ref
+from .bsr_spmm import bsr_spmm as _bsr_spmm_kernel
+from .flash_attention import flash_attention as _flash_kernel
+from .dense_mm import dense_mm as _dense_mm_kernel
+from .incrs_gather import incrs_gather as _incrs_gather_kernel
+from .index_match_spmm import index_match_spmm as _index_match_kernel
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+# ----------------------------------------------------------------------
+def dense_mm(a, b, *, bm: int = 128, bn: int = 128, bk: int = 128,
+             interpret: bool | None = None):
+    """Tiled dense matmul; pads every dim up to its tile size."""
+    interpret = INTERPRET if interpret is None else interpret
+    m, k = a.shape
+    _, n = b.shape
+    mp, kp, np_ = -(-m // bm) * bm, -(-k // bk) * bk, -(-n // bn) * bn
+    a = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    b = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+    out = _dense_mm_kernel(a, b, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return out[:m, :n]
+
+
+# ----------------------------------------------------------------------
+def prep_bsr(bsr: BSR) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """BSR -> (row_of, col_of, values) flat arrays for the kernel.
+
+    Empty block-rows get one explicit zero tile so every output row is
+    written. ``row_of`` carries one sentinel repeat at the end (the kernel
+    reads row_of[t + 1] to detect row boundaries).
+    """
+    deg = np.diff(bsr.row_ptr)
+    row_of = np.repeat(np.arange(bsr.n_block_rows, dtype=np.int32),
+                       deg.astype(np.int64))
+    col_of = bsr.col_idx.astype(np.int32)
+    values = bsr.values
+    empty = np.nonzero(deg == 0)[0].astype(np.int32)
+    if empty.size:
+        row_of = np.concatenate([row_of, empty])
+        col_of = np.concatenate([col_of, np.zeros_like(empty)])
+        values = np.concatenate(
+            [values, np.zeros((empty.size,) + bsr.block, values.dtype)])
+        order = np.argsort(row_of, kind="stable")
+        row_of, col_of, values = row_of[order], col_of[order], values[order]
+    row_of = np.concatenate([row_of, row_of[-1:]])       # sentinel
+    return (jnp.asarray(row_of), jnp.asarray(col_of), jnp.asarray(values))
+
+
+def bsr_matmul(bsr: BSR, b, *, bn: int = 128, interpret: bool | None = None):
+    """C = BSR(A) @ B through the prefix-counter-steered Pallas kernel."""
+    interpret = INTERPRET if interpret is None else interpret
+    row_of, col_of, values = prep_bsr(bsr)
+    k, n = b.shape
+    assert k == bsr.shape[1], (bsr.shape, b.shape)
+    np_ = -(-n // bn) * bn
+    b = jnp.pad(b, ((0, 0), (0, np_ - n)))
+    out = _bsr_spmm_kernel(row_of, col_of, values, b,
+                           n_block_rows=bsr.n_block_rows, bn=bn,
+                           interpret=interpret)
+    return out[:, :n]
+
+
+def bsr_matmul_arrays(row_of, col_of, values, b, *, n_block_rows: int,
+                      bn: int = 128, interpret: bool | None = None):
+    """Same as ``bsr_matmul`` but from pre-prepared (traced) arrays —
+    the entry point used by ``sparse.SparseLinear`` inside jit."""
+    interpret = INTERPRET if interpret is None else interpret
+    return _bsr_spmm_kernel(row_of, col_of, values, b,
+                            n_block_rows=n_block_rows, bn=bn,
+                            interpret=interpret)
+
+
+# ----------------------------------------------------------------------
+def prep_rounds(crs: CRS, rounds: int, rmax: int | None = None,
+                pad_rows_to: int = 128
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """CRS -> padded per-round (idx, val); idx local in [0, R), -1 = pad.
+
+    Rows are padded up to a multiple of ``pad_rows_to``; at most R non-zeros
+    fit in one round window, so rmax <= R always holds.
+    """
+    m, n = crs.shape
+    n_rounds = max(1, -(-n // rounds))
+    counts = np.zeros((m, n_rounds), dtype=np.int64)
+    if crs.nnz:
+        row_of = np.repeat(np.arange(m), np.diff(crs.row_ptr).astype(np.int64))
+        np.add.at(counts, (row_of, crs.col_idx // rounds), 1)
+    rmax = int(counts.max(initial=1)) if rmax is None else rmax
+    rmax = max(1, min(rmax, rounds))
+    mp = -(-m // pad_rows_to) * pad_rows_to
+    idx = np.full((mp, n_rounds, rmax), -1, dtype=np.int32)
+    val = np.zeros((mp, n_rounds, rmax), dtype=np.float32)
+    for i in range(m):
+        s, e = crs.row_ptr[i], crs.row_ptr[i + 1]
+        cols = crs.col_idx[s:e]
+        r = cols // rounds
+        slot = np.zeros_like(cols)
+        # slot within round = running count per round
+        for rr in np.unique(r):
+            sel = r == rr
+            slot[sel] = np.arange(sel.sum())
+        idx[i, r, slot] = cols % rounds
+        val[i, r, slot] = crs.values[s:e]
+    return jnp.asarray(idx), jnp.asarray(val)
+
+
+def index_match_matmul(a: CRS, bt: CRS, *, rounds: int = 128,
+                       bm: int = 128, bn: int = 128,
+                       interpret: bool | None = None):
+    """C = A @ Bt.T via the round-synchronized index-matching kernel
+    (paper Alg. 2 on the MXU). Returns C[:M, :N] unpadded."""
+    interpret = INTERPRET if interpret is None else interpret
+    assert a.shape[1] == bt.shape[1]
+    ai, av = prep_rounds(a, rounds, pad_rows_to=bm)
+    bi, bv = prep_rounds(bt, rounds, pad_rows_to=bn)
+    rmax = max(ai.shape[2], bi.shape[2])
+    ai = jnp.pad(ai, ((0, 0), (0, 0), (0, rmax - ai.shape[2])),
+                 constant_values=-1)
+    av = jnp.pad(av, ((0, 0), (0, 0), (0, rmax - av.shape[2])))
+    bi = jnp.pad(bi, ((0, 0), (0, 0), (0, rmax - bi.shape[2])),
+                 constant_values=-1)
+    bv = jnp.pad(bv, ((0, 0), (0, 0), (0, rmax - bv.shape[2])))
+    out = _index_match_kernel(ai, av, bi, bv, rounds=rounds, bm=bm, bn=bn,
+                              interpret=interpret)
+    return out[:a.shape[0], :bt.shape[0]]
+
+
+# ----------------------------------------------------------------------
+def prep_sections(incrs: InCRS, pad_rows_to: int = 8
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """InCRS -> padded per-(row, section) (idx, val) using ONLY the packed
+    counter-vectors for location (the paper's access path): the prefix word
+    gives each section's start offset inside the row, the block counts give
+    its length. No row scan ever happens."""
+    m, n = incrs.shape
+    crs = incrs.crs
+    n_sections = incrs.n_sections
+    smax = 1
+    spans = np.zeros((m, n_sections, 2), dtype=np.int64)
+    for i in range(m):
+        base = int(crs.row_ptr[i])
+        for s in range(n_sections):
+            prefix, blocks = incrs.counter(i, s)
+            cnt = int(blocks.sum())
+            spans[i, s] = (base + prefix, cnt)
+            smax = max(smax, cnt)
+    mp = -(-m // pad_rows_to) * pad_rows_to
+    idx = np.full((mp, n_sections, smax), -1, dtype=np.int32)
+    val = np.zeros((mp, n_sections, smax), dtype=np.float32)
+    for i in range(m):
+        for s in range(n_sections):
+            start, cnt = spans[i, s]
+            if cnt:
+                cols = crs.col_idx[start:start + cnt]
+                idx[i, s, :cnt] = cols - s * incrs.section
+                val[i, s, :cnt] = crs.values[start:start + cnt]
+    return jnp.asarray(idx), jnp.asarray(val)
+
+
+def incrs_to_dense(incrs: InCRS, *, bm: int = 8,
+                   interpret: bool | None = None):
+    """Densify an InCRS matrix on-device via the gather kernel."""
+    interpret = INTERPRET if interpret is None else interpret
+    idx, val = prep_sections(incrs, pad_rows_to=bm)
+    out = _incrs_gather_kernel(idx, val, section=incrs.section, bm=bm,
+                               interpret=interpret)
+    return out[:incrs.shape[0], :incrs.shape[1]]
+
+
+# ----------------------------------------------------------------------
+def flash_mha(q, k, v, *, window=None, soft_cap=None, bq: int = 128,
+              bk: int = 128, interpret: bool | None = None):
+    """Grouped-query flash attention through the Pallas kernel.
+
+    q: (B, Sq, KV, G, hd); k/v: (B, Sk, KV, hd). Causal over absolute
+    positions 0..S-1 (prefill/train layout). Returns (B, Sq, KV, G, hd).
+    """
+    interpret = INTERPRET if interpret is None else interpret
+    b, sq, kv, g, hd = q.shape
+    _, sk, _, _ = k.shape
+    sqp = -(-sq // bq) * bq
+    skp = -(-sk // bk) * bk
+    qf = jnp.pad(q, ((0, 0), (0, sqp - sq), (0, 0), (0, 0), (0, 0)))
+    kf = jnp.pad(k, ((0, 0), (0, skp - sk), (0, 0), (0, 0)))
+    vf = jnp.pad(v, ((0, 0), (0, skp - sk), (0, 0), (0, 0)))
+    # (L=B*KV*G, S, hd) lanes; k lanes (B*KV, S, hd)
+    ql = qf.transpose(0, 2, 3, 1, 4).reshape(b * kv * g, sqp, hd)
+    kl = kf.transpose(0, 2, 1, 3).reshape(b * kv, skp, hd)
+    vl = vf.transpose(0, 2, 1, 3).reshape(b * kv, skp, hd)
+    out = _flash_kernel(ql, kl, vl, g=g, window=window, soft_cap=soft_cap,
+                        bq=bq, bk=bk, interpret=interpret)
+    out = out.reshape(b, kv, g, sqp, hd).transpose(0, 3, 1, 2, 4)
+    return out[:, :sq]
+
+
+__all__ = [
+    "INTERPRET", "dense_mm", "prep_bsr", "bsr_matmul", "bsr_matmul_arrays",
+    "prep_rounds", "index_match_matmul", "prep_sections", "incrs_to_dense",
+    "flash_mha", "ref",
+]

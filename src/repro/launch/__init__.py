@@ -1,0 +1,2 @@
+# NOTE: keep this module import-free (no jax): launch/dryrun.py must set
+# XLA_FLAGS before jax is first imported.

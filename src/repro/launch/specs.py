@@ -1,0 +1,139 @@
+"""Abstract input/step specs for the dry-run: ShapeDtypeStruct stand-ins
+for every model input, parameter tree, optimizer state and decode cache —
+weak-type-correct, shardable, never allocating a device buffer.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.shapes import ShapeSpec
+from ..models import model as M
+from ..models import sharding as sh
+from ..models.config import ModelConfig
+from ..train.optimizer import AdamWConfig, adamw_init, opt_state_axes
+from ..train.trainer import make_step_fn
+from ..train.zero import zero1_axes
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Training-batch stand-ins: {tokens, labels [, prefix_embeds]}."""
+    b, s = shape.global_batch, shape.seq_len
+    out = {"tokens": SDS((b, s), jnp.int32),
+           "labels": SDS((b, s), jnp.int32)}
+    if cfg.input_mode == "embeds":
+        out["prefix_embeds"] = SDS((b, cfg.n_prefix_embeds, cfg.d_model),
+                                   jnp.dtype(cfg.dtype))
+    return out
+
+
+def params_specs(cfg: ModelConfig, *, dtype: Optional[str] = None):
+    """(params_SDS, axes). ``dtype`` overrides param dtype (serving casts
+    to bf16)."""
+    import dataclasses
+    if dtype is not None:
+        cfg = dataclasses.replace(cfg, param_dtype=dtype)
+    params = jax.eval_shape(lambda k: M.init(cfg, k)[0],
+                            jax.random.PRNGKey(0))
+    return params, M.init_axes(cfg)
+
+
+def opt_specs(opt_cfg: AdamWConfig, params_sds):
+    return jax.eval_shape(lambda p: adamw_init(opt_cfg, p), params_sds)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, alloc_seq: int,
+                dtype=jnp.bfloat16):
+    cache = jax.eval_shape(
+        lambda: M.init_cache(cfg, batch, alloc_seq, dtype)[0])
+    return cache, M.init_cache_axes(cfg)
+
+
+# ----------------------------------------------------------------------
+def train_cell(cfg: ModelConfig, shape: ShapeSpec, opt_cfg: AdamWConfig, *,
+               n_micro: int, zero1: bool = True):
+    """Returns (fn, abstract_args, in_shardings, out_shardings, donate)."""
+    params_sds, axes = params_specs(cfg)
+    opt_sds = opt_specs(opt_cfg, params_sds)
+    batch_sds = batch_specs(cfg, shape)
+    pshard = sh.sharding_tree(axes, params_sds)
+    oaxes = opt_state_axes(opt_cfg, axes)
+    if zero1 and not opt_cfg.quantize:
+        oaxes = {"m": zero1_axes(oaxes["m"]),
+                 "v": zero1_axes(oaxes["v"]), "count": ()}
+    oshard = sh.sharding_tree(oaxes, opt_sds)
+    bshard = jax.tree.map(
+        lambda x: sh.named_sharding(
+            ("batch",) + (None,) * (x.ndim - 1), x.shape), batch_sds)
+    mshard = {"loss": sh.named_sharding(()),
+              "grad_norm": sh.named_sharding(()), "lr": sh.named_sharding(())}
+    fn = make_step_fn(cfg, opt_cfg, n_micro=n_micro, remat=True)
+    return (fn, (params_sds, opt_sds, batch_sds),
+            (pshard, oshard, bshard), (pshard, oshard, mshard), (0, 1))
+
+
+def prefill_cell(cfg: ModelConfig, shape: ShapeSpec):
+    """Prefill serve_step: full prompt -> (last logits, cache)."""
+    b, s = shape.global_batch, shape.seq_len
+    params_sds, axes = params_specs(cfg, dtype=cfg.dtype)
+    pshard = sh.sharding_tree(axes, params_sds)
+    tok_sds = SDS((b, s), jnp.int32)
+    pfx_sds = None
+    if cfg.input_mode == "embeds":
+        pfx_sds = SDS((b, cfg.n_prefix_embeds, cfg.d_model),
+                      jnp.dtype(cfg.dtype))
+
+    def fn(params, tokens, prefix_embeds=None):
+        return M.prefill_step(cfg, params, tokens,
+                              prefix_embeds=prefix_embeds, alloc_seq=s)
+    cache_sds, cache_axes = cache_specs(cfg, b, s)
+    cshard = sh.sharding_tree(cache_axes, cache_sds)
+    tshard = sh.named_sharding(("batch", None), tok_sds.shape)
+    lshard = sh.named_sharding(("batch", "vocab"),
+                               (b, cfg.padded_vocab()))
+    args = (params_sds, tok_sds) + ((pfx_sds,) if pfx_sds else ())
+    inshard = (pshard, tshard) + (
+        (sh.named_sharding(("batch", None, None), pfx_sds.shape),)
+        if pfx_sds else ())
+    return fn, args, inshard, (lshard, cshard), ()
+
+
+def decode_cell(cfg: ModelConfig, shape: ShapeSpec, *,
+                cache_dtype=jnp.bfloat16):
+    """Decode serve_step: one token against a seq_len-deep cache."""
+    b, s = shape.global_batch, shape.seq_len
+    params_sds, axes = params_specs(cfg, dtype=cfg.dtype)
+    pshard = sh.sharding_tree(axes, params_sds)
+    cache_sds, cache_axes = cache_specs(cfg, b, s, cache_dtype)
+    cshard = sh.sharding_tree(cache_axes, cache_sds)
+    tok_sds = SDS((b, 1), jnp.int32)
+    pos_sds = SDS((), jnp.int32)
+
+    def fn(params, token, cache, pos):
+        return M.decode_step(cfg, params, token, cache, pos=pos)
+    lshard = sh.named_sharding(("batch", "vocab"),
+                               (b, cfg.padded_vocab()))
+    return (fn, (params_sds, tok_sds, cache_sds, pos_sds),
+            (pshard, sh.named_sharding(("batch", None), tok_sds.shape),
+             cshard, sh.named_sharding(())),
+            (lshard, cshard), (2,))       # donate the cache
+
+
+# ----------------------------------------------------------------------
+def default_n_micro(cfg: ModelConfig) -> int:
+    """Microbatch count for train_4k, sized so per-chip activations stay
+    inside the v5e 16 GB budget: 256-batch over data=16 leaves 16
+    sequences per chip; 2 sequences per microbatch bounds the attention
+    score tensors (worst case, heads unshardable: 2 x 24 x 4k x 4k bf16
+    = 1.6 GB transient). The 405B config additionally halves it."""
+    return 16 if cfg.param_count() > 300e9 else 8
+
+
+def default_opt(cfg: ModelConfig) -> AdamWConfig:
+    """int8 moments for the >=100B configs (HBM), f32 otherwise."""
+    return AdamWConfig(quantize=cfg.param_count() > 100e9)

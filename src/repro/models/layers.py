@@ -1,0 +1,661 @@
+"""Layer library for the unified LM zoo (pure functional JAX).
+
+Every assigned architecture is assembled from these blocks:
+  * GQA attention (RoPE, optional sliding window / local window, soft cap)
+  * SwiGLU / GELU MLPs — optionally BLOCK-SPARSE via the paper's BSR path
+  * MoE FFN with top-k routing; the dispatch metadata is prefix-counter
+    based (cumsum of per-expert assignment = the InCRS counter idea)
+  * Mamba2 SSD mixer (chunked state-space duality)
+  * RG-LRU mixer (RecurrentGemma's gated linear recurrence)
+
+Each mixer supports three modes:
+  train   — full sequence, no cache
+  prefill — full sequence, builds the decode cache
+  decode  — single new token against the cache
+
+Parameters are plain nested dicts; a parallel tree of LOGICAL AXIS tuples is
+built alongside (see ``sharding.py``) so pjit shardings derive mechanically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .sharding import rule_active, shard
+
+Params = Dict[str, Any]
+
+# ----------------------------------------------------------------------
+# Loop unrolling for the dry-run roofline pass: XLA's HloCostAnalysis
+# counts a while-loop body ONCE regardless of trip count, so the roofline
+# extraction lowers with python-unrolled loops (layer groups, flash-attn
+# key chunks, SSD chunks) and extrapolates linearly in depth. Runtime code
+# always uses lax.scan (compact HLO).
+import contextlib as _contextlib
+
+_UNROLL_SCANS = False
+
+
+@_contextlib.contextmanager
+def unroll_scans():
+    global _UNROLL_SCANS
+    prev = _UNROLL_SCANS
+    _UNROLL_SCANS = True
+    try:
+        yield
+    finally:
+        _UNROLL_SCANS = prev
+
+
+def scans_unrolled() -> bool:
+    return _UNROLL_SCANS
+
+
+def _scan(body, init, xs, length=None):
+    """lax.scan, or a python loop under ``unroll_scans()``."""
+    if not _UNROLL_SCANS:
+        return jax.lax.scan(body, init, xs, length=length)
+    n = length if xs is None else jax.tree.leaves(xs)[0].shape[0]
+    carry = init
+    ys = []
+    for i in range(n):
+        x = None if xs is None else jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+# ======================================================================
+# Param builder: params + logical axes created together.
+@dataclasses.dataclass
+class Builder:
+    key: jax.Array
+    param_dtype: Any = jnp.float32
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    axes: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def _next(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def add(self, name: str, shape, logical: Tuple[Optional[str], ...],
+            scale: float = 0.02, init: str = "normal"):
+        assert len(shape) == len(logical), (name, shape, logical)
+        if init == "normal":
+            v = jax.random.normal(self._next(), shape, self.param_dtype) * scale
+        elif init == "zeros":
+            v = jnp.zeros(shape, self.param_dtype)
+        elif init == "ones":
+            v = jnp.ones(shape, self.param_dtype)
+        else:
+            raise ValueError(init)
+        self.params[name] = v
+        self.axes[name] = logical
+        return v
+
+    def sub(self, name: str) -> "Builder":
+        b = Builder(self._next(), self.param_dtype)
+        self.params[name] = b.params
+        self.axes[name] = b.axes
+        return b
+
+
+# ======================================================================
+def rms_norm(x, w, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def _rope(x, pos, theta: float):
+    """Rotary embedding; x: (..., S, H, hd), pos: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # (..., S, 1, half): broadcast over heads
+    ang = pos[..., :, None, None].astype(jnp.float32) * freq
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ======================================================================
+# Flash-style chunked attention: lax.scan over key blocks with an online
+# softmax, so the (S x S) score matrix never materializes. Mandatory for
+# the 32k/500k shapes; numerically identical to the reference path
+# (tests/test_models.py asserts allclose).
+FLASH_THRESHOLD = 8192      # use chunked path when kv length >= this
+FLASH_CHUNK = 1024
+
+
+def _flash_attention(q, k, v, qpos, kpos, *, window, soft_cap,
+                     chunk: int = FLASH_CHUNK):
+    """Grouped-query flash attention. q: (B,Sq,KV,G,hd); k/v: (B,Sk,KV,hd)
+    — KV heads are NEVER repeated/materialized (G query heads share each
+    KV head through the einsum contraction). qpos (B,Sq), kpos (B,Sk)
+    absolute positions (negative = invalid). Returns (B,Sq,KV,G,hd)."""
+    bsz, sq, kvh, g, hd = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / np.sqrt(hd)
+    nchunks = -(-sk // chunk)
+    skp = nchunks * chunk
+    k = jnp.pad(k, ((0, 0), (0, skp - sk), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, skp - sk), (0, 0), (0, 0)))
+    kpos = jnp.pad(kpos, ((0, 0), (0, skp - sk)), constant_values=-1)
+    kc = k.reshape(bsz, nchunks, chunk, kvh, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(bsz, nchunks, chunk, kvh, hd).transpose(1, 0, 2, 3, 4)
+    pc = kpos.reshape(bsz, nchunks, chunk).transpose(1, 0, 2)
+    qf = q.astype(jnp.float32)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kb, vb, pb = inp
+        logits = jnp.einsum("bqkgd,bskd->bkgqs", qf,
+                            kb.astype(jnp.float32)) * scale
+        if soft_cap:
+            logits = soft_cap * jnp.tanh(logits / soft_cap)
+        valid = (pb[:, None, None, None, :] <=
+                 qpos[:, None, None, :, None]) & \
+                (pb[:, None, None, None, :] >= 0)
+        if window is not None:
+            valid &= pb[:, None, None, None, :] > \
+                qpos[:, None, None, :, None] - window
+        logits = jnp.where(valid, logits, -1e30)
+        mb = jnp.max(logits, axis=-1)                     # (B,KV,G,Sq)
+        m_new = jnp.maximum(m, mb)
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        p = jnp.where(valid, p, 0.0)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((bsz, kvh, g, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((bsz, kvh, g, sq), jnp.float32)
+    a0 = jnp.zeros((bsz, kvh, g, sq, hd), jnp.float32)
+    (m, l, acc), _ = _scan(body, (m0, l0, a0), (kc, vc, pc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)
+
+
+# ======================================================================
+# Attention (GQA; full-causal, sliding-window, or local-window).
+def init_attention(b: Builder, cfg: ModelConfig):
+    d, hd = cfg.d_model, cfg.head_dim
+    q, kv = cfg.n_heads * hd, cfg.n_kv_heads * hd
+    b.add("wq", (d, q), ("embed", "qkv_flat"))
+    b.add("wk", (d, kv), ("embed", "qkv_flat"))
+    b.add("wv", (d, kv), ("embed", "qkv_flat"))
+    b.add("wo", (q, d), ("qkv_flat", "embed"))
+
+
+def attention(p: Params, cfg: ModelConfig, x, pos, *, window: Optional[int],
+              mode: str, cache: Optional[Dict] = None):
+    """x: (B, S, d); pos: (B, S) absolute positions.
+
+    cache (prefill-out / decode-in&out): {"k","v": (B, Scache, KV, hd),
+    "end": ()} with Scache fixed = allocated window.
+    """
+    bsz, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = x.dtype
+    q = shard(jnp.einsum("bsd,df->bsf", x, p["wq"].astype(dt)),
+              ("batch", None, "qkv_flat"))
+    k = shard(jnp.einsum("bsd,df->bsf", x, p["wk"].astype(dt)),
+              ("batch", None, "qkv_flat"))
+    v = shard(jnp.einsum("bsd,df->bsf", x, p["wv"].astype(dt)),
+              ("batch", None, "qkv_flat"))
+    q = q.reshape(bsz, s, h, hd)
+    k = k.reshape(bsz, s, kv, hd)
+    v = v.reshape(bsz, s, kv, hd)
+    q = _rope(q, pos, cfg.rope_theta)
+    k = _rope(k, pos, cfg.rope_theta)
+
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None and s == 1
+        end = cache["end"]                       # tokens already in cache
+        s_alloc = cache["k"].shape[1]
+        # ring-buffer write position (windowed caches wrap around)
+        wpos = jnp.mod(end, s_alloc)
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, wpos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, wpos, 0, 0))
+        new_cache = {"k": ck, "v": cv, "end": end + 1}
+        k_all = ck.astype(dt)
+        v_all = cv.astype(dt)
+        # absolute position of each cache slot (ring semantics)
+        slot = jnp.arange(s_alloc)
+        n_wrap = (end + 1 + s_alloc - 1) // s_alloc
+        abs_pos = jnp.where(slot <= wpos, slot + (end - wpos),
+                            slot + (end - wpos) - s_alloc)
+        valid = (abs_pos >= 0) & (abs_pos <= end)
+        if window is not None:
+            valid &= abs_pos > end - window
+        mask = valid[None, :]                    # (1, Scache), bcast below
+        qg = q.reshape(bsz, s, kv, h // kv, hd)
+        logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_all) / np.sqrt(hd)
+        if cfg.logits_soft_cap:
+            c = cfg.logits_soft_cap
+            logits = c * jnp.tanh(logits / c)
+        logits = jnp.where(mask[:, None, None, None, :], logits, -1e30)
+        att = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(dt)
+        y = jnp.einsum("bkgqs,bskd->bqkgd", att, v_all)
+        y = y.reshape(bsz, s, h, hd)
+    else:
+        if mode == "prefill":
+            if cache is not None:
+                # write the last min(S, alloc) keys into the ring buffer
+                alloc = cache["k"].shape[1]
+                ln = min(s, alloc)
+                slots = jnp.asarray(
+                    np.arange(s - ln, s) % alloc, dtype=jnp.int32)
+                ck = cache["k"].at[:, slots].set(
+                    k[:, -ln:].astype(cache["k"].dtype))
+                cv = cache["v"].at[:, slots].set(
+                    v[:, -ln:].astype(cache["v"].dtype))
+                new_cache = {"k": ck, "v": cv,
+                             "end": jnp.asarray(s, jnp.int32)}
+            else:
+                new_cache = {"k": k.astype(dt), "v": v.astype(dt),
+                             "end": jnp.asarray(s, jnp.int32)}
+        qg = q.reshape(bsz, s, kv, h // kv, hd)
+        # sequence-parallel attention (hillclimb lever): when the rule
+        # table maps attn_q_seq -> model, the query sequence is sharded so
+        # attention compute scales with the mesh even for head counts the
+        # model axis cannot divide (14/24/40-head configs). Applied ONLY
+        # when the rule is active: an unconditional all-None constraint
+        # measurably disturbs GSPMD's own propagation (see EXPERIMENTS §5).
+        if rule_active("attn_q_seq"):
+            qg = shard(qg, ("batch", "attn_q_seq", None, None, None))
+        if s >= FLASH_THRESHOLD:
+            # chunked online-softmax path: no (S x S) materialization
+            yg = _flash_attention(qg, k, v, pos, pos, window=window,
+                                  soft_cap=cfg.logits_soft_cap,
+                                  chunk=cfg.flash_chunk)
+        else:
+            logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k) / np.sqrt(hd)
+            if cfg.logits_soft_cap:
+                c = cfg.logits_soft_cap
+                logits = c * jnp.tanh(logits / c)
+            qp, kp = pos[:, :, None], pos[:, None, :]
+            mask = kp <= qp                          # causal
+            if window is not None:
+                mask &= kp > qp - window
+            logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+            att = jax.nn.softmax(logits.astype(jnp.float32),
+                                 axis=-1).astype(dt)
+            yg = jnp.einsum("bkgqs,bskd->bqkgd", att, v)
+        y = yg.reshape(bsz, s, h, hd)
+
+    y = y.reshape(bsz, s, h * hd)
+    wo = shard(p["wo"].astype(dt), ("qkv_flat", None))
+    out = jnp.einsum("bsf,fd->bsd", y, wo)
+    return shard(out, ("batch", "seq", "embed")), new_cache
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, alloc: int,
+                    dtype=jnp.bfloat16):
+    kvshape = (batch, alloc, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(kvshape, dtype), "v": jnp.zeros(kvshape, dtype),
+            "end": jnp.asarray(0, jnp.int32)}
+
+
+# ======================================================================
+# Dense MLP (SwiGLU / GELU), optionally block-sparse (the paper's feature).
+def init_mlp(b: Builder, cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp_type == "swiglu":
+        b.add("w_gate", (d, f), ("embed", "mlp"))
+        b.add("w_up", (d, f), ("embed", "mlp"))
+        b.add("w_down", (f, d), ("mlp", "embed"))
+    else:
+        b.add("w_up", (d, f), ("embed", "mlp"))
+        b.add("w_down", (f, d), ("mlp", "embed"))
+    if cfg.sparsity is not None:
+        # Block-occupancy masks (InCRS-at-block-scale metadata); pruned at
+        # init, kept fixed. Stored as float so the tree is uniform.
+        blk = cfg.sparsity.block
+        for nm, shape in (("w_gate", (d, f)), ("w_up", (d, f)),
+                          ("w_down", (f, d))):
+            if nm in b.params:
+                b.add(f"mask_{nm}", (shape[0] // blk, shape[1] // blk),
+                      (None, None), init="ones")
+
+
+def _maybe_sparse_mm(x, w, mask, block: int):
+    """x @ (w ⊙ blockmask). Under pjit the mask-dense form is used (it
+    shards like a dense matmul); single-device callers can use the BSR
+    Pallas kernel via sparse.ops instead — same math, tested equal."""
+    if mask is None:
+        return jnp.einsum("bsd,df->bsf", x, w)
+    d, f = w.shape
+    # masks are fixed pruning metadata, not trainable parameters
+    mask = jax.lax.stop_gradient(mask)
+    mfull = jnp.repeat(jnp.repeat(mask.astype(w.dtype), block, 0), block, 1)
+    return jnp.einsum("bsd,df->bsf", x, w * mfull)
+
+
+def mlp(p: Params, cfg: ModelConfig, x):
+    dt = x.dtype
+    blk = cfg.sparsity.block if cfg.sparsity else 0
+    gmask = p.get("mask_w_gate")
+    umask = p.get("mask_w_up")
+    dmask = p.get("mask_w_down")
+    if cfg.mlp_type == "swiglu":
+        wg = shard(p["w_gate"].astype(dt), (None, "mlp"))
+        wu = shard(p["w_up"].astype(dt), (None, "mlp"))
+        g = _maybe_sparse_mm(x, wg, gmask, blk)
+        u = _maybe_sparse_mm(x, wu, umask, blk)
+        hdn = shard(jax.nn.silu(g) * u, ("batch", None, "mlp"))
+    else:
+        wu = shard(p["w_up"].astype(dt), (None, "mlp"))
+        u = _maybe_sparse_mm(x, wu, umask, blk)
+        hdn = shard(jax.nn.gelu(u), ("batch", None, "mlp"))
+    wd = shard(p["w_down"].astype(dt), ("mlp", None))
+    out = _maybe_sparse_mm(hdn, wd, dmask, blk)
+    return shard(out, ("batch", "seq", "embed"))
+
+
+# ======================================================================
+# MoE FFN. Routing metadata is prefix-counter style: per-(seq, expert)
+# assignment priorities -> capacity-limited gather, exactly "how many
+# useful items precede me" (the InCRS counter question) at token scale.
+def init_moe(b: Builder, cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    b.add("router", (d, e), ("embed", "experts"))
+    b.add("w_gate", (e, d, f), ("experts", "embed", "expert_mlp"))
+    b.add("w_up", (e, d, f), ("experts", "embed", "expert_mlp"))
+    b.add("w_down", (e, f, d), ("experts", "expert_mlp", "embed"))
+    if cfg.n_shared_experts:
+        fs = cfg.n_shared_experts * cfg.moe_d_ff
+        b.add("ws_gate", (d, fs), ("embed", "mlp"))
+        b.add("ws_up", (d, fs), ("embed", "mlp"))
+        b.add("ws_down", (fs, d), ("mlp", "embed"))
+
+
+def moe(p: Params, cfg: ModelConfig, x, *, mode: str):
+    """Top-k routed FFN. Train/prefill: capacity-based gather dispatch per
+    sequence. Decode (S=1): dense all-experts (cheap at one token)."""
+    bsz, s, d = x.shape
+    e, k, f = cfg.n_experts, cfg.n_experts_per_tok, cfg.moe_d_ff
+    dt = x.dtype
+    logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(dt))
+    logits = logits.astype(jnp.float32)
+    topw, topi = jax.lax.top_k(logits, k)                  # (B,S,k)
+    topw = jax.nn.softmax(topw, axis=-1)
+
+    if mode == "decode" or s <= k:
+        # All-experts dense path: einsum over E (S is 1).
+        g = jnp.einsum("bsd,edf->bsef", x, p["w_gate"].astype(dt))
+        u = jnp.einsum("bsd,edf->bsef", x, p["w_up"].astype(dt))
+        y = jnp.einsum("bsef,efd->bsed", jax.nn.silu(g) * u,
+                       p["w_down"].astype(dt))
+        onehot = jax.nn.one_hot(topi, e, dtype=jnp.float32)  # (B,S,k,E)
+        weights = jnp.einsum("bske,bsk->bse", onehot, topw)
+        out = jnp.einsum("bsed,bse->bsd", y.astype(jnp.float32), weights)
+        out = out.astype(dt)
+    else:
+        cap = max(1, int(np.ceil(s * k * cfg.capacity_factor / e)))
+        cap = min(cap, s)
+        # mask[b,s,e]: does token s route to expert e; weight likewise
+        onehot = jax.nn.one_hot(topi, e, dtype=jnp.float32)  # (B,S,k,E)
+        mask = onehot.sum(2)                                 # (B,S,E)
+        wse = jnp.einsum("bske,bsk->bse", onehot, topw)
+        # priority: assigned tokens first, in seq order (prefix-counter
+        # semantics: rank within expert = #assigned before me)
+        iota = jnp.arange(s)[None, :, None]
+        prio = jnp.where(mask > 0, iota, s + iota)           # (B,S,E)
+        neg, idx = jax.lax.top_k(-prio.transpose(0, 2, 1), cap)  # (B,E,C)
+        valid = (-neg) < s
+        xg = jnp.take_along_axis(
+            x[:, None, :, :].astype(dt),
+            idx[..., None].clip(0, s - 1), axis=2)           # (B,E,C,d)
+        weg = shard(p["w_gate"].astype(dt), ("experts", None, "expert_mlp"))
+        weu = shard(p["w_up"].astype(dt), ("experts", None, "expert_mlp"))
+        g = jnp.einsum("becd,edf->becf", xg, weg)
+        u = jnp.einsum("becd,edf->becf", xg, weu)
+        hdn = shard(jax.nn.silu(g) * u, ("batch", None, None, "expert_mlp"))
+        wed = shard(p["w_down"].astype(dt), ("experts", "expert_mlp", None))
+        y = jnp.einsum("becf,efd->becd", hdn, wed)
+        wg = jnp.take_along_axis(wse.transpose(0, 2, 1), idx, axis=2)
+        y = y * (wg * valid)[..., None].astype(dt)
+        out = jnp.zeros((bsz, s, d), jnp.float32)
+        bidx = jnp.arange(bsz)[:, None, None]
+        out = out.at[bidx, idx].add(y.astype(jnp.float32))
+        out = out.astype(dt)
+
+    if cfg.n_shared_experts:
+        gs = jnp.einsum("bsd,df->bsf", x, p["ws_gate"].astype(dt))
+        us = jnp.einsum("bsd,df->bsf", x, p["ws_up"].astype(dt))
+        out = out + jnp.einsum("bsf,fd->bsd", jax.nn.silu(gs) * us,
+                               p["ws_down"].astype(dt))
+    # aux load-balancing loss ingredients could be returned; kept simple
+    return shard(out, ("batch", "seq", "embed"))
+
+
+# ======================================================================
+# Mamba2 SSD (chunked state-space duality).
+def init_ssd(b: Builder, cfg: ModelConfig):
+    d, inner, n = cfg.d_model, cfg.ssm_inner, cfg.ssm_state
+    nh = cfg.ssm_heads
+    b.add("w_x", (d, inner), ("embed", "ssm_inner"))
+    b.add("w_z", (d, inner), ("embed", "ssm_inner"))
+    b.add("w_bc", (d, 2 * n), ("embed", None))
+    b.add("w_dt", (d, nh), ("embed", None))
+    b.add("dt_bias", (nh,), (None,), init="zeros")
+    b.add("a_log", (nh,), (None,), init="zeros")
+    b.add("d_skip", (nh,), (None,), init="ones")
+    b.add("conv_w", (cfg.conv_width, inner + 2 * n), ("conv_width", None))
+    b.add("w_out", (inner, d), ("ssm_inner", "embed"))
+
+
+def _causal_conv(x, w, cache=None):
+    """Depthwise causal conv. x: (B,S,C), w: (W,C).
+    cache: (B, W-1, C) left context; returns (y, new_cache)."""
+    wlen = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], wlen - 1, x.shape[2]), x.dtype)
+    else:
+        pad = cache.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    new_cache = xp[:, -(wlen - 1):, :] if wlen > 1 else pad[:, :0]
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(wlen))
+    return y, new_cache
+
+
+def ssd(p: Params, cfg: ModelConfig, x, *, mode: str,
+        cache: Optional[Dict] = None):
+    """Mamba2 SSD mixer. cache = {"conv": (B,W-1,C), "state": (B,H,P,N),
+    "end": ()}."""
+    bsz, s, d = x.shape
+    inner, n, nh = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads
+    hp = cfg.ssm_head_dim
+    dt_ = x.dtype
+    z = jnp.einsum("bsd,di->bsi", x, p["w_z"].astype(dt_))
+    xin = jnp.einsum("bsd,di->bsi", x, p["w_x"].astype(dt_))
+    bc = jnp.einsum("bsd,dn->bsn", x, p["w_bc"].astype(dt_))
+    conv_in = shard(jnp.concatenate([xin, bc], axis=-1),
+                    ("batch", None, "ssm_inner"))
+    conv_cache = cache["conv"] if cache is not None else None
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"].astype(dt_),
+                                      conv_cache)
+    conv_out = jax.nn.silu(conv_out)
+    xs = conv_out[..., :inner].reshape(bsz, s, nh, hp)
+    bmat = conv_out[..., inner:inner + n]                      # (B,S,N)
+    cmat = conv_out[..., inner + n:]                           # (B,S,N)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["w_dt"].astype(dt_))
+        .astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))               # (H,) negative
+    adt = dt * a                                               # (B,S,H) <=0
+
+    if mode == "decode":
+        assert cache is not None and s == 1
+        st = cache["state"].astype(jnp.float32)                # (B,H,P,N)
+        dt1, adt1 = dt[:, 0], adt[:, 0]                        # (B,H)
+        xb = jnp.einsum("bhp,bn->bhpn", xs[:, 0].astype(jnp.float32),
+                        bmat[:, 0].astype(jnp.float32))
+        st = jnp.exp(adt1)[..., None, None] * st + dt1[..., None, None] * xb
+        y = jnp.einsum("bhpn,bn->bhp", st, cmat[:, 0].astype(jnp.float32))
+        y = y + p["d_skip"].astype(jnp.float32)[None, :, None] * \
+            xs[:, 0].astype(jnp.float32)
+        y = y.reshape(bsz, 1, inner).astype(dt_)
+        new_cache = {"conv": new_conv, "state": st.astype(cache["state"].dtype),
+                     "end": cache["end"] + 1}
+    else:
+        q = min(cfg.ssm_chunk, s)
+        # pad sequence to a chunk multiple; padded steps are identity
+        # (decay 1, zero input) so the final prefill state stays exact.
+        sp = -(-s // q) * q
+        if sp != s:
+            pad = ((0, 0), (0, sp - s)) + ((0, 0),) * 0
+            xs = jnp.pad(xs, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+            bmat = jnp.pad(bmat, ((0, 0), (0, sp - s), (0, 0)))
+            cmat = jnp.pad(cmat, ((0, 0), (0, sp - s), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, sp - s), (0, 0)))
+            adt = jnp.pad(adt, ((0, 0), (0, sp - s), (0, 0)))
+        nc = sp // q
+        xs_c = xs.reshape(bsz, nc, q, nh, hp).astype(jnp.float32)
+        b_c = bmat.reshape(bsz, nc, q, n).astype(jnp.float32)
+        c_c = cmat.reshape(bsz, nc, q, n).astype(jnp.float32)
+        dt_c = dt.reshape(bsz, nc, q, nh)
+        adt_c = adt.reshape(bsz, nc, q, nh)
+        cum = jnp.cumsum(adt_c, axis=2)                        # (B,C,Q,H)
+        # intra-chunk: L[i,j] = exp(cum_i - cum_j) for i >= j (else 0)
+        li = cum[:, :, :, None, :] - cum[:, :, None, :, :]     # (B,C,Q,Q,H)
+        tri = jnp.tril(jnp.ones((q, q), bool))
+        lmat = jnp.where(tri[None, None, :, :, None], jnp.exp(li), 0.0)
+        cb = jnp.einsum("bcqn,bckn->bcqk", c_c, b_c)           # (B,C,Q,Q)
+        y_intra = jnp.einsum("bcqk,bcqkh,bckh,bckhp->bcqhp",
+                             cb, lmat, dt_c, xs_c)
+        # chunk-final states
+        decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)        # (B,C,Q,H)
+        s_local = jnp.einsum("bcqh,bcqh,bcqhp,bcqn->bchpn",
+                             decay_to_end, dt_c, xs_c, b_c)
+        chunk_decay = jnp.exp(cum[:, :, -1, :])                # (B,C,H)
+
+        init_state = (cache["state"].astype(jnp.float32)
+                      if cache is not None and "state" in cache else
+                      jnp.zeros((bsz, nh, hp, n), jnp.float32))
+
+        def scan_fn(st, inp):
+            sl, cd = inp
+            # state BEFORE this chunk is emitted for the inter-chunk term
+            new = cd[..., None, None] * st + sl
+            return new, st
+        (final_state, prev_states) = _scan(
+            scan_fn, init_state,
+            (s_local.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+        prev_states = prev_states.swapaxes(0, 1)               # (B,C,H,P,N)
+        decay_from_start = jnp.exp(cum)                        # (B,C,Q,H)
+        y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp",
+                             c_c, decay_from_start, prev_states)
+        y = (y_intra + y_inter).reshape(bsz, sp, nh, hp)
+        y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * \
+            xs.astype(jnp.float32)
+        y = y.reshape(bsz, sp, inner)[:, :s].astype(dt_)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"conv": new_conv,
+                         "state": final_state.astype(dt_),
+                         "end": jnp.asarray(s, jnp.int32)}
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["w_out"].astype(dt_))
+    return shard(out, ("batch", "seq", "embed")), new_cache
+
+
+def init_ssd_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    return {"conv": jnp.zeros((batch, cfg.conv_width - 1,
+                               cfg.ssm_inner + 2 * cfg.ssm_state), dtype),
+            "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                                cfg.ssm_state), dtype),
+            "end": jnp.asarray(0, jnp.int32)}
+
+
+# ======================================================================
+# RG-LRU (RecurrentGemma recurrent block).
+def init_rglru(b: Builder, cfg: ModelConfig):
+    d, w = cfg.d_model, cfg.lru_dim
+    b.add("w_in", (d, w), ("embed", "lru_width"))
+    b.add("w_gate_branch", (d, w), ("embed", "lru_width"))
+    b.add("conv_w", (cfg.conv_width, w), ("conv_width", None))
+    b.add("w_rg", (w, w), ("lru_width", None))     # recurrence gate
+    b.add("w_ig", (w, w), ("lru_width", None))     # input gate
+    b.add("a_param", (w,), (None,), init="zeros")
+    b.add("w_out", (w, d), ("lru_width", "embed"))
+
+
+_LRU_C = 8.0
+
+
+def rglru(p: Params, cfg: ModelConfig, x, *, mode: str,
+          cache: Optional[Dict] = None):
+    """Griffin recurrent block: gate branch (GeLU) ⊙ RG-LRU branch.
+    cache = {"conv": (B,W-1,w), "state": (B,w), "end": ()}."""
+    bsz, s, d = x.shape
+    w = cfg.lru_dim
+    dt = x.dtype
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,dw->bsw", x, p["w_gate_branch"].astype(dt)))
+    u = shard(jnp.einsum("bsd,dw->bsw", x, p["w_in"].astype(dt)),
+              ("batch", None, "lru_width"))
+    conv_cache = cache["conv"] if cache is not None else None
+    u, new_conv = _causal_conv(u, p["conv_w"].astype(dt), conv_cache)
+    r = jax.nn.sigmoid(
+        jnp.einsum("bsw,wv->bsv", u, p["w_rg"].astype(dt))
+        .astype(jnp.float32))
+    i = jax.nn.sigmoid(
+        jnp.einsum("bsw,wv->bsv", u, p["w_ig"].astype(dt))
+        .astype(jnp.float32))
+    log_a_base = -jnp.exp(p["a_param"].astype(jnp.float32)) - 1e-3
+    log_a = _LRU_C * r * log_a_base[None, None, :]        # (B,S,w) <= 0
+    a = jnp.exp(log_a)
+    gated_x = i * u.astype(jnp.float32)
+    beta = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * gated_x
+
+    if mode == "decode":
+        assert cache is not None and s == 1
+        h0 = cache["state"].astype(jnp.float32)           # (B,w)
+        h = a[:, 0] * h0 + beta[:, 0]
+        y = h[:, None, :]
+        new_cache = {"conv": new_conv, "state": h.astype(cache["state"].dtype),
+                     "end": cache["end"] + 1}
+    else:
+        h0 = (cache["state"].astype(jnp.float32)
+              if cache is not None and "state" in cache
+              else jnp.zeros((bsz, w), jnp.float32))
+        # linear recurrence h_t = a_t h_{t-1} + b_t via associative scan
+        b0 = beta.at[:, 0, :].add(a[:, 0, :] * h0)
+
+        def comb(l, r_):
+            return (l[0] * r_[0], r_[0] * l[1] + r_[1])
+        _, hs = jax.lax.associative_scan(comb, (a, b0), axis=1)
+        y = hs
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"conv": new_conv, "state": hs[:, -1].astype(dt),
+                         "end": jnp.asarray(s, jnp.int32)}
+    y = (y.astype(dt)) * gate
+    out = jnp.einsum("bsw,wd->bsd", y, p["w_out"].astype(dt))
+    return shard(out, ("batch", "seq", "embed")), new_cache
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    return {"conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.lru_dim), dtype),
+            "state": jnp.zeros((batch, cfg.lru_dim), dtype),
+            "end": jnp.asarray(0, jnp.int32)}

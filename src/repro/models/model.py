@@ -1,0 +1,298 @@
+"""Model assembly: embedding -> scanned blocks -> norm -> logits.
+
+Layers are stacked per GROUP (one group = one repetition of
+``cfg.block_pattern``) and iterated with ``jax.lax.scan`` so the HLO stays
+O(1) in depth — essential for the 88-126 layer assigned configs. Each block
+is pre-norm residual: x += mixer(norm(x)); x += ffn(norm(x)).
+
+Public entry points:
+  init(cfg, key)                          -> (params, axes)
+  forward(cfg, params, batch, mode, ...)  -> logits [, cache]
+  loss_fn(cfg, params, batch)             -> scalar loss (train objective)
+  init_cache(cfg, batch, alloc)           -> decode cache pytree (+axes)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers
+from .config import ModelConfig
+from .sharding import shard
+
+Params = Dict[str, Any]
+
+
+def _block_init(b: layers.Builder, cfg: ModelConfig, kind: str):
+    b.add("norm_mixer", (cfg.d_model,), ("embed",), init="zeros")
+    mixer = b.sub("mixer")
+    if kind in ("attn", "local_attn"):
+        layers.init_attention(mixer, cfg)
+    elif kind == "ssd":
+        layers.init_ssd(mixer, cfg)
+    elif kind == "rglru":
+        layers.init_rglru(mixer, cfg)
+    else:
+        raise ValueError(kind)
+    if cfg.mlp_type != "none":
+        b.add("norm_mlp", (cfg.d_model,), ("embed",), init="zeros")
+        ffn = b.sub("ffn")
+        if cfg.is_moe:
+            layers.init_moe(ffn, cfg)
+        else:
+            layers.init_mlp(ffn, cfg)
+
+
+class _AxesBuilder:
+    """Builder twin that records ONLY logical axes (no array creation) —
+    used by ``init_axes`` so the dry-run can get the axes tree without
+    allocating or tracing."""
+
+    def __init__(self):
+        self.params: Dict[str, Any] = {}   # unused, keeps Builder API
+        self.axes: Dict[str, Any] = {}
+
+    def add(self, name, shape, logical, **kw):
+        assert len(shape) == len(logical), (name, shape, logical)
+        self.params[name] = None            # presence checks (sparsity)
+        self.axes[name] = logical
+
+    def sub(self, name):
+        b = _AxesBuilder()
+        self.axes[name] = b.axes
+        return b
+
+
+def init_axes(cfg: ModelConfig) -> Dict:
+    """Logical-axes tree matching ``init``'s params, built array-free."""
+    b = _AxesBuilder()
+    b.add("embed", (0, 0), ("vocab", "embed"))
+    if not cfg.tie_embeddings:
+        b.add("unembed", (0, 0), ("embed", "vocab"))
+    b.add("norm_final", (0,), ("embed",))
+    gb = _AxesBuilder()
+    for li, kind in enumerate(cfg.block_pattern):
+        _block_init(gb.sub(f"block{li}_{kind}"), cfg, kind)
+    b.axes["groups"] = jax.tree.map(
+        lambda ax: ("layers",) + ax, gb.axes,
+        is_leaf=lambda x: isinstance(x, tuple) and
+        all(isinstance(a, (str, type(None))) for a in x))
+    return b.axes
+
+
+def init(cfg: ModelConfig, key: jax.Array) -> Tuple[Params, Dict]:
+    """Returns (params, logical_axes) with per-group stacked block params."""
+    pdt = jnp.dtype(cfg.param_dtype)
+    b = layers.Builder(key, pdt)
+    v = cfg.padded_vocab()
+    b.add("embed", (v, cfg.d_model), ("vocab", "embed"))
+    if not cfg.tie_embeddings:
+        b.add("unembed", (cfg.d_model, v), ("embed", "vocab"))
+    b.add("norm_final", (cfg.d_model,), ("embed",), init="zeros")
+
+    # one template group, then stack n_groups copies along a leading axis
+    def one_group(key):
+        gb = layers.Builder(key, pdt)
+        for li, kind in enumerate(cfg.block_pattern):
+            _block_init(gb.sub(f"block{li}_{kind}"), cfg, kind)
+        return gb.params
+    keys = jax.random.split(b._next(), cfg.n_groups)
+    group_params = jax.vmap(one_group)(keys)
+    # axes for the stacked tree: prepend "layers"
+    gb = layers.Builder(jax.random.PRNGKey(0), pdt)
+    for li, kind in enumerate(cfg.block_pattern):
+        _block_init(gb.sub(f"block{li}_{kind}"), cfg, kind)
+    group_axes = jax.tree.map(
+        lambda ax: ("layers",) + ax, gb.axes,
+        is_leaf=lambda x: isinstance(x, tuple) and
+        all(isinstance(a, (str, type(None))) for a in x))
+    b.params["groups"] = group_params
+    b.axes["groups"] = group_axes
+    return b.params, b.axes
+
+
+# ----------------------------------------------------------------------
+_CACHE_AXES = {
+    "attn": {"k": ("batch", "cache_seq", "kv_heads", "head_dim"),
+             "v": ("batch", "cache_seq", "kv_heads", "head_dim"),
+             "end": ()},
+    "ssd": {"conv": ("batch", "conv_width", "ssm_inner"),
+            "state": ("batch", None, None, "ssm_state"),
+            "end": ()},
+    "rglru": {"conv": ("batch", "conv_width", "lru_width"),
+              "state": ("batch", "lru_width"),
+              "end": ()},
+}
+_CACHE_AXES["local_attn"] = _CACHE_AXES["attn"]
+
+
+def init_cache_axes(cfg: ModelConfig) -> Dict:
+    """Logical axes of the decode cache (array-free twin of init_cache)."""
+    axes = {}
+    for li, kind in enumerate(cfg.block_pattern):
+        axes[f"block{li}_{kind}"] = {
+            k: ("layers",) + v for k, v in _CACHE_AXES[kind].items()}
+    return axes
+
+
+def init_cache(cfg: ModelConfig, batch: int, alloc_seq: int,
+               dtype=jnp.bfloat16) -> Tuple[Dict, Dict]:
+    """Decode cache for one group, stacked n_groups times.
+
+    Attention blocks allocate min(alloc_seq, their window); SSM/RG-LRU
+    blocks carry O(1) state. Returns (cache, logical_axes)."""
+    def one(kind):
+        if kind in ("attn", "local_attn"):
+            win = cfg.sliding_window if kind == "attn" else cfg.local_window
+            alloc = min(alloc_seq, win) if win else alloc_seq
+            return layers.init_attn_cache(cfg, batch, alloc, dtype)
+        if kind == "ssd":
+            return layers.init_ssd_cache(cfg, batch, dtype)
+        return layers.init_rglru_cache(cfg, batch, dtype)
+    cache = {}
+    for li, kind in enumerate(cfg.block_pattern):
+        c = one(kind)
+        cache[f"block{li}_{kind}"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_groups,) + x.shape), c)
+    return cache, init_cache_axes(cfg)
+
+
+# ----------------------------------------------------------------------
+def _apply_block(cfg: ModelConfig, kind: str, p: Params, x, pos, *,
+                 mode: str, cache):
+    h = layers.rms_norm(x, p["norm_mixer"], cfg.norm_eps)
+    if kind == "attn":
+        y, new_cache = layers.attention(
+            p["mixer"], cfg, h, pos, window=cfg.sliding_window, mode=mode,
+            cache=cache)
+    elif kind == "local_attn":
+        y, new_cache = layers.attention(
+            p["mixer"], cfg, h, pos, window=cfg.local_window, mode=mode,
+            cache=cache)
+    elif kind == "ssd":
+        y, new_cache = layers.ssd(p["mixer"], cfg, h, mode=mode, cache=cache)
+    else:
+        y, new_cache = layers.rglru(p["mixer"], cfg, h, mode=mode,
+                                    cache=cache)
+    x = x + y
+    if cfg.mlp_type != "none":
+        h = layers.rms_norm(x, p["norm_mlp"], cfg.norm_eps)
+        if cfg.is_moe:
+            x = x + layers.moe(p["ffn"], cfg, h, mode=mode)
+        else:
+            x = x + layers.mlp(p["ffn"], cfg, h)
+    return x, new_cache
+
+
+def forward(cfg: ModelConfig, params: Params, tokens: jnp.ndarray, *,
+            prefix_embeds: Optional[jnp.ndarray] = None,
+            mode: str = "train",
+            cache: Optional[Dict] = None,
+            pos_offset: Any = 0,
+            remat: bool = True):
+    """tokens: (B, S) int32. Returns (logits[, None] | (logits, new_cache)).
+
+    prefix_embeds (B, P, d): modality-stub frontend embeddings prepended to
+    the token embeddings (musicgen / internvl2 assignments)."""
+    cdt = jnp.dtype(cfg.dtype)
+    emb = params["embed"]
+    x = emb[tokens].astype(cdt) * np.sqrt(cfg.d_model)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(cdt), x], axis=1)
+    x = shard(x, ("batch", "seq", "embed"))
+    bsz, s, _ = x.shape
+    pos = pos_offset + jnp.arange(s, dtype=jnp.int32)[None, :]
+    pos = jnp.broadcast_to(pos, (bsz, s))
+
+    kinds = list(cfg.block_pattern)
+
+    def group_body(x, inp):
+        gp, gcache = inp
+        new_caches = {}
+        for li, kind in enumerate(kinds):
+            name = f"block{li}_{kind}"
+            c = gcache.get(name) if gcache is not None else None
+            x, nc = _apply_block(cfg, kind, gp[name], x, pos,
+                                 mode=mode, cache=c)
+            if nc is not None:
+                new_caches[name] = nc
+        return x, (new_caches if new_caches else None)
+
+    body = group_body
+    if remat and mode == "train":
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat_policy == "dots" else
+                  jax.checkpoint_policies.nothing_saveable)
+        body = jax.checkpoint(group_body, policy=policy)
+
+    xs = (params["groups"], cache)
+    if layers.scans_unrolled():
+        # dry-run roofline pass: python-unrolled groups (exact linear
+        # extrapolation in n_groups happens in launch/dryrun.py)
+        new_caches = []
+        for gi in range(cfg.n_groups):
+            gxs = jax.tree.map(lambda a: a[gi], xs)
+            x, nc = body(x, gxs)
+            new_caches.append(nc)
+        new_cache = (jax.tree.map(lambda *a: jnp.stack(a), *new_caches)
+                     if new_caches and new_caches[0] is not None else None)
+    else:
+        x, new_cache = jax.lax.scan(body, x, xs)
+
+    x = layers.rms_norm(x, params["norm_final"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(cdt))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(cdt))
+    if cfg.logits_soft_cap:
+        c = cfg.logits_soft_cap
+        logits = c * jnp.tanh(logits / c)
+    logits = shard(logits, ("batch", None, "vocab"))
+    if mode == "train":
+        return logits
+    return logits, new_cache
+
+
+# ----------------------------------------------------------------------
+def loss_fn(cfg: ModelConfig, params: Params, batch: Dict[str, jnp.ndarray],
+            *, remat: bool = True) -> jnp.ndarray:
+    """Next-token cross entropy over the token segment (prefix positions,
+    if any, carry no loss). batch: {"tokens": (B,S), "labels": (B,S),
+    optional "prefix_embeds": (B,P,d)}."""
+    logits = forward(cfg, params, batch["tokens"],
+                     prefix_embeds=batch.get("prefix_embeds"),
+                     mode="train", remat=remat)
+    npfx = logits.shape[1] - batch["labels"].shape[1]
+    logits = logits[:, npfx:, :]
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = labels >= 0
+    nll = jnp.where(mask, logz - gold, 0.0)
+    return nll.sum() / jnp.maximum(mask.sum(), 1)
+
+
+# ----------------------------------------------------------------------
+def prefill_step(cfg: ModelConfig, params: Params, tokens, *,
+                 prefix_embeds=None, alloc_seq: int, cache_dtype=jnp.bfloat16):
+    """Run the full prompt, build the decode cache, return last logits."""
+    bsz = tokens.shape[0]
+    cache, _ = init_cache(cfg, bsz, alloc_seq, cache_dtype)
+    logits, new_cache = forward(cfg, params, tokens,
+                                prefix_embeds=prefix_embeds,
+                                mode="prefill", cache=cache, remat=False)
+    return logits[:, -1, :], new_cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, token, cache, *,
+                pos: Any):
+    """One decode step. token: (B, 1) int32; pos: scalar/array position of
+    the new token. Returns (logits (B, V), new_cache)."""
+    logits, new_cache = forward(cfg, params, token, mode="decode",
+                                cache=cache, pos_offset=pos, remat=False)
+    return logits[:, -1, :], new_cache

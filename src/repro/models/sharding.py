@@ -1,0 +1,172 @@
+"""Logical-axis sharding (MaxText-style).
+
+Every parameter/activation dimension carries a LOGICAL name; a rule table
+maps logical names to mesh axes. Swapping distribution strategies (1-pod vs
+multi-pod, TP vs EP, sequence parallelism on/off) only edits the rule table,
+never the model code.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[str, Tuple[str, ...], None]
+
+# Default rules for the production mesh ("data", "model") [+ "pod"].
+# batch crosses pod+data; model-parallel dims map to "model".
+DEFAULT_RULES: Dict[str, MeshAxes] = {
+    "batch": ("pod", "data"),
+    "seq": None,                  # activations: sequence usually unsharded
+    "seq_sp": "model",            # sequence-parallel residual stream
+    "attn_q_seq": None,           # query-seq sharding inside attention:
+                                  # map to "model" for archs whose head
+                                  # count the model axis cannot divide
+                                  # (sequence-parallel attention)
+    "embed": None,                # d_model of activations
+    "vocab": "model",
+    "heads": "model",
+    "qkv_flat": "model",          # flat q/k/v/o feature dim of projections
+    "kv_heads": "model",          # resolved per-config (padded/replicated)
+    "head_dim": None,
+    "qblocks": ("data", "model"),  # int8 optimizer-moment blocks
+    "mlp": "model",               # d_ff
+    "experts": None,              # EP maps this to "model" instead of mlp
+    "expert_mlp": "model",
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "lru_width": "model",
+    "conv_width": None,
+    "cache_seq": None,
+    "layers": None,               # stacked scan groups — never sharded
+    "fsdp": "data",               # FSDP dim of weights (embed dim of params)
+    "stage": None,
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Dict[str, MeshAxes] = dict(DEFAULT_RULES)
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh, overrides: Optional[Dict[str, MeshAxes]] = None):
+    """Activate a mesh + rule table for model construction/application."""
+    prev_mesh, prev_rules = _CTX.mesh, _CTX.rules
+    rules = dict(DEFAULT_RULES)
+    if overrides:
+        rules.update(overrides)
+    # Drop references to mesh axes that do not exist (e.g. "pod" on the
+    # single-pod mesh) so one rule table serves every mesh.
+    def _filter(ax: MeshAxes) -> MeshAxes:
+        names = mesh.axis_names
+        if ax is None:
+            return None
+        if isinstance(ax, str):
+            return ax if ax in names else None
+        kept = tuple(a for a in ax if a in names)
+        return kept if kept else None
+    _CTX.mesh = mesh
+    _CTX.rules = {k: _filter(v) for k, v in rules.items()}
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev_mesh, prev_rules
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def rule_active(name: str) -> bool:
+    """True iff the logical name currently maps to a real mesh axis."""
+    return _CTX.mesh is not None and _CTX.rules.get(name) is not None
+
+
+def resolve(logical: Sequence[Optional[str]],
+            shape: Optional[Sequence[int]] = None) -> P:
+    """Logical axis names -> PartitionSpec under the active rules.
+
+    Conflicts resolve to replication: a mesh axis is used at most once per
+    spec (first logical dim wins), and — when ``shape`` is given — a dim
+    that the mapped mesh axes do not divide falls back to None. This is
+    what lets ONE rule table serve every (arch x shape x mesh) cell:
+    kv=8 heads on a 16-way model axis, batch=1 on the data axis, etc.
+    simply stay replicated instead of failing to lower."""
+    rules = _CTX.rules
+    mesh = _CTX.mesh
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape)) if mesh else {}
+    spec, used = [], set()
+    for i, name in enumerate(logical):
+        ax = rules.get(name) if name else None
+        if ax is None:
+            spec.append(None)
+            continue
+        flat = (ax,) if isinstance(ax, str) else tuple(ax)
+        if any(a in used for a in flat):
+            spec.append(None)          # second use -> replicate this dim
+            continue
+        if shape is not None and sizes:
+            total = 1
+            for a in flat:
+                total *= sizes.get(a, 1)
+            if shape[i] % total != 0:
+                spec.append(None)      # indivisible -> replicate
+                continue
+        used.update(flat)
+        spec.append(ax)
+    return P(*spec)
+
+
+def shard(x, logical: Sequence[Optional[str]]):
+    """with_sharding_constraint by logical names (no-op without a mesh)."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    spec = resolve(logical, x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec))
+
+
+def named_sharding(logical: Sequence[Optional[str]],
+                   shape: Optional[Sequence[int]] = None
+                   ) -> Optional[NamedSharding]:
+    mesh = _CTX.mesh
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, resolve(logical, shape))
+
+
+_IS_AXES = lambda x: isinstance(x, tuple) and all(
+    isinstance(a, (str, type(None))) for a in x)
+
+
+def spec_tree(axes_tree, shape_tree=None):
+    """Map a tree of logical-axes tuples to PartitionSpecs. ``shape_tree``
+    (same structure, leaves with .shape) enables divisibility checks."""
+    if shape_tree is None:
+        return jax.tree.map(lambda ax: resolve(ax), axes_tree,
+                            is_leaf=_IS_AXES)
+    return jax.tree.map(
+        lambda ax, arr: resolve(ax, arr.shape), axes_tree, shape_tree,
+        is_leaf=_IS_AXES)
+
+
+def sharding_tree(axes_tree, shape_tree=None):
+    """Map a tree of logical-axes tuples to NamedShardings."""
+    mesh = _CTX.mesh
+    assert mesh is not None, "sharding_tree needs an active axis_rules mesh"
+    if shape_tree is None:
+        return jax.tree.map(
+            lambda ax: NamedSharding(mesh, resolve(ax)), axes_tree,
+            is_leaf=_IS_AXES)
+    return jax.tree.map(
+        lambda ax, arr: NamedSharding(mesh, resolve(ax, arr.shape)),
+        axes_tree, shape_tree, is_leaf=_IS_AXES)

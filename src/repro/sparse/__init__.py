@@ -1,0 +1,2 @@
+from .linear import SparseLinearParams, sparse_linear_init, sparse_linear_apply  # noqa: F401
+from .prune import prune_to_bsr  # noqa: F401

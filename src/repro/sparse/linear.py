@@ -1,0 +1,172 @@
+"""SparseLinear: block-sparse weights on the BSR Pallas kernel, trainable.
+
+The forward pass is the paper's SpMM (block-sparse weight times dense
+activations) through ``kernels.bsr_spmm``; the backward pass is defined with
+``jax.custom_vjp``:
+
+  y  = x @ W            with W^T stored as BSR (out-major blocks)
+  dx = dy @ W^T         -> a second BSR spmm with the TRANSPOSED metadata
+                           (precomputed at init; transposing BSR is a
+                           permutation of blocks + swap of block dims)
+  dW = x^T dy, restricted to the live blocks -> per-block outer products
+                           gathered by (row_of, col_of) — compute scales
+                           with nnz blocks, exactly the paper's "only
+                           useful computation" property, in the backward
+                           pass too.
+
+Metadata (row_of/col_of and the transpose permutation) is static numpy —
+it never enters the jit trace as data dependencies; only block VALUES are
+traced, so the whole layer is differentiable and jit/scan-compatible.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.bsr import BSR, magnitude_block_mask
+from ..kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseLinearMeta:
+    """Static metadata for one sparse weight (hashable, jit-static)."""
+    d_in: int
+    d_out: int
+    block: int
+    row_of: Tuple[int, ...]          # fwd BSR (W^T: out-major) + sentinel
+    col_of: Tuple[int, ...]
+    t_perm: Tuple[int, ...]          # permutation fwd blocks -> bwd blocks
+    t_row_of: Tuple[int, ...]        # bwd BSR (W: in-major) + sentinel
+    t_col_of: Tuple[int, ...]
+
+    @property
+    def nnz(self) -> int:
+        return len(self.col_of)
+
+    @property
+    def n_block_rows(self) -> int:
+        return self.d_out // self.block
+
+    @property
+    def n_block_rows_t(self) -> int:
+        return self.d_in // self.block
+
+
+@dataclasses.dataclass
+class SparseLinearParams:
+    values: jnp.ndarray              # (nnz, block, block) — W^T blocks
+    meta: SparseLinearMeta
+
+
+def _bsr_meta(bsr: BSR):
+    deg = np.diff(bsr.row_ptr)
+    row_of = np.repeat(np.arange(bsr.n_block_rows, dtype=np.int32),
+                       deg.astype(np.int64))
+    row_of = np.concatenate([row_of, row_of[-1:]])
+    return row_of.astype(np.int32), bsr.col_idx.astype(np.int32)
+
+
+def sparse_linear_init(key, d_in: int, d_out: int, block: int,
+                       density: float, scale: float = 0.02,
+                       dtype=jnp.float32) -> SparseLinearParams:
+    """Initialize a dense weight, magnitude-prune to block density, pack."""
+    w = np.asarray(jax.random.normal(key, (d_in, d_out))) * scale
+    wt = np.ascontiguousarray(w.T)                     # (out, in)
+    mask = magnitude_block_mask(wt, (block, block), density)
+    fwd = BSR.from_mask(wt, mask, (block, block))      # W^T blocks
+    bwd = BSR.from_mask(np.ascontiguousarray(w),
+                        mask.T, (block, block))        # W blocks
+    row_of, col_of = _bsr_meta(fwd)
+    t_row_of, t_col_of = _bsr_meta(bwd)
+    # permutation: fwd block p at (r, c) -> bwd block at (c, r)
+    fwd_pos = {}
+    p = 0
+    for r in range(fwd.n_block_rows):
+        for q in range(fwd.row_ptr[r], fwd.row_ptr[r + 1]):
+            fwd_pos[(r, int(fwd.col_idx[q]))] = p
+            p += 1
+    perm = []
+    for r in range(bwd.n_block_rows):
+        for q in range(bwd.row_ptr[r], bwd.row_ptr[r + 1]):
+            perm.append(fwd_pos[(int(bwd.col_idx[q]), r)])
+    meta = SparseLinearMeta(
+        d_in, d_out, block,
+        tuple(int(x) for x in row_of), tuple(int(x) for x in col_of),
+        tuple(perm),
+        tuple(int(x) for x in t_row_of), tuple(int(x) for x in t_col_of))
+    return SparseLinearParams(jnp.asarray(fwd.values, dtype), meta)
+
+
+# ----------------------------------------------------------------------
+_BN = 128        # token-tile width of the kernel's N dimension
+
+
+def _pad_tokens(xt: jnp.ndarray) -> jnp.ndarray:
+    t = xt.shape[1]
+    tp = -(-t // _BN) * _BN
+    return jnp.pad(xt, ((0, 0), (0, tp - t)))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _sparse_mm(values, x, meta: SparseLinearMeta):
+    """y[T, out] = x[T, in] @ W, W^T stored as BSR values."""
+    yt = ops.bsr_matmul_arrays(
+        jnp.asarray(meta.row_of, jnp.int32),
+        jnp.asarray(meta.col_of, jnp.int32),
+        values, _pad_tokens(x.T), n_block_rows=meta.n_block_rows)
+    return yt[:, :x.shape[0]].T
+
+
+def _sparse_mm_fwd(values, x, meta):
+    return _sparse_mm(values, x, meta), (values, x)
+
+
+def _sparse_mm_bwd(meta, res, dy):
+    values, x = res
+    blk = meta.block
+    # dx = dy @ W^T : spmm with transposed metadata; block values are the
+    # fwd blocks permuted + per-block transposed.
+    tvals = jnp.transpose(values[jnp.asarray(meta.t_perm, jnp.int32)],
+                          (0, 2, 1))
+    dxt = ops.bsr_matmul_arrays(
+        jnp.asarray(meta.t_row_of, jnp.int32),
+        jnp.asarray(meta.t_col_of, jnp.int32),
+        tvals, _pad_tokens(dy.T), n_block_rows=meta.n_block_rows_t)
+    dx = dxt[:, :dy.shape[0]].T
+    # dW^T blocks: block p at (r=out-block, c=in-block):
+    #   dWt[p] = dy_block(r)^T ... careful: y^T = Wt x^T; dWt[p] =
+    #   dy^T[r-block rows] @ x^T[c-block cols]^T = dy[:, r]^T x[:, c]
+    row_of = jnp.asarray(meta.row_of[:-1], jnp.int32)
+    col_of = jnp.asarray(meta.col_of, jnp.int32)
+    t = dy.shape[0]
+    dyb = dy.T.reshape(meta.n_block_rows, blk, t)          # (R, blk, T)
+    xb = x.T.reshape(meta.n_block_rows_t, blk, t)          # (C, blk, T)
+    dvals = jnp.einsum("pbt,pct->pbc", dyb[row_of], xb[col_of],
+                       preferred_element_type=jnp.float32)
+    return dvals.astype(values.dtype), dx.astype(x.dtype)
+
+
+_sparse_mm.defvjp(_sparse_mm_fwd, _sparse_mm_bwd)
+
+
+def sparse_linear_apply(p: SparseLinearParams, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., d_in) -> (..., d_out); differentiable wrt values and x."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, p.meta.d_in)
+    y = _sparse_mm(p.values, x2, p.meta)
+    return y.reshape(*lead, p.meta.d_out)
+
+
+def to_dense(p: SparseLinearParams) -> jnp.ndarray:
+    """Densify W (d_in, d_out) for oracles/tests."""
+    blk = p.meta.block
+    out = jnp.zeros((p.meta.d_out, p.meta.d_in), p.values.dtype)
+    for q, (r, c) in enumerate(zip(p.meta.row_of[:-1], p.meta.col_of)):
+        out = out.at[r * blk:(r + 1) * blk, c * blk:(c + 1) * blk].set(
+            p.values[q])
+    return out.T

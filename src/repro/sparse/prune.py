@@ -1,0 +1,28 @@
+"""Weight pruning to BSR — the paper's format as a model-compression path."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from ..core.bsr import BSR, magnitude_block_mask
+
+
+def prune_to_bsr(w: np.ndarray, block: int, density: float) -> BSR:
+    """Magnitude-prune a dense weight to block density and pack as BSR.
+
+    Every block-row keeps at least one block so no output feature goes dead
+    (see ``magnitude_block_mask``)."""
+    mask = magnitude_block_mask(np.asarray(w), (block, block), density)
+    return BSR.from_mask(np.asarray(w), mask, (block, block))
+
+
+def sparsity_schedule(step: int, total_steps: int, final_density: float,
+                      warmup_frac: float = 0.1) -> float:
+    """Cubic density schedule (dense -> final_density), Zhu & Gupta style.
+    Used by train loops that prune gradually."""
+    t0 = warmup_frac * total_steps
+    if step <= t0:
+        return 1.0
+    f = min(1.0, (step - t0) / max(total_steps - t0, 1))
+    return final_density + (1.0 - final_density) * (1 - f) ** 3

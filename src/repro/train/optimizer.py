@@ -1,0 +1,168 @@
+"""Self-contained AdamW with optional int8-quantized moments.
+
+No optax dependency. State is a plain pytree mirroring params:
+  {"m": ..., "v": ..., "count": ()}  (fp32 moments), or with
+  ``quantize=True`` blockwise-int8 moments {"m_q","m_s","v_q","v_s"} — the
+  8-bit-optimizer trick that makes 100B+ configs fit the 16 GB/chip HBM
+  budget (see DESIGN.md §6 and EXPERIMENTS.md §Dry-run memory table).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+QBLOCK = 256        # quantization block (per flattened chunk)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    quantize: bool = False       # int8 moments
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def lr_at(cfg: AdamWConfig, step) -> jnp.ndarray:
+    """Linear warmup + cosine decay to min_lr_frac."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    t = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * \
+        (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+# ----------------------------------------------------------------------
+# int8 moment quantization. SHARDING-PRESERVING by construction: the int8
+# payload keeps the parameter's exact shape (so it inherits the parameter's
+# sharding spec with no resharding), and scales are blockwise along the
+# last dim when it divides QBLOCK, else per-row. Flattening across sharded
+# dims would force GSPMD to replicate multi-hundred-GB tensors (measured:
+# 14 GB/layer of involuntary rematerialization on the 405B config).
+def _quant(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    last = x.shape[-1] if x.ndim else 1
+    if x.ndim and last % QBLOCK == 0:
+        xb = x.reshape(*x.shape[:-1], last // QBLOCK, QBLOCK)
+        scale = jnp.max(jnp.abs(xb), axis=-1) / 127.0 + 1e-12
+        q = jnp.clip(jnp.round(xb / scale[..., None]), -127, 127)
+        q = q.reshape(x.shape).astype(jnp.int8)
+    else:
+        scale = jnp.max(jnp.abs(x), axis=-1 if x.ndim else None,
+                        keepdims=bool(x.ndim)) / 127.0 + 1e-12
+        q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequant(q: jnp.ndarray, scale: jnp.ndarray, shape) -> jnp.ndarray:
+    last = shape[-1] if len(shape) else 1
+    if len(shape) and last % QBLOCK == 0 and scale.shape[-1] == last // QBLOCK:
+        qb = q.astype(jnp.float32).reshape(*shape[:-1], last // QBLOCK,
+                                           QBLOCK)
+        return (qb * scale[..., None]).reshape(shape)
+    return q.astype(jnp.float32) * scale
+
+
+# ----------------------------------------------------------------------
+def adamw_init(cfg: AdamWConfig, params) -> Any:
+    def zeros_like_f32(p):
+        return jnp.zeros(p.shape, jnp.float32)
+    if cfg.quantize:
+        def qz(p):
+            q, s = _quant(jnp.zeros(p.shape, jnp.float32))
+            return {"q": q, "s": s}
+        return {"m": jax.tree.map(qz, params),
+                "v": jax.tree.map(qz, params),
+                "count": jnp.zeros((), jnp.int32)}
+    return {"m": jax.tree.map(zeros_like_f32, params),
+            "v": jax.tree.map(zeros_like_f32, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_update(cfg: AdamWConfig, grads, state, params):
+    """Returns (new_params, new_state, metrics)."""
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = lr_at(cfg, state["count"])
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** count.astype(jnp.float32)
+    bc2 = 1 - b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p, decay=True):
+        g = g.astype(jnp.float32) * clip
+        if cfg.quantize:
+            mf = _dequant(m["q"], m["s"], g.shape)
+            # v is stored in sqrt domain (halves the dynamic range a
+            # linear int8 grid must cover — same trick as dynamic-exponent
+            # 8-bit optimizers, simplified)
+            vf = jnp.square(_dequant(v["q"], v["s"], g.shape))
+        else:
+            mf, vf = m, v
+        mf = b1 * mf + (1 - b1) * g
+        vf = b2 * vf + (1 - b2) * g * g
+        mhat = mf / bc1
+        vhat = vf / bc2
+        upd_ = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.quantize:
+            # update clipping: quantization can zero tiny v entries, which
+            # would otherwise turn |m/eps| into a 1e8x step
+            upd_ = jnp.clip(upd_, -3.0, 3.0)
+        wd = cfg.weight_decay if decay else 0.0
+        step = upd_ + wd * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        if cfg.quantize:
+            mq, ms = _quant(mf)
+            vq, vs = _quant(jnp.sqrt(vf))
+            return newp, {"q": mq, "s": ms}, {"q": vq, "s": vs}
+        return newp, mf, vf
+
+    paths_p, treedef = jax.tree_util.tree_flatten_with_path(params)
+    flat_p = [x for _, x in paths_p]
+    # no weight decay on pruning masks (fixed metadata) or norm scales
+    decays = [not any(getattr(k, "key", "").startswith(("mask_", "norm"))
+                      for k in path if hasattr(k, "key"))
+              for path, _ in paths_p]
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(g, m, v, p, d)
+           for g, m, v, p, d in zip(flat_g, flat_m, flat_v, flat_p, decays)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, {"m": new_m, "v": new_v, "count": count}, metrics
+
+
+def opt_state_axes(cfg: AdamWConfig, param_axes):
+    """Logical axes for the optimizer state (ZeRO-1: moments inherit the
+    param sharding; zero.py may further reshard them over data)."""
+    def mom_axes(ax):
+        if cfg.quantize:
+            # int8 payload keeps the param's shape -> same logical axes;
+            # blockwise scales keep the same ndim (last dim /QBLOCK or 1),
+            # so the same axes resolve correctly (divisibility-checked).
+            return {"q": ax, "s": ax}
+        return ax
+    is_ax = lambda x: isinstance(x, tuple) and all(
+        isinstance(a, (str, type(None))) for a in x)
+    return {"m": jax.tree.map(mom_axes, param_axes, is_leaf=is_ax),
+            "v": jax.tree.map(mom_axes, param_axes, is_leaf=is_ax),
+            "count": ()}

@@ -1,0 +1,104 @@
+"""Train-step builder: grad accumulation, remat, pjit shardings, donation.
+
+``build_train_step`` returns a jit-compiled (params, opt_state, batch) ->
+(params, opt_state, metrics) function with:
+
+  * microbatched gradient accumulation (lax.scan over microbatches,
+    f32 accumulators) — the activation-memory knob for the big configs;
+  * AdamW (optionally int8 moments) with clipping + warmup/cosine LR;
+  * in/out shardings derived from the logical-axes trees, params and
+    optimizer state donated (no double-buffering of the big tensors).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import model as M
+from ..models import sharding as sh
+from ..models.config import ModelConfig
+from .optimizer import AdamWConfig, adamw_init, adamw_update, opt_state_axes
+from .zero import zero1_axes
+
+
+def loss_and_grads(cfg: ModelConfig, params, batch, *, n_micro: int = 1,
+                   remat: bool = True):
+    """Mean loss + grads, accumulated over ``n_micro`` microbatches."""
+    if n_micro == 1:
+        loss, grads = jax.value_and_grad(
+            lambda p: M.loss_fn(cfg, p, batch, remat=remat))(params)
+        return loss, grads
+
+    def split(x):
+        b = x.shape[0]
+        assert b % n_micro == 0, (b, n_micro)
+        return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+    mbs = jax.tree.map(split, batch)
+
+    def body(carry, mb):
+        loss_acc, gacc = carry
+        loss, grads = jax.value_and_grad(
+            lambda p: M.loss_fn(cfg, p, mb, remat=remat))(params)
+        gacc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                            gacc, grads)
+        return (loss_acc + loss, gacc), None
+
+    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (loss_sum, gsum), _ = jax.lax.scan(body, (jnp.zeros(()), g0), mbs)
+    inv = 1.0 / n_micro
+    return loss_sum * inv, jax.tree.map(lambda g: g * inv, gsum)
+
+
+def make_step_fn(cfg: ModelConfig, opt_cfg: AdamWConfig, *,
+                 n_micro: int = 1, remat: bool = True):
+    def step(params, opt_state, batch):
+        loss, grads = loss_and_grads(cfg, params, batch, n_micro=n_micro,
+                                     remat=remat)
+        params, opt_state, metrics = adamw_update(
+            opt_cfg, grads, opt_state, params)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+    return step
+
+
+def build_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, axes, *,
+                     n_micro: int = 1, remat: bool = True,
+                     zero1: bool = True, donate: bool = True,
+                     params_template=None, opt_template=None):
+    """jit the step with shardings resolved from logical axes. Must be
+    called inside an active ``sharding.axis_rules`` context (or none, for
+    single-device use). ``params_template``/``opt_template`` (shape trees)
+    enable divisibility-checked shardings."""
+    step = make_step_fn(cfg, opt_cfg, n_micro=n_micro, remat=remat)
+    mesh = sh.current_mesh()
+    if mesh is None:
+        return jax.jit(step, donate_argnums=(0, 1) if donate else ())
+    pshard = sh.sharding_tree(axes, params_template)
+    oaxes = opt_state_axes(opt_cfg, axes)
+    if zero1 and not opt_cfg.quantize:
+        oaxes = {"m": zero1_axes(oaxes["m"]), "v": zero1_axes(oaxes["v"]),
+                 "count": ()}
+    oshard = sh.sharding_tree(oaxes, opt_template)
+    bshard = {
+        "tokens": sh.named_sharding(("batch", None)),
+        "labels": sh.named_sharding(("batch", None)),
+    }
+    if cfg.input_mode == "embeds":
+        bshard["prefix_embeds"] = sh.named_sharding(("batch", None, None))
+    mshard = {"loss": sh.named_sharding(()), "grad_norm": sh.named_sharding(()),
+              "lr": sh.named_sharding(())}
+    return jax.jit(
+        step,
+        in_shardings=(pshard, oshard, bshard),
+        out_shardings=(pshard, oshard, mshard),
+        donate_argnums=(0, 1) if donate else (),
+    )
+
+
+def init_train_state(cfg: ModelConfig, opt_cfg: AdamWConfig, key):
+    params, axes = M.init(cfg, key)
+    opt_state = adamw_init(opt_cfg, params)
+    return params, opt_state, axes

@@ -1,0 +1,55 @@
+"""ZeRO / FSDP sharding presets.
+
+Everything is a RULE-TABLE override (see ``models/sharding.py``): parameters
+and optimizer states carry logical axes; these presets decide which logical
+axes additionally map onto the "data" mesh axis.
+
+  * ``FSDP_OVERRIDES``  — weight matrices shard their d_model ("embed")
+    dimension over "data" on top of the tensor-parallel "model" dim
+    (2-D weight sharding). Optimizer states inherit => ZeRO-3-like.
+  * ``zero1_axes``      — params stay TP-only; ONLY the optimizer moments
+    reshard over "data" (classic ZeRO-1).
+
+The dedup logic in ``sharding.resolve`` keeps activations safe: their
+"embed" dim silently stays replicated because "data" is already used by
+"batch" in every activation spec.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+
+from ..models import sharding as sh
+
+FSDP_OVERRIDES: Dict[str, sh.MeshAxes] = {
+    "embed": "data",
+    # vocab stays on "model"; heads/mlp stay on "model".
+}
+
+
+def zero1_axes(param_axes):
+    """Optimizer-moment logical axes under ZeRO-1: the first logical axis
+    that resolves to nothing gains "fsdp" (= data) sharding."""
+    def one(ax):
+        rules = sh._CTX.rules
+        used = set()
+        for a in ax:
+            m = rules.get(a) if a else None
+            if isinstance(m, str):
+                used.add(m)
+            elif isinstance(m, tuple):
+                used.update(m)
+        out = []
+        done = False
+        for a in ax:
+            m = rules.get(a) if a else None
+            if not done and m is None and "data" not in used:
+                out.append("fsdp")       # -> "data" under default rules
+                done = True
+            else:
+                out.append(a)
+        return tuple(out)
+    is_ax = lambda x: isinstance(x, tuple) and all(
+        isinstance(a, (str, type(None))) for a in x)
+    return jax.tree.map(one, param_axes, is_leaf=is_ax)

@@ -1,0 +1,15 @@
+import warnings
+
+import numpy as np
+import pytest
+
+warnings.filterwarnings("ignore", category=DeprecationWarning)
+
+# NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 device.
+# Multi-device tests spawn subprocesses with their own flags
+# (tests/test_distributed.py, tests/test_dryrun.py).
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

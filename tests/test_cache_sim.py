@@ -1,0 +1,40 @@
+"""Cache-hierarchy simulator tests (the Fig. 3 instrument)."""
+import numpy as np
+
+from repro.core.cache_sim import Hierarchy, _SetAssocCache
+from repro.core.crs import CRS
+from repro.core.incrs import InCRS
+
+
+def test_lru_eviction():
+    c = _SetAssocCache(size_bytes=2 * 64, assoc=2, block_bytes=64)  # 1 set
+    assert not c.access(0)
+    assert not c.access(1)
+    assert c.access(0)          # hit, refreshes LRU
+    assert not c.access(2)      # evicts 1 (LRU)
+    assert c.access(0)
+    assert not c.access(1)
+
+
+def test_sequential_stream_prefetches():
+    h = Hierarchy()
+    st = h.simulate(range(0, 8 * 4096, 1))    # sequential words
+    assert st.prefetches > 0
+    # after warmup, sequential access should mostly hit
+    assert st.l1_misses / st.l1_accesses < 0.1
+
+
+def test_crs_vs_incrs_cache_ratio(rng):
+    # dataset must exceed L1 for the paper's time effect to show
+    dense = np.where(rng.random((128, 4096)) < 0.04,
+                     rng.normal(size=(128, 4096)), 0.0)
+    crs = CRS.from_dense(dense)
+    inc = InCRS.from_crs(crs)
+    tc, ti = [], []
+    for j in rng.choice(4096, 8, replace=False):
+        crs.get_column(int(j), tc)
+        inc.get_column(int(j), ti)
+    h = Hierarchy()
+    sc, si = h.simulate(tc), h.simulate(ti)
+    assert sc.l1_accesses > 5 * si.l1_accesses
+    assert sc.time_cycles > 1.3 * si.time_cycles

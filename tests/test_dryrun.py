@@ -1,0 +1,69 @@
+"""Dry-run machinery: collective parser, scan-undercount assumption, and a
+full (reduced-device) production-mesh cell in a subprocess."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.launch.dryrun import parse_collectives
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_HLO = """
+  %ar = f32[16,1024]{1,0} all-reduce(%x), replica_groups={{0,1,2,3}},
+  %ag.1 = bf16[4,2048]{1,0} all-gather(%y), replica_groups=[2,8]<=[16],
+  %rs = f32[8]{0} reduce-scatter(%z), replica_groups={{0,1},{2,3}},
+  %cp = f32[4,4]{1,0} collective-permute(%w), source_target_pairs={{0,1}}
+  %ar-done = f32[16,1024]{1,0} all-reduce-done(%ar2)
+  %not-a-coll = f32[2,2]{1,0} add(%a, %b)
+"""
+
+
+def test_parse_collectives():
+    c = parse_collectives(_HLO)
+    assert c["all-reduce"]["count"] == 1
+    assert c["all-reduce"]["result_bytes"] == 16 * 1024 * 4
+    # ring AR: 2*(g-1)/g * bytes, g=4
+    assert c["all-reduce"]["wire_bytes"] == pytest.approx(
+        2 * 3 / 4 * 16 * 1024 * 4)
+    assert c["all-gather"]["count"] == 1
+    assert c["all-gather"]["result_bytes"] == 4 * 2048 * 2
+    assert c["all-gather"]["wire_bytes"] == pytest.approx(
+        7 / 8 * 4 * 2048 * 2)      # iota groups [2,8] -> g=8
+    assert c["reduce-scatter"]["wire_bytes"] == pytest.approx(1 * 8 * 4)
+    assert c["collective-permute"]["count"] == 1
+
+
+def test_scan_bodies_counted_once():
+    """The premise of the roofline decomposition: XLA cost analysis does
+    NOT multiply while-loop bodies by trip count."""
+    import jax
+    import jax.numpy as jnp
+    a = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+
+    def f_scan(x):
+        return jax.lax.scan(lambda h, _: (jnp.tanh(h @ h), None), x,
+                            None, length=10)[0]
+
+    def f_unroll(x):
+        for _ in range(10):
+            x = jnp.tanh(x @ x)
+        return x
+    f1 = jax.jit(f_scan).lower(a).compile().cost_analysis()["flops"]
+    f2 = jax.jit(f_unroll).lower(a).compile().cost_analysis()["flops"]
+    assert f2 > 5 * f1
+
+
+@pytest.mark.slow
+def test_production_cell_compiles():
+    """End-to-end dry-run of one arch x shape on the real 512-fake-device
+    mesh, in a subprocess (so this process stays single-device)."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(_ROOT, "src"))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "internvl2-1b", "--shape", "decode_32k", "--multi-pod"],
+        capture_output=True, text=True, timeout=560, env=env)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "internvl2-1b x decode_32k" in out.stdout

@@ -1,0 +1,160 @@
+"""CRS / InCRS / BSR format tests, incl. the paper's Table I/II laws."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bsr import BSR, magnitude_block_mask
+from repro.core.crs import CRS, expected_ma_crs
+from repro.core.incrs import (InCRS, expected_ma_incrs,
+                              expected_ma_reduction, expected_storage_ratio)
+from repro.core.spmm import spmm_colaccess, spmm_index_match
+
+
+def _random_sparse(rng, m, n, d):
+    dense = np.where(rng.random((m, n)) < d,
+                     rng.normal(size=(m, n)), 0.0).astype(np.float64)
+    return dense
+
+
+# ----------------------------------------------------------------------
+def test_crs_roundtrip(rng):
+    dense = _random_sparse(rng, 37, 61, 0.1)
+    crs = CRS.from_dense(dense)
+    np.testing.assert_array_equal(crs.to_dense(), dense)
+
+
+def test_crs_locate_and_ma(rng):
+    dense = _random_sparse(rng, 20, 512, 0.05)
+    crs = CRS.from_dense(dense)
+    total_ma = 0
+    for _ in range(200):
+        i = int(rng.integers(20))
+        j = int(rng.integers(512))
+        v, ma = crs.locate(i, j)
+        assert v == dense[i, j]
+        total_ma += ma
+    avg = total_ma / 200
+    # Table I law: ~ 1/2 N D (+ row_ptr +value reads)
+    expect = expected_ma_crs(512, 0.05)
+    assert 0.5 * expect < avg < 3 * expect + 3
+
+
+def test_incrs_locate_exact(rng):
+    dense = _random_sparse(rng, 16, 600, 0.08)
+    inc = InCRS.from_dense(dense, section=64, block=8)
+    for _ in range(300):
+        i = int(rng.integers(16))
+        j = int(rng.integers(600))
+        v, ma = inc.locate(i, j)
+        assert v == dense[i, j]
+        # bounded by paper's b/2 + 1 law (+ row_ptr + value reads)
+        assert ma <= 8 + 4
+
+
+def test_incrs_ma_reduction(rng):
+    """Fig. 3 direction: InCRS column gathers use far fewer accesses."""
+    dense = _random_sparse(rng, 64, 2048, 0.04)
+    crs = CRS.from_dense(dense)
+    inc = InCRS.from_crs(crs)
+    cols = rng.choice(2048, 16, replace=False)
+    ma_c = sum(crs.get_column(int(j))[1] for j in cols)
+    ma_i = sum(inc.get_column(int(j))[1] for j in cols)
+    assert ma_c / ma_i > 5.0       # paper reports 14-49x on its datasets
+    for j in cols:
+        np.testing.assert_array_equal(inc.get_column(int(j))[0],
+                                      dense[:, int(j)])
+
+
+def test_incrs_storage_ratio(rng):
+    dense = _random_sparse(rng, 32, 2048, 0.04)
+    inc = InCRS.from_dense(dense)
+    measured = inc.storage_ratio()
+    model = expected_storage_ratio(0.04)
+    assert abs(measured - model) < 0.05
+
+
+def test_counter_vector_is_one_word():
+    """The packed counter-vector must fit 64 bits (paper §III-B)."""
+    from repro.core.incrs import COUNT_BITS, PREFIX_BITS, S_DEFAULT, B_DEFAULT
+    n_blocks = S_DEFAULT // B_DEFAULT
+    assert PREFIX_BITS + n_blocks * COUNT_BITS == 64
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 30), st.integers(2, 200),
+       st.floats(0.01, 0.5), st.integers(0, 2**31 - 1))
+def test_incrs_equals_crs_property(m, n, d, seed):
+    """Property: InCRS.locate == CRS.locate == dense for random matrices."""
+    rng = np.random.default_rng(seed)
+    dense = np.where(rng.random((m, n)) < d,
+                     rng.normal(size=(m, n)), 0.0)
+    crs = CRS.from_dense(dense)
+    inc = InCRS.from_crs(crs, section=32, block=8)
+    for _ in range(10):
+        i, j = int(rng.integers(m)), int(rng.integers(n))
+        assert inc.locate(i, j)[0] == crs.locate(i, j)[0] == dense[i, j]
+
+
+# ----------------------------------------------------------------------
+def test_spmm_colaccess_correct(rng):
+    a = CRS.from_dense(_random_sparse(rng, 12, 30, 0.2))
+    dense_b = _random_sparse(rng, 30, 25, 0.15)
+    b_crs = CRS.from_dense(dense_b)
+    b_inc = InCRS.from_dense(dense_b, section=16, block=4)
+    ref = a.to_dense() @ dense_b
+    c1, ma1 = spmm_colaccess(a, b_crs)
+    c2, ma2 = spmm_colaccess(a, b_inc)
+    np.testing.assert_allclose(c1, ref, rtol=1e-12)
+    np.testing.assert_allclose(c2, ref, rtol=1e-12)
+    assert ma2 < ma1
+
+
+def test_spmm_index_match(rng):
+    a = CRS.from_dense(_random_sparse(rng, 10, 40, 0.2))
+    bt = CRS.from_dense(_random_sparse(rng, 8, 40, 0.25))
+    c, cyc = spmm_index_match(a, bt)
+    np.testing.assert_allclose(c, a.to_dense() @ bt.to_dense().T, rtol=1e-12)
+    assert (cyc >= 0).all()
+
+
+# ----------------------------------------------------------------------
+def test_bsr_roundtrip_and_padding(rng):
+    dense = rng.normal(size=(64, 96))
+    mask = magnitude_block_mask(dense, (16, 16), 0.4)
+    bsr = BSR.from_mask(dense, mask, (16, 16))
+    got = bsr.to_dense()
+    full = np.repeat(np.repeat(mask, 16, 0), 16, 1)
+    np.testing.assert_array_equal(got, dense * full)
+    assert bsr.nnz_blocks == mask.sum()
+    # every block-row keeps >= 1 block
+    assert (np.diff(bsr.row_ptr) >= 1).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 4), st.floats(0.1, 1.0),
+       st.integers(0, 2**31 - 1))
+def test_bsr_mask_density_property(nbr, nbc, density, seed):
+    rng = np.random.default_rng(seed)
+    dense = rng.normal(size=(nbr * 8, nbc * 8))
+    mask = magnitude_block_mask(dense, (8, 8), density)
+    n_keep = max(1, int(round(density * nbr * nbc)))
+    assert mask.sum() >= min(n_keep, nbr)     # row-liveness can add blocks
+    assert mask.sum() <= nbr * nbc
+
+
+def test_incrs_binary_search_locate(rng):
+    """Footnote-2 binary search: same values, no more accesses than the
+    linear scan on dense-ish blocks."""
+    dense = np.where(rng.random((24, 800)) < 0.12,
+                     rng.normal(size=(24, 800)), 0.0)
+    inc = InCRS.from_dense(dense)
+    tot_lin = tot_bin = 0
+    for _ in range(300):
+        i = int(rng.integers(24))
+        j = int(rng.integers(800))
+        v1, a1 = inc.locate(i, j)
+        v2, a2 = inc.locate_binary(i, j)
+        assert v1 == v2 == dense[i, j]
+        tot_lin += a1
+        tot_bin += a2
+    assert tot_bin <= tot_lin * 1.1

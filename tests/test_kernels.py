@@ -1,0 +1,137 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bsr import BSR, magnitude_block_mask
+from repro.core.crs import CRS
+from repro.core.incrs import InCRS
+from repro.data.datasets import DatasetSpec, synthesize
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (200, 300, 150),
+                                   (64, 512, 96), (1, 128, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dense_mm(rng, m, k, n, dtype):
+    a = jnp.asarray(rng.normal(size=(m, k)), dtype)
+    b = jnp.asarray(rng.normal(size=(k, n)), dtype)
+    out = ops.dense_mm(a, b)
+    want = ref.matmul(a, b)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("block", [64, 128])
+@pytest.mark.parametrize("density", [0.2, 0.6, 1.0])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bsr_spmm_sweep(rng, block, density, dtype):
+    m, k, n = 2 * block, 3 * block, 170
+    d = rng.normal(size=(m, k)).astype(np.float32)
+    mask = magnitude_block_mask(d, (block, block), density)
+    bsr = BSR.from_mask(d, mask, (block, block))
+    bsr.values = np.asarray(bsr.values, dtype=np.float32)
+    b = jnp.asarray(rng.normal(size=(k, n)), dtype)
+    out = ops.bsr_matmul(bsr, b)
+    want = ref.bsr_spmm(bsr.values, bsr.col_idx, bsr.row_ptr, bsr.shape,
+                        bsr.block, b)
+    tol = 1e-3 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_bsr_spmm_empty_rows(rng):
+    d = rng.normal(size=(256, 256)).astype(np.float32)
+    mask = np.zeros((2, 2), bool)
+    mask[1, 0] = True                      # block-row 0 fully empty
+    bsr = BSR.from_mask(d, mask, (128, 128))
+    b = jnp.asarray(rng.normal(size=(256, 64)).astype(np.float32))
+    out = ops.bsr_matmul(bsr, b)
+    np.testing.assert_allclose(out, bsr.to_dense() @ np.asarray(b),
+                               rtol=1e-4, atol=1e-4)
+    assert np.allclose(np.asarray(out)[:128], 0.0)
+
+
+@pytest.mark.parametrize("rounds", [32, 128])
+@pytest.mark.parametrize("density", [0.02, 0.15])
+def test_index_match_spmm(rng, rounds, density):
+    a = synthesize(DatasetSpec("a", 96, 500, density), seed=7)
+    bt = synthesize(DatasetSpec("b", 70, 500, density * 1.5), seed=8)
+    out = ops.index_match_matmul(a, bt, rounds=rounds)
+    want = a.to_dense().astype(np.float32) @ \
+        bt.to_dense().astype(np.float32).T
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-3, atol=1e-3)
+
+
+def test_index_match_ref_oracle(rng):
+    """ops.prep_rounds + ref.index_match_spmm == dense math."""
+    a = synthesize(DatasetSpec("a", 40, 200, 0.1), seed=9)
+    ai, av = ops.prep_rounds(a, rounds=32, pad_rows_to=8)
+    dense = np.asarray(ref.round_densify(ai, av, 200, 32))[:40]
+    np.testing.assert_allclose(dense, a.to_dense(), rtol=1e-6)
+
+
+@pytest.mark.parametrize("section,block", [(64, 8), (256, 32)])
+def test_incrs_gather(rng, section, block):
+    a = synthesize(DatasetSpec("g", 24, 700, 0.07), seed=10)
+    inc = InCRS.from_crs(a, section=section, block=block)
+    out = ops.incrs_to_dense(inc)
+    np.testing.assert_allclose(np.asarray(out), a.to_dense(),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_bsr_vs_index_match_consistency(rng):
+    """Both kernels compute the same product where both apply: dense A
+    blocks x dense B == index-matching on the same data."""
+    d = rng.normal(size=(128, 256)).astype(np.float32)
+    bsr = BSR.from_dense(d, (128, 128))
+    b = rng.normal(size=(256, 128)).astype(np.float32)
+    out1 = np.asarray(ops.bsr_matmul(bsr, jnp.asarray(b)))
+    a_crs = CRS.from_dense(d)
+    bt_crs = CRS.from_dense(b.T.copy())
+    out2 = np.asarray(ops.index_match_matmul(a_crs, bt_crs, rounds=128))
+    np.testing.assert_allclose(out1, out2, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("window,cap", [(None, None), (37, None),
+                                        (None, 6.0), (50, 6.0)])
+def test_flash_attention_kernel(rng, window, cap):
+    """Pallas flash attention (GQA lanes, online softmax in VMEM scratch)
+    vs dense reference, incl. sliding windows and soft caps."""
+    B, S, KV, G, hd = 2, 200, 2, 3, 64
+    q = jnp.asarray(rng.normal(size=(B, S, KV, G, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, S, KV, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, S, KV, hd)).astype(np.float32))
+    out = ops.flash_mha(q, k, v, window=window, soft_cap=cap)
+    pos = jnp.arange(S)
+    lg = jnp.einsum("bqkgd,bskd->bkgqs", q, k) / np.sqrt(hd)
+    if cap:
+        lg = cap * jnp.tanh(lg / cap)
+    m = pos[None, :] <= pos[:, None]
+    if window:
+        m = m & (pos[None, :] > pos[:, None] - window)
+    lg = jnp.where(m[None, None, None], lg, -1e30)
+    want = jnp.einsum("bkgqs,bskd->bqkgd", jax.nn.softmax(lg, -1), v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_kernel_block_skipping(rng):
+    """Blocks beyond the window are skipped but results stay exact even
+    when S is not a block multiple (positional masking of pads)."""
+    B, S, KV, G, hd = 1, 300, 1, 2, 32
+    q = jnp.asarray(rng.normal(size=(B, S, KV, G, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, S, KV, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, S, KV, hd)).astype(np.float32))
+    out = ops.flash_mha(q, k, v, window=64, bq=128, bk=128)
+    pos = jnp.arange(S)
+    lg = jnp.einsum("bqkgd,bskd->bkgqs", q, k) / np.sqrt(hd)
+    m = (pos[None, :] <= pos[:, None]) & (pos[None, :] > pos[:, None] - 64)
+    lg = jnp.where(m[None, None, None], lg, -1e30)
+    want = jnp.einsum("bkgqs,bskd->bqkgd", jax.nn.softmax(lg, -1), v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

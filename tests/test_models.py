@@ -1,0 +1,160 @@
+"""Per-architecture smoke tests + decode/teacher-forcing consistency +
+flash-attention equivalence. One reduced config per assigned arch family."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import layers, model as M
+from repro.models.config import BlockSparsity, ModelConfig
+
+
+def _batch(cfg, B=2, S=32, key=None):
+    key = key or jax.random.PRNGKey(1)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.input_mode == "embeds":
+        batch["prefix_embeds"] = jax.random.normal(
+            key, (B, cfg.n_prefix_embeds, cfg.d_model), jnp.float32)
+    return batch
+
+
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("arch", configs.ARCH_NAMES)
+def test_arch_smoke(arch):
+    """Reduced config of each assigned architecture: one train step's loss
+    is finite, logits have the right shape, prefill+decode run."""
+    cfg = configs.get_smoke(arch)
+    params, axes = M.init(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    logits = M.forward(cfg, params, batch["tokens"],
+                       prefix_embeds=batch.get("prefix_embeds"),
+                       mode="train", remat=False)
+    npfx = cfg.n_prefix_embeds if cfg.input_mode == "embeds" else 0
+    assert logits.shape == (2, 32 + npfx, cfg.padded_vocab())
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    loss = M.loss_fn(cfg, params, batch)
+    assert np.isfinite(float(loss))
+    # gradient exists and is finite for every leaf
+    grads = jax.grad(lambda p: M.loss_fn(cfg, p, batch))(params)
+    for leaf in jax.tree.leaves(grads):
+        assert np.isfinite(np.asarray(leaf, np.float32)).all()
+    # prefill + decode steps
+    lg, cache = M.prefill_step(cfg, params, batch["tokens"],
+                               prefix_embeds=batch.get("prefix_embeds"),
+                               alloc_seq=40, cache_dtype=jnp.float32)
+    assert lg.shape == (2, cfg.padded_vocab())
+    lg2, _ = M.decode_step(cfg, params, batch["tokens"][:, :1], cache,
+                           pos=32 + npfx)
+    assert np.isfinite(np.asarray(lg2, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ["granite-34b", "mixtral-8x7b",
+                                  "mamba2-370m", "recurrentgemma-2b"])
+def test_decode_matches_teacher_forcing(arch):
+    """Prefill+decode logits == full-sequence forward, per family."""
+    cfg = configs.get_smoke(arch)
+    params, _ = M.init(cfg, jax.random.PRNGKey(2))
+    B, S, n_dec = 2, 16, 5
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, S + n_dec), 0,
+                              cfg.vocab_size)
+    full = M.forward(cfg, params, toks, mode="train", remat=False)
+    lg, cache = M.prefill_step(cfg, params, toks[:, :S],
+                               alloc_seq=S + n_dec,
+                               cache_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, S - 1]),
+                               rtol=2e-2, atol=2e-2)
+    for t in range(n_dec):
+        lg, cache = M.decode_step(cfg, params, toks[:, S + t:S + t + 1],
+                                  cache, pos=S + t)
+        np.testing.assert_allclose(np.asarray(lg),
+                                   np.asarray(full[:, S + t]),
+                                   rtol=2e-2, atol=2e-2)
+
+
+def test_ring_buffer_windowed_cache():
+    """Sliding-window cache smaller than the total sequence stays exact."""
+    cfg = ModelConfig("swa", 2, 64, 4, 2, 128, 256, sliding_window=8,
+                      dtype="float32")
+    params, _ = M.init(cfg, jax.random.PRNGKey(4))
+    toks = jax.random.randint(jax.random.PRNGKey(5), (1, 30), 0, 256)
+    full = M.forward(cfg, params, toks, mode="train", remat=False)
+    lg, cache = M.prefill_step(cfg, params, toks[:, :16], alloc_seq=30,
+                               cache_dtype=jnp.float32)
+    assert cache["block0_attn"]["k"].shape[2] == 8     # ring == window
+    for t in range(16, 30):
+        np.testing.assert_allclose(np.asarray(lg),
+                                   np.asarray(full[:, t - 1]),
+                                   rtol=2e-2, atol=2e-2)
+        lg, cache = M.decode_step(cfg, params, toks[:, t:t + 1], cache,
+                                  pos=t)
+
+
+def test_flash_equals_reference():
+    """Grouped flash attention == dense GQA reference, with windows/caps."""
+    B, S, KV, G, hd = 2, 70, 3, 2, 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, S, KV, G, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, KV, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, KV, hd))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    for window, cap in [(None, None), (13, None), (None, 4.0), (9, 4.0)]:
+        out = layers._flash_attention(q, k, v, pos, pos, window=window,
+                                      soft_cap=cap, chunk=16)
+        lg = jnp.einsum("bqkgd,bskd->bkgqs", q, k) / np.sqrt(hd)
+        if cap:
+            lg = cap * jnp.tanh(lg / cap)
+        m = pos[:, None, :] <= pos[:, :, None]
+        if window:
+            m &= pos[:, None, :] > pos[:, :, None] - window
+        lg = jnp.where(m[:, None, None], lg, -1e30)
+        want = jnp.einsum("bkgqs,bskd->bqkgd", jax.nn.softmax(lg, -1), v)
+        np.testing.assert_allclose(out, want, rtol=3e-5, atol=3e-5)
+
+
+def test_unrolled_scans_equal_scan():
+    """The dry-run's unrolled lowering computes the same function."""
+    cfg = configs.get_smoke("recurrentgemma-2b")
+    params, _ = M.init(cfg, jax.random.PRNGKey(6))
+    batch = _batch(cfg)
+    l1 = M.loss_fn(cfg, params, batch, remat=False)
+    with layers.unroll_scans():
+        l2 = M.loss_fn(cfg, params, batch, remat=False)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+
+
+def test_sparse_ffn_model_trains():
+    cfg = ModelConfig("sp", 2, 64, 4, 2, 128, 256, dtype="float32",
+                      sparsity=BlockSparsity(block=32, density=0.5))
+    params, _ = M.init(cfg, jax.random.PRNGKey(7))
+    batch = _batch(cfg)
+    loss, grads = jax.value_and_grad(
+        lambda p: M.loss_fn(cfg, p, batch))(params)
+    assert np.isfinite(float(loss))
+    # the mask params receive zero gradient (they're fixed metadata)
+    gm = grads["groups"]["block0_attn"]["ffn"]["mask_w_up"]
+    assert np.allclose(np.asarray(gm), 0.0)
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With capacity_factor >= 1 and balanced-ish routing most tokens keep
+    their experts; the layer output is finite either way."""
+    cfg = ModelConfig("moe", 2, 64, 4, 4, 0, 256, n_experts=4,
+                      n_experts_per_tok=2, moe_d_ff=64, dtype="float32",
+                      capacity_factor=1.5)
+    params, _ = M.init(cfg, jax.random.PRNGKey(8))
+    batch = _batch(cfg, B=2, S=64)
+    loss = M.loss_fn(cfg, params, batch)
+    assert np.isfinite(float(loss))
+
+
+def test_param_counts_match_published():
+    """Analytic parameter counts sit near the published model sizes."""
+    expect = {"mixtral-8x7b": 46.7e9, "llama3-405b": 405e9,
+              "granite-34b": 34e9, "phi3-medium-14b": 14e9,
+              "mistral-large-123b": 123e9, "mamba2-370m": 0.37e9}
+    for name, n in expect.items():
+        got = configs.get(name).param_count()
+        assert abs(got - n) / n < 0.2, (name, got, n)

@@ -1,0 +1,87 @@
+"""System-invariant property tests (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.crs import CRS
+from repro.kernels import ops, ref
+from repro.train.optimizer import QBLOCK, _dequant, _quant
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(1, 5), min_size=1, max_size=3),
+       st.integers(0, 2**31 - 1))
+def test_quant_roundtrip_error_bound(dims, seed):
+    """int8 quantization error <= scale/2 per element, shape preserved."""
+    rng = np.random.default_rng(seed)
+    shape = tuple(d * (QBLOCK if i == len(dims) - 1 and rng.random() < 0.5
+                       else 7) for i, d in enumerate(dims))
+    x = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    q, s = _quant(x)
+    assert q.shape == x.shape
+    assert q.dtype == jnp.int8
+    back = _dequant(q, s, shape)
+    # per-element error bounded by half a quantization step of its block
+    if shape[-1] % QBLOCK == 0:
+        step = np.repeat(np.asarray(s), QBLOCK, axis=-1).reshape(shape)
+    else:
+        step = np.broadcast_to(np.asarray(s), shape)
+    # worst case is exactly scale/2; allow 1% fp32 arithmetic slack
+    assert (np.abs(np.asarray(back) - np.asarray(x)) <=
+            step * 0.505 + 1e-7).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 40), st.integers(8, 300), st.floats(0.02, 0.5),
+       st.integers(8, 64), st.integers(0, 2**31 - 1))
+def test_prep_rounds_densify_roundtrip(m, n, d, rounds, seed):
+    """CRS -> per-round padded -> densified == original dense matrix."""
+    rng = np.random.default_rng(seed)
+    dense = np.where(rng.random((m, n)) < d,
+                     rng.normal(size=(m, n)), 0.0).astype(np.float32)
+    crs = CRS.from_dense(dense)
+    idx, val = ops.prep_rounds(crs, rounds, pad_rows_to=8)
+    assert idx.shape[2] <= rounds          # never more than R nz per round
+    got = np.asarray(ref.round_densify(idx, val, n, rounds))[:m]
+    np.testing.assert_allclose(got, dense, rtol=1e-6, atol=1e-7)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 3), st.integers(0, 2**31 - 1))
+def test_bsr_matmul_linear_in_inputs(nbr, nbc, seed):
+    """SpMM is linear: kernel(A, x+y) == kernel(A, x) + kernel(A, y)."""
+    from repro.core.bsr import BSR
+    rng = np.random.default_rng(seed)
+    blk = 128
+    dense = rng.normal(size=(nbr * blk, nbc * blk)).astype(np.float32)
+    dense *= rng.random((nbr * blk, nbc * blk)) < 0.5
+    bsr = BSR.from_dense(dense, (blk, blk))
+    x = jnp.asarray(rng.normal(size=(nbc * blk, 64)).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=(nbc * blk, 64)).astype(np.float32))
+    lhs = ops.bsr_matmul(bsr, x + y)
+    rhs = ops.bsr_matmul(bsr, x) + ops.bsr_matmul(bsr, y)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_sharding_resolve_never_overshards():
+    """resolve() with shapes: every sharded dim is divisible; no mesh axis
+    used twice."""
+    import itertools
+
+    from jax.sharding import Mesh
+    from repro.models import sharding as sh
+    devs = np.array(jax.devices()[:1]).reshape(1, 1, 1)
+    mesh = Mesh(devs, ("pod", "data", "model"))
+    with sh.axis_rules(mesh):
+        for logical in itertools.permutations(
+                ["batch", "vocab", "mlp", "embed"], 3):
+            for shape in [(1, 1, 1), (2, 3, 5), (16, 32, 64)]:
+                spec = sh.resolve(logical, shape)
+                used = []
+                for ent in spec:
+                    if ent is None:
+                        continue
+                    used.extend([ent] if isinstance(ent, str) else ent)
+                assert len(used) == len(set(used))
