@@ -1,8 +1,20 @@
 """Kernel micro-benchmarks (interpret mode on CPU — correctness-path
 timings plus DERIVED work metrics; real-TPU timing comes from the roofline
-terms, not from this host)."""
+terms, not from this host).
+
+``--json PATH`` additionally emits a machine-readable record (schema
+``bench_kernels/v1``) so the perf trajectory is tracked across PRs:
+
+  {"schema": "bench_kernels/v1",
+   "rows": [{"name": ..., "us": ..., "derived": ...}, ...],
+   "comparisons": {"incrs_spmm_fused_vs_twopass":
+       {"fused_us": ..., "twopass_us": ..., "speedup": ...,
+        "workload": "128x1024 d=0.03 @ 256 cols"}}}
+"""
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -27,6 +39,7 @@ def _time(fn, *args, reps: int = 3):
 def run(seed: int = 0):
     rng = np.random.default_rng(seed)
     rows = []
+    comparisons = {}
     m = k = n = 256
     a = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
     b = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
@@ -50,15 +63,53 @@ def run(seed: int = 0):
     rows.append(("index_match_spmm", us, f"nnz={a_sp.nnz}"))
 
     from repro.core.incrs import InCRS
+    t0 = time.perf_counter()
     inc = InCRS.from_crs(a_sp)
+    prep_ms = (time.perf_counter() - t0) * 1e3
+    rows.append(("incrs_from_crs", prep_ms * 1e3, f"nnz={a_sp.nnz}"))
     us = _time(lambda: ops.incrs_to_dense(inc))
     rows.append(("incrs_gather", us, f"sections={inc.n_sections}"))
-    return rows
+
+    # Fused single-pass SpMM vs the incrs_to_dense -> dense_mm two-pass
+    # pipeline on the SAME workload (acceptance: fused must win).
+    bk = jnp.asarray(rng.normal(size=(spec.n, 256)).astype(np.float32))
+    fused_us = _time(lambda x: ops.incrs_spmm(inc, x), bk)
+    rows.append(("incrs_spmm_fused", fused_us,
+                 f"nnz={a_sp.nnz};sections={inc.n_sections}"))
+    twopass_us = _time(lambda x: ops.dense_mm(ops.incrs_to_dense(inc), x), bk)
+    rows.append(("incrs_spmm_twopass", twopass_us,
+                 "pipeline=incrs_to_dense+dense_mm"))
+    comparisons["incrs_spmm_fused_vs_twopass"] = {
+        "fused_us": fused_us,
+        "twopass_us": twopass_us,
+        "speedup": twopass_us / fused_us,
+        "workload": f"{spec.m}x{spec.n} d={spec.density} @ 256 cols",
+    }
+    return rows, comparisons
 
 
-def main():
-    for name, us, derived in run():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help="write machine-readable results to this path")
+    args = ap.parse_args(argv)
+    rows, comparisons = run()
+    for name, us, derived in rows:
         print(f"kernel,{name},{us:.0f}us,{derived}")
+    for name, c in comparisons.items():
+        print(f"compare,{name},speedup={c['speedup']:.2f}x")
+    if args.json:
+        record = {
+            "schema": "bench_kernels/v1",
+            "backend": jax.default_backend(),
+            "interpret": ops.INTERPRET,
+            "rows": [{"name": n, "us": round(u, 1), "derived": d}
+                     for n, u, d in rows],
+            "comparisons": comparisons,
+        }
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

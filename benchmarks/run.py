@@ -30,7 +30,7 @@ def main() -> None:
     _section("Fig 5 + Table V: three architectures, eight datasets")
     fig5_architectures.main()
     _section("Kernel micro-benchmarks (interpret mode)")
-    kernel_bench.main()
+    kernel_bench.main([])
     if os.path.exists("roofline_all.json"):
         _section("Roofline terms per (arch x shape) [paper-faithful baseline]")
         from . import roofline

@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Tier-1 CI: fast test subset (slow-marked end-to-end tests are deselected
+# by pytest.ini) + kernel micro-benchmarks with a machine-readable record.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q
+python benchmarks/kernel_bench.py --json BENCH_kernels.json

@@ -99,20 +99,24 @@ class InCRS:
         m, n = crs.shape
         assert section % block == 0
         n_blocks = section // block
-        assert block <= (1 << count_bits) - 1 or block == (1 << count_bits) - 1 \
-            or block < (1 << count_bits), "block count must fit count_bits"
+        # A full block holds ``block`` non-zeros; that count must fit the
+        # per-block field.
+        assert block <= (1 << count_bits) - 1, (
+            f"block count {block} must fit count_bits={count_bits} "
+            f"(max {(1 << count_bits) - 1})")
         n_sections = -(-n // section)
-        prefix = np.zeros((m, n_sections), dtype=np.int64)
         blocks = np.zeros((m, n_sections, n_blocks), dtype=np.int64)
-        for i in range(m):
-            s, e = crs.row_ptr[i], crs.row_ptr[i + 1]
-            cols = crs.col_idx[s:e]
-            sec = cols // section
-            blk = (cols % section) // block
-            np.add.at(blocks, (i, sec, blk), 1)
-            # prefix[i, t] = NZs before section t in row i
-            per_sec = np.bincount(sec, minlength=n_sections)
-            prefix[i] = np.concatenate([[0], np.cumsum(per_sec)[:-1]])
+        if crs.nnz:
+            row_of = np.repeat(np.arange(m),
+                               np.diff(crs.row_ptr).astype(np.int64))
+            cols = crs.col_idx.astype(np.int64)
+            np.add.at(blocks, (row_of, cols // section,
+                               (cols % section) // block), 1)
+        # prefix[i, t] = NZs before section t in row i — exclusive cumsum of
+        # the per-section counts along the section axis.
+        per_sec = blocks.sum(axis=-1)
+        prefix = np.zeros((m, n_sections), dtype=np.int64)
+        prefix[:, 1:] = np.cumsum(per_sec, axis=1)[:, :-1]
         if prefix.max(initial=0) >= (1 << prefix_bits):
             raise ValueError("row has more NZs than prefix field can count "
                              f"({prefix.max()} >= 2^{prefix_bits})")
@@ -129,6 +133,13 @@ class InCRS:
         lo, hi = self.counters[i, sec, 0], self.counters[i, sec, 1]
         p, b = _unpack64(np.asarray(lo), np.asarray(hi), self.n_blocks)
         return int(p), b
+
+    def counters_unpacked(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Batch-unpack every counter word: (prefix (M, n_sections),
+        blocks (M, n_sections, n_blocks)) — one ``_unpack64`` call over the
+        whole counter array instead of one per (row, section)."""
+        return _unpack64(self.counters[..., 0], self.counters[..., 1],
+                         self.n_blocks)
 
     def locate(self, i: int, j: int,
                trace: Optional[List[int]] = None) -> Tuple[float, int]:

@@ -1,0 +1,13 @@
+"""Version compatibility for the Pallas TPU API surface.
+
+jax renamed ``pltpu.TPUCompilerParams`` -> ``pltpu.CompilerParams`` across
+releases; resolve whichever this jax provides so the kernels run on both.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
+
+__all__ = ["CompilerParams"]

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
+
 
 def _kernel(idx_ref, val_ref, o_ref, *, section: int):
     idx = idx_ref[:, 0, :]                 # (bm, smax) local col in section
@@ -56,6 +58,6 @@ def incrs_gather(idx: jnp.ndarray, val: jnp.ndarray, *, section: int = 256,
         out_shape=jax.ShapeDtypeStruct((m, n_sections * section),
                                        jnp.float32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")),
     )(idx, val)

@@ -1,0 +1,97 @@
+"""Fused InCRS SpMM: section-stripe decompression + MXU accumulate, one pass.
+
+The two-pass pipeline (``incrs_gather`` -> dense ``(M, K)`` in HBM ->
+``dense_mm``) pays the full dense-matmul memory traffic the InCRS format was
+designed to avoid. This kernel fuses the two: per ``(row-tile, col-tile,
+section)`` grid step it
+
+  1. one-hot-expands the section's sparse stripe (padded per-(row, section)
+     ``idx``/``val`` from ``ops.prep_sections``, located purely via the
+     packed counter-vectors) into a dense ``(bm, section)`` slab in VMEM, and
+  2. immediately contracts that slab against the matching ``(section, bn)``
+     tile of the dense operand into a VMEM f32 accumulator.
+
+The decompressed stripe lives only in VMEM for the duration of one grid
+step — the ``(M, K)`` dense intermediate never exists in HBM. The section
+grid axis is the reduction ("operand stream" of the paper's Fig. 2 mesh);
+row/col tiles are parallel. This is the same fusion that streaming SpMM
+accelerators (Sextans, SpArch) perform between their decompression front-end
+and their accumulation array.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ._compat import CompilerParams
+
+
+# Peak size of the transient one-hot tensor (bm, chunk, section) f32. At
+# high density smax approaches `section`, and an unchunked expansion would
+# be bm*smax*section*4B — 16MB at bm=128/smax=128/section=256, i.e. a whole
+# TPU core's VMEM. Chunking the smax axis bounds it regardless of density.
+_ONEHOT_BYTES = 2 * 1024 * 1024
+
+
+def _kernel(idx_ref, val_ref, b_ref, o_ref, acc_ref, *, section: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    idx = idx_ref[:, 0, :]                    # (bm, smax) local col, -1 pad
+    val = val_ref[:, 0, :]
+    bm, smax = idx.shape
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, section), 2)
+    chunk = max(1, _ONEHOT_BYTES // (bm * section * 4))
+    # Dense stripe of A for this (row-tile, section) — exists only in VMEM;
+    # built chunk-by-chunk so the one-hot transient stays VMEM-sized.
+    stripe = jnp.zeros((bm, section), jnp.float32)
+    for k0 in range(0, smax, chunk):
+        oh = (idx[:, k0:k0 + chunk, None] == iota).astype(jnp.float32)
+        stripe += jnp.einsum(
+            "rks,rk->rs", oh, val[:, k0:k0 + chunk].astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+    acc_ref[...] += jnp.dot(stripe, b_ref[...].astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("section", "bm", "bn", "interpret"))
+def incrs_spmm(idx: jnp.ndarray, val: jnp.ndarray, b: jnp.ndarray, *,
+               section: int = 256, bm: int = 128, bn: int = 128,
+               interpret: bool = False) -> jnp.ndarray:
+    """C[M, N] = decompress(idx, val) @ B without materializing the left
+    operand in HBM.
+
+    idx : (M, n_sections, smax) int32 local column within section, -1 = pad
+    val : (M, n_sections, smax) values
+    b   : (n_sections * section, N) dense operand (pre-padded)
+    """
+    m, n_sections, smax = idx.shape
+    k, n = b.shape
+    assert m % bm == 0 and n % bn == 0, ((m, n), (bm, bn))
+    assert k == n_sections * section, (k, n_sections, section)
+    grid = (m // bm, n // bn, n_sections)
+    return pl.pallas_call(
+        functools.partial(_kernel, section=section),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, 1, smax), lambda i, j, s: (i, s, 0)),
+            pl.BlockSpec((bm, 1, smax), lambda i, j, s: (i, s, 0)),
+            pl.BlockSpec((section, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(idx, val, b)

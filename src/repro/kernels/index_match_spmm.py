@@ -33,6 +33,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
+
 
 def _densify(idx, val, rounds: int):
     """(rows, rmax) sparse -> (rows, R) dense stripe via one-hot matmul."""
@@ -91,6 +93,6 @@ def index_match_spmm(a_idx: jnp.ndarray, a_val: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(a_idx, a_val, b_idx, b_val)

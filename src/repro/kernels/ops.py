@@ -6,7 +6,9 @@ the backend.
 """
 from __future__ import annotations
 
-from typing import Tuple
+import dataclasses
+import weakref
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +22,7 @@ from .bsr_spmm import bsr_spmm as _bsr_spmm_kernel
 from .flash_attention import flash_attention as _flash_kernel
 from .dense_mm import dense_mm as _dense_mm_kernel
 from .incrs_gather import incrs_gather as _incrs_gather_kernel
+from .incrs_spmm import incrs_spmm as _incrs_spmm_kernel
 from .index_match_spmm import index_match_spmm as _index_match_kernel
 
 INTERPRET = jax.default_backend() != "tpu"
@@ -100,6 +103,7 @@ def prep_rounds(crs: CRS, rounds: int, rmax: int | None = None,
     m, n = crs.shape
     n_rounds = max(1, -(-n // rounds))
     counts = np.zeros((m, n_rounds), dtype=np.int64)
+    row_of = None
     if crs.nnz:
         row_of = np.repeat(np.arange(m), np.diff(crs.row_ptr).astype(np.int64))
         np.add.at(counts, (row_of, crs.col_idx // rounds), 1)
@@ -108,17 +112,18 @@ def prep_rounds(crs: CRS, rounds: int, rmax: int | None = None,
     mp = -(-m // pad_rows_to) * pad_rows_to
     idx = np.full((mp, n_rounds, rmax), -1, dtype=np.int32)
     val = np.zeros((mp, n_rounds, rmax), dtype=np.float32)
-    for i in range(m):
-        s, e = crs.row_ptr[i], crs.row_ptr[i + 1]
-        cols = crs.col_idx[s:e]
-        r = cols // rounds
-        slot = np.zeros_like(cols)
-        # slot within round = running count per round
-        for rr in np.unique(r):
-            sel = r == rr
-            slot[sel] = np.arange(sel.sum())
-        idx[i, r, slot] = cols % rounds
-        val[i, r, slot] = crs.values[s:e]
+    if crs.nnz:
+        # Non-zeros are sorted by (row, col), hence by (row, round): each
+        # (row, round) group is one contiguous run. Slot-within-round =
+        # position in the run = global position minus the group's exclusive
+        # prefix sum — all rows at once, no Python loop.
+        r = crs.col_idx.astype(np.int64) // rounds
+        group_start = np.concatenate(
+            [[0], np.cumsum(counts.reshape(-1))[:-1]])
+        g = row_of * n_rounds + r
+        slot = np.arange(crs.nnz, dtype=np.int64) - group_start[g]
+        idx[row_of, r, slot] = crs.col_idx % rounds
+        val[row_of, r, slot] = crs.values
     return jnp.asarray(idx), jnp.asarray(val)
 
 
@@ -149,39 +154,145 @@ def prep_sections(incrs: InCRS, pad_rows_to: int = 8
     """InCRS -> padded per-(row, section) (idx, val) using ONLY the packed
     counter-vectors for location (the paper's access path): the prefix word
     gives each section's start offset inside the row, the block counts give
-    its length. No row scan ever happens."""
+    its length. No row scan ever happens.
+
+    Fully vectorized: one batched ``_unpack64`` over the whole counter array
+    yields every (start, count) span at once; the gather + scatter runs over
+    all non-zeros in one shot.
+    """
     m, n = incrs.shape
     crs = incrs.crs
     n_sections = incrs.n_sections
-    smax = 1
-    spans = np.zeros((m, n_sections, 2), dtype=np.int64)
-    for i in range(m):
-        base = int(crs.row_ptr[i])
-        for s in range(n_sections):
-            prefix, blocks = incrs.counter(i, s)
-            cnt = int(blocks.sum())
-            spans[i, s] = (base + prefix, cnt)
-            smax = max(smax, cnt)
+    prefix, blocks = incrs.counters_unpacked()
+    cnt = blocks.sum(axis=-1)                          # (m, n_sections)
+    starts = crs.row_ptr[:m, None] + prefix            # (m, n_sections)
+    smax = max(1, int(cnt.max(initial=0)))
     mp = -(-m // pad_rows_to) * pad_rows_to
     idx = np.full((mp, n_sections, smax), -1, dtype=np.int32)
     val = np.zeros((mp, n_sections, smax), dtype=np.float32)
-    for i in range(m):
-        for s in range(n_sections):
-            start, cnt = spans[i, s]
-            if cnt:
-                cols = crs.col_idx[start:start + cnt]
-                idx[i, s, :cnt] = cols - s * incrs.section
-                val[i, s, :cnt] = crs.values[start:start + cnt]
+    total = int(cnt.sum())
+    if total:
+        flat_cnt = cnt.reshape(-1)
+        # slot-within-section for every NZ: global position minus its
+        # group's exclusive prefix sum (groups are (row, section) spans).
+        off = np.concatenate([[0], np.cumsum(flat_cnt)[:-1]])
+        slot = np.arange(total, dtype=np.int64) - np.repeat(off, flat_cnt)
+        src = np.repeat(starts.reshape(-1), flat_cnt) + slot
+        grid_i, grid_s = np.indices((m, n_sections))
+        rows = np.repeat(grid_i.reshape(-1), flat_cnt)
+        secs = np.repeat(grid_s.reshape(-1), flat_cnt)
+        idx[rows, secs, slot] = crs.col_idx[src] - secs * incrs.section
+        val[rows, secs, slot] = crs.values[src]
     return jnp.asarray(idx), jnp.asarray(val)
+
+
+# ----------------------------------------------------------------------
+# eq=False: the generated __eq__/__hash__ would compare jnp arrays and raise;
+# identity semantics are the correct ones for a cached device artifact.
+@dataclasses.dataclass(frozen=True, eq=False)
+class PreparedOperand:
+    """Device-ready section-stripe form of one InCRS operand.
+
+    Prep (counter unpack + scatter) runs once; every subsequent SpMM against
+    the same operand reuses the arrays. Produced by ``prepare_incrs`` which
+    memoizes per live InCRS object.
+    """
+    idx: jnp.ndarray              # (Mp, n_sections, smax) int32, -1 = pad
+    val: jnp.ndarray              # (Mp, n_sections, smax) f32
+    shape: Tuple[int, int]        # original (M, K) of the sparse operand
+    section: int
+
+    @property
+    def n_sections(self) -> int:
+        return self.idx.shape[1]
+
+    @property
+    def padded_rows(self) -> int:
+        return self.idx.shape[0]
+
+
+# id() can be recycled after an object dies — each cache entry carries a
+# weakref that must still point at the SAME object to count as a hit.
+_PREP_CACHE: Dict[Tuple[int, int, int, int],
+                  Tuple[weakref.ref, PreparedOperand]] = {}
+_PREP_CACHE_MAX = 64
+
+
+def prepare_incrs(incrs: InCRS, *, pad_rows_to: int = 128) -> PreparedOperand:
+    """Prep an InCRS operand for the fused SpMM kernel, memoized.
+
+    Repeated SpMMs against the same live InCRS object (serving engines,
+    sparse layers) pay the host-side format prep exactly once.
+
+    The operand is treated as IMMUTABLE once prepped: mutating
+    ``incrs.crs`` in place afterwards leaves the cached arrays stale.
+    Rebuild the InCRS (or call ``invalidate_prepared``) after mutation.
+    """
+    key = (id(incrs), incrs.section, incrs.block, pad_rows_to)
+    hit = _PREP_CACHE.get(key)
+    if hit is not None and hit[0]() is incrs:
+        return hit[1]
+    idx, val = prep_sections(incrs, pad_rows_to=pad_rows_to)
+    prep = PreparedOperand(idx, val, incrs.shape, incrs.section)
+    if len(_PREP_CACHE) >= _PREP_CACHE_MAX:
+        _PREP_CACHE.pop(next(iter(_PREP_CACHE)))
+    _PREP_CACHE[key] = (weakref.ref(incrs), prep)
+    # Drop the entry (and its device arrays) the moment the operand dies —
+    # without this, a dead entry pins idx/val until the cap-eviction path.
+    weakref.finalize(incrs, _PREP_CACHE.pop, key, None)
+    return prep
+
+
+def invalidate_prepared(incrs: InCRS) -> None:
+    """Evict every cached ``PreparedOperand`` of ``incrs`` — required after
+    mutating its CRS data in place (prep treats operands as immutable)."""
+    for k in [k for k in _PREP_CACHE if k[0] == id(incrs)]:
+        _PREP_CACHE.pop(k, None)
+
+
+def incrs_spmm(a: InCRS | PreparedOperand, b, *, bm: int = 128,
+               bn: int | None = None, interpret: bool | None = None):
+    """C = A @ B fused: InCRS section stripes are one-hot-expanded in VMEM
+    and contracted on the MXU in the same grid step — the dense (M, K)
+    intermediate of ``incrs_to_dense -> dense_mm`` never touches HBM.
+
+    ``a`` may be a raw InCRS (prepped through the memo cache) or an explicit
+    ``PreparedOperand``. ``bn`` defaults to a wide (512-capped) col tile:
+    every col tile re-expands the section stripe, so fewer/wider tiles do
+    strictly less decompression work. Returns C[:M, :N] unpadded, f32.
+    """
+    interpret = INTERPRET if interpret is None else interpret
+    prep = a if isinstance(a, PreparedOperand) else \
+        prepare_incrs(a, pad_rows_to=bm)
+    assert prep.padded_rows % bm == 0, (prep.padded_rows, bm)
+    m, k = prep.shape
+    k2, n = b.shape
+    assert k == k2, (prep.shape, b.shape)
+    if bn is None:
+        # Fewest ~512-wide tiles, then shrink bn to the 128-multiple that
+        # just covers them — bounds padding waste at <128 cols/tile instead
+        # of up to 511 while keeping stripe re-expansion minimal.
+        np128 = -(-n // 128) * 128
+        tiles = -(-np128 // 512)
+        bn = -(-np128 // (tiles * 128)) * 128
+    kp = prep.n_sections * prep.section
+    np_ = -(-n // bn) * bn
+    b = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+    out = _incrs_spmm_kernel(prep.idx, prep.val, b, section=prep.section,
+                             bm=bm, bn=bn, interpret=interpret)
+    return out[:m, :n]
 
 
 def incrs_to_dense(incrs: InCRS, *, bm: int = 8,
                    interpret: bool | None = None):
-    """Densify an InCRS matrix on-device via the gather kernel."""
+    """Densify an InCRS matrix on-device via the gather kernel (the TWO-pass
+    baseline path; kept for tests/benchmarks and ad-hoc densification).
+    Prep is memoized per live object — see ``prepare_incrs`` for the
+    immutability contract."""
     interpret = INTERPRET if interpret is None else interpret
-    idx, val = prep_sections(incrs, pad_rows_to=bm)
-    out = _incrs_gather_kernel(idx, val, section=incrs.section, bm=bm,
-                               interpret=interpret)
+    prep = prepare_incrs(incrs, pad_rows_to=bm)
+    out = _incrs_gather_kernel(prep.idx, prep.val, section=incrs.section,
+                               bm=bm, interpret=interpret)
     return out[:incrs.shape[0], :incrs.shape[1]]
 
 
@@ -213,6 +324,7 @@ def flash_mha(q, k, v, *, window=None, soft_cap=None, bq: int = 128,
 
 __all__ = [
     "INTERPRET", "dense_mm", "prep_bsr", "bsr_matmul", "bsr_matmul_arrays",
-    "prep_rounds", "index_match_matmul", "prep_sections", "incrs_to_dense",
+    "prep_rounds", "index_match_matmul", "prep_sections", "PreparedOperand",
+    "prepare_incrs", "invalidate_prepared", "incrs_spmm", "incrs_to_dense",
     "flash_mha", "ref",
 ]

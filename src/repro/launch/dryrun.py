@@ -47,6 +47,15 @@ _SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|s64|u64|s32|u32|s16|u16|s8|u8|"
 _GROUPS_RE = re.compile(r"replica_groups=(?:\{\{([0-9,]+)\}|\[(\d+),(\d+)\])")
 
 
+def cost_dict(compiled) -> Dict:
+    """``compiled.cost_analysis()`` normalized across jax versions: older
+    releases return a one-element list of dicts, newer ones a dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
 def _shape_bytes(m) -> int:
     dt, dims = m.group(1), m.group(2)
     n = 1
@@ -177,7 +186,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = cost_dict(compiled)
     hlo = compiled.as_text()
     coll = parse_collectives(hlo)
 
@@ -234,7 +243,7 @@ def _analyze(fn, args, ins, outs, donate, mesh) -> Dict:
         jitted = jax.jit(fn, in_shardings=ins, out_shardings=outs,
                          donate_argnums=donate)
         compiled = jitted.lower(*args).compile()
-    cost = compiled.cost_analysis() or {}
+    cost = cost_dict(compiled)
     coll = parse_collectives(compiled.as_text())
     return {"flops": float(cost.get("flops", 0.0)),
             "bytes": float(cost.get("bytes accessed", 0.0)),

@@ -1,1 +1,1 @@
-from .engine import Request, ServeEngine  # noqa: F401
+from .engine import Request, ServeEngine, SpMMRequest, SpMMEngine  # noqa: F401

@@ -1,2 +1,5 @@
-from .linear import SparseLinearParams, sparse_linear_init, sparse_linear_apply  # noqa: F401
+from .linear import (SparseLinearParams, sparse_linear_init,  # noqa: F401
+                     sparse_linear_apply, InCRSLinearParams,
+                     incrs_linear_init, incrs_linear_from_dense,
+                     incrs_linear_apply)
 from .prune import prune_to_bsr  # noqa: F401

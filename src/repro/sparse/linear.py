@@ -162,6 +162,64 @@ def sparse_linear_apply(p: SparseLinearParams, x: jnp.ndarray) -> jnp.ndarray:
     return y.reshape(*lead, p.meta.d_out)
 
 
+# ----------------------------------------------------------------------
+# InCRS-backed linear: unstructured sparsity through the FUSED SpMM kernel.
+#
+# Where SparseLinear needs block structure (whole MXU tiles skipped),
+# InCRSLinear handles element-level sparsity: the weight is stored as InCRS
+# and multiplied through ``ops.incrs_spmm``, which decompresses section
+# stripes in VMEM and contracts them on the MXU in one pass — the dense
+# weight never materializes in HBM. Host-side prep runs ONCE at init via
+# the ``PreparedOperand`` cache; every forward call reuses it. Inference
+# path (frozen weights): the forward is not differentiable wrt the sparse
+# operand — train with SparseLinear, deploy with InCRSLinear.
+
+
+@dataclasses.dataclass
+class InCRSLinearParams:
+    prep: "ops.PreparedOperand"      # W^T (d_out, d_in) section stripes
+    d_in: int
+    d_out: int
+    incrs: "InCRS"                   # kept alive so the prep cache stays hot
+
+
+def incrs_linear_from_dense(w: np.ndarray, density: float | None = None,
+                            section: int | None = None,
+                            block: int | None = None) -> InCRSLinearParams:
+    """Pack a dense W (d_in, d_out) — optionally magnitude-pruned to
+    element ``density`` — into the fused-kernel serving form."""
+    from ..core.incrs import InCRS, S_DEFAULT, B_DEFAULT
+    section = S_DEFAULT if section is None else section
+    block = B_DEFAULT if block is None else block
+    wt = np.ascontiguousarray(np.asarray(w, np.float32).T)   # (out, in)
+    if density is not None and density < 1.0:
+        keep = max(1, int(round(wt.size * density)))
+        thresh = np.partition(np.abs(wt).ravel(), -keep)[-keep]
+        wt = np.where(np.abs(wt) >= thresh, wt, 0.0).astype(np.float32)
+    incrs = InCRS.from_dense(wt, section=section, block=block)
+    prep = ops.prepare_incrs(incrs)
+    return InCRSLinearParams(prep, w.shape[0], w.shape[1], incrs)
+
+
+def incrs_linear_init(key, d_in: int, d_out: int, density: float,
+                      scale: float = 0.02, **kw) -> InCRSLinearParams:
+    w = np.asarray(jax.random.normal(key, (d_in, d_out))) * scale
+    return incrs_linear_from_dense(w, density, **kw)
+
+
+def incrs_linear_apply(p: InCRSLinearParams, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., d_in) -> (..., d_out) through the fused InCRS SpMM."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, p.d_in)
+    yt = ops.incrs_spmm(p.prep, x2.T)        # (d_out, T)
+    return yt.T.reshape(*lead, p.d_out)
+
+
+def incrs_to_dense_weight(p: InCRSLinearParams) -> np.ndarray:
+    """Densify W (d_in, d_out) for oracles/tests."""
+    return p.incrs.crs.to_dense().T
+
+
 def to_dense(p: SparseLinearParams) -> jnp.ndarray:
     """Densify W (d_in, d_out) for oracles/tests."""
     blk = p.meta.block

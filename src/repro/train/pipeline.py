@@ -16,7 +16,17 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+try:                                       # newer jax: top-level export
+    from jax import shard_map
+except ImportError:                        # older jax: experimental module
+    from jax.experimental.shard_map import shard_map
+# The replication-check kwarg was renamed check_rep -> check_vma
+# independently of the export move; pick whichever this jax accepts.
+import inspect as _inspect
+_SHARD_MAP_KW = (
+    {"check_vma": False}
+    if "check_vma" in _inspect.signature(shard_map).parameters
+    else {"check_rep": False})
 
 
 def pipeline_apply(stage_fn: Callable, stage_params, x, *, n_stages: int,
@@ -57,7 +67,7 @@ def pipeline_apply(stage_fn: Callable, stage_params, x, *, n_stages: int,
     return shard_map(
         local, mesh=mesh,
         in_specs=(pspec, P()), out_specs=P(),
-        check_vma=False,
+        **_SHARD_MAP_KW,
     )(stage_params, x)
 
 

@@ -1,0 +1,30 @@
+"""Optional-hypothesis shim for the property-test modules.
+
+``from _hyp import given, settings, st`` gives the real hypothesis API when
+it is installed (requirements-dev.txt); otherwise stand-ins that skip ONLY
+the ``@given`` property tests, so each module's deterministic tests still
+collect and run without the optional dependency.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Accepts any strategy constructor call; the result is only ever
+        passed to the stub ``given`` below, which ignores it."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: self
+
+    st = _AnyStrategy()
+
+    def settings(*a, **k):
+        return lambda fn: fn
+
+    def given(*a, **k):
+        return pytest.mark.skip(
+            reason="hypothesis not installed (optional dev dependency)")

@@ -54,14 +54,14 @@ def test_compressed_psum_error_feedback():
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import Mesh, PartitionSpec as P
-        from jax import shard_map
+        from repro.train.pipeline import shard_map, _SHARD_MAP_KW
         from repro.train.compress import compressed_psum
         mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("pod", "data"))
         def red(gl, el):
             r, ne = compressed_psum(gl[0], "pod", el[0])
             return r[None], ne[None]
         f = shard_map(red, mesh=mesh, in_specs=(P("pod"), P("pod")),
-                      out_specs=(P("pod"), P("pod")), check_vma=False)
+                      out_specs=(P("pod"), P("pod")), **_SHARD_MAP_KW)
         acc_c = jnp.zeros(256); acc_e = jnp.zeros(256)
         err = jnp.zeros((2, 256))
         for s in range(20):

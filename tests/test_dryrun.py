@@ -7,7 +7,7 @@ import textwrap
 
 import pytest
 
-from repro.launch.dryrun import parse_collectives
+from repro.launch.dryrun import cost_dict, parse_collectives
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -51,8 +51,8 @@ def test_scan_bodies_counted_once():
         for _ in range(10):
             x = jnp.tanh(x @ x)
         return x
-    f1 = jax.jit(f_scan).lower(a).compile().cost_analysis()["flops"]
-    f2 = jax.jit(f_unroll).lower(a).compile().cost_analysis()["flops"]
+    f1 = cost_dict(jax.jit(f_scan).lower(a).compile())["flops"]
+    f2 = cost_dict(jax.jit(f_unroll).lower(a).compile())["flops"]
     assert f2 > 5 * f1
 
 

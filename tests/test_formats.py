@@ -1,7 +1,9 @@
 """CRS / InCRS / BSR format tests, incl. the paper's Table I/II laws."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hyp import given, settings, st  # noqa: E402  (skips @given tests
+#                                               when hypothesis is absent)
 
 from repro.core.bsr import BSR, magnitude_block_mask
 from repro.core.crs import CRS, expected_ma_crs

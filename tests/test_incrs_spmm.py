@@ -1,0 +1,256 @@
+"""Fused InCRS SpMM kernel + vectorized format-prep layer.
+
+Covers: interpret-mode equivalence of ``incrs_spmm`` against dense matmul
+across densities and non-aligned shapes, empty rows/sections, the
+PreparedOperand cache, and bit-identical equivalence of the vectorized
+``prep_sections``/``prep_rounds``/``InCRS.from_crs`` against the seed's
+per-row loop implementations (kept here as references).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.crs import CRS
+from repro.core.incrs import InCRS, _pack64
+from repro.kernels import ops
+
+
+def _random_sparse(rng, m, n, d):
+    return np.where(rng.random((m, n)) < d,
+                    rng.normal(size=(m, n)), 0.0).astype(np.float32)
+
+
+# ----------------------------------------------------------------------
+# Seed (loop) implementations, verbatim — the vectorized paths must match
+# them bit-for-bit.
+def _loop_from_crs_counters(crs, section, block, prefix_bits=16,
+                            count_bits=6):
+    m, n = crs.shape
+    n_blocks = section // block
+    n_sections = -(-n // section)
+    prefix = np.zeros((m, n_sections), dtype=np.int64)
+    blocks = np.zeros((m, n_sections, n_blocks), dtype=np.int64)
+    for i in range(m):
+        s, e = crs.row_ptr[i], crs.row_ptr[i + 1]
+        cols = crs.col_idx[s:e]
+        sec = cols // section
+        blk = (cols % section) // block
+        np.add.at(blocks, (i, sec, blk), 1)
+        per_sec = np.bincount(sec, minlength=n_sections)
+        prefix[i] = np.concatenate([[0], np.cumsum(per_sec)[:-1]])
+    lo, hi = _pack64(prefix, blocks, prefix_bits, count_bits)
+    return np.stack([lo, hi], axis=-1)
+
+
+def _loop_prep_sections(incrs, pad_rows_to=8):
+    m, n = incrs.shape
+    crs = incrs.crs
+    n_sections = incrs.n_sections
+    smax = 1
+    spans = np.zeros((m, n_sections, 2), dtype=np.int64)
+    for i in range(m):
+        base = int(crs.row_ptr[i])
+        for s in range(n_sections):
+            prefix, blocks = incrs.counter(i, s)
+            cnt = int(blocks.sum())
+            spans[i, s] = (base + prefix, cnt)
+            smax = max(smax, cnt)
+    mp = -(-m // pad_rows_to) * pad_rows_to
+    idx = np.full((mp, n_sections, smax), -1, dtype=np.int32)
+    val = np.zeros((mp, n_sections, smax), dtype=np.float32)
+    for i in range(m):
+        for s in range(n_sections):
+            start, cnt = spans[i, s]
+            if cnt:
+                cols = crs.col_idx[start:start + cnt]
+                idx[i, s, :cnt] = cols - s * incrs.section
+                val[i, s, :cnt] = crs.values[start:start + cnt]
+    return idx, val
+
+
+def _loop_prep_rounds(crs, rounds, rmax=None, pad_rows_to=128):
+    m, n = crs.shape
+    n_rounds = max(1, -(-n // rounds))
+    counts = np.zeros((m, n_rounds), dtype=np.int64)
+    if crs.nnz:
+        row_of = np.repeat(np.arange(m), np.diff(crs.row_ptr).astype(np.int64))
+        np.add.at(counts, (row_of, crs.col_idx // rounds), 1)
+    rmax = int(counts.max(initial=1)) if rmax is None else rmax
+    rmax = max(1, min(rmax, rounds))
+    mp = -(-m // pad_rows_to) * pad_rows_to
+    idx = np.full((mp, n_rounds, rmax), -1, dtype=np.int32)
+    val = np.zeros((mp, n_rounds, rmax), dtype=np.float32)
+    for i in range(m):
+        s, e = crs.row_ptr[i], crs.row_ptr[i + 1]
+        cols = crs.col_idx[s:e]
+        r = cols // rounds
+        slot = np.zeros_like(cols)
+        for rr in np.unique(r):
+            sel = r == rr
+            slot[sel] = np.arange(sel.sum())
+        idx[i, r, slot] = cols % rounds
+        val[i, r, slot] = crs.values[s:e]
+    return idx, val
+
+
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("density", [0.01, 0.05, 0.2, 0.5])
+def test_incrs_spmm_matches_dense(rng, density):
+    d = _random_sparse(rng, 96, 700, density)
+    b = rng.normal(size=(700, 130)).astype(np.float32)
+    inc = InCRS.from_dense(d)
+    out = np.asarray(ops.incrs_spmm(inc, jnp.asarray(b)))
+    np.testing.assert_allclose(out, d @ b, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,k,n", [(1, 300, 1), (50, 257, 96),
+                                   (128, 1024, 256), (7, 31, 5)])
+def test_incrs_spmm_nonaligned_shapes(rng, m, k, n):
+    """Padding paths: none of these dims align to the 128/256 tiles."""
+    d = _random_sparse(rng, m, k, 0.1)
+    b = rng.normal(size=(k, n)).astype(np.float32)
+    inc = InCRS.from_dense(d)
+    out = np.asarray(ops.incrs_spmm(inc, jnp.asarray(b)))
+    np.testing.assert_allclose(out, d @ b, rtol=1e-4, atol=1e-4)
+
+
+def test_incrs_spmm_empty_rows_and_sections(rng):
+    d = _random_sparse(rng, 40, 600, 0.08)
+    d[3] = 0.0                     # empty row
+    d[:, 256:512] = 0.0            # a fully-empty section (S=256)
+    b = rng.normal(size=(600, 33)).astype(np.float32)
+    inc = InCRS.from_dense(d)
+    out = np.asarray(ops.incrs_spmm(inc, jnp.asarray(b)))
+    np.testing.assert_allclose(out, d @ b, rtol=1e-4, atol=1e-4)
+
+
+def test_incrs_spmm_all_zero(rng):
+    d = np.zeros((16, 300), np.float32)
+    b = rng.normal(size=(300, 8)).astype(np.float32)
+    out = np.asarray(ops.incrs_spmm(InCRS.from_dense(d), jnp.asarray(b)))
+    assert out.shape == (16, 8)
+    np.testing.assert_array_equal(out, 0.0)
+
+
+def test_incrs_spmm_small_section_params(rng):
+    d = _random_sparse(rng, 24, 500, 0.07)
+    b = rng.normal(size=(500, 64)).astype(np.float32)
+    inc = InCRS.from_dense(d, section=64, block=8)
+    out = np.asarray(ops.incrs_spmm(inc, jnp.asarray(b)))
+    np.testing.assert_allclose(out, d @ b, rtol=1e-4, atol=1e-4)
+
+
+def test_fused_matches_twopass(rng):
+    """Fused single-pass == incrs_to_dense -> dense_mm to fp32 tolerance."""
+    d = _random_sparse(rng, 64, 520, 0.05)
+    b = jnp.asarray(rng.normal(size=(520, 96)).astype(np.float32))
+    inc = InCRS.from_dense(d)
+    fused = np.asarray(ops.incrs_spmm(inc, b))
+    twopass = np.asarray(ops.dense_mm(ops.incrs_to_dense(inc), b))
+    np.testing.assert_allclose(fused, twopass, rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------------------------
+def test_prepared_operand_cache(rng):
+    d = _random_sparse(rng, 16, 300, 0.1)
+    inc = InCRS.from_dense(d)
+    p1 = ops.prepare_incrs(inc)
+    p2 = ops.prepare_incrs(inc)
+    assert p1 is p2                               # prep ran once
+    assert ops.prepare_incrs(inc, pad_rows_to=8) is not p1
+    inc2 = InCRS.from_dense(d)
+    assert ops.prepare_incrs(inc2) is not p1      # different live object
+
+
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("seed", range(4))
+def test_from_crs_counters_bit_identical_to_loop(rng, seed):
+    r = np.random.default_rng(seed)
+    m, n = int(r.integers(1, 40)), int(r.integers(1, 900))
+    d = _random_sparse(r, m, n, float(r.uniform(0.0, 0.2)))
+    crs = CRS.from_dense(d)
+    inc = InCRS.from_crs(crs)
+    want = _loop_from_crs_counters(crs, inc.section, inc.block)
+    np.testing.assert_array_equal(inc.counters, want)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_prep_sections_bit_identical_to_loop(rng, seed):
+    r = np.random.default_rng(100 + seed)
+    m, n = int(r.integers(1, 40)), int(r.integers(1, 900))
+    d = _random_sparse(r, m, n, float(r.uniform(0.0, 0.25)))
+    inc = InCRS.from_dense(d, section=64, block=8)
+    gi, gv = ops.prep_sections(inc, pad_rows_to=8)
+    wi, wv = _loop_prep_sections(inc, pad_rows_to=8)
+    np.testing.assert_array_equal(np.asarray(gi), wi)
+    np.testing.assert_array_equal(np.asarray(gv), wv)
+
+
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("rounds", [32, 128])
+def test_prep_rounds_bit_identical_to_loop(rng, seed, rounds):
+    r = np.random.default_rng(200 + seed)
+    m, n = int(r.integers(1, 50)), int(r.integers(1, 700))
+    d = _random_sparse(r, m, n, float(r.uniform(0.0, 0.3)))
+    crs = CRS.from_dense(d)
+    gi, gv = ops.prep_rounds(crs, rounds, pad_rows_to=8)
+    wi, wv = _loop_prep_rounds(crs, rounds, pad_rows_to=8)
+    np.testing.assert_array_equal(np.asarray(gi), wi)
+    np.testing.assert_array_equal(np.asarray(gv), wv)
+
+
+def test_from_crs_rejects_oversized_block_count():
+    crs = CRS.from_dense(np.eye(4, dtype=np.float32))
+    with pytest.raises(AssertionError):
+        InCRS.from_crs(crs, section=256, block=128)   # 128 > 2^6 - 1
+
+
+# ----------------------------------------------------------------------
+def test_incrs_linear_matches_dense(rng):
+    from repro.sparse.linear import (incrs_linear_init, incrs_linear_apply,
+                                     incrs_to_dense_weight)
+    p = incrs_linear_init(jax.random.PRNGKey(0), 300, 64, density=0.05)
+    x = jnp.asarray(rng.normal(size=(3, 5, 300)).astype(np.float32))
+    y = incrs_linear_apply(p, x)
+    w = incrs_to_dense_weight(p)
+    want = np.asarray(x).reshape(-1, 300) @ w
+    np.testing.assert_allclose(np.asarray(y).reshape(-1, 64), want,
+                               rtol=1e-4, atol=1e-4)
+    assert abs(p.incrs.crs.density - 0.05) < 0.01
+
+
+def test_spmm_engine_serves_and_reuses_prep(rng):
+    from repro.serve.engine import SpMMEngine, SpMMRequest
+    d = _random_sparse(rng, 48, 600, 0.05)
+    inc = InCRS.from_dense(d)
+    eng = SpMMEngine(inc, max_wave_cols=128)
+    assert eng.prep is ops.prepare_incrs(inc)     # prep-once via the cache
+    reqs = [SpMMRequest(i, rng.normal(size=(600, 48 + i)).astype(np.float32))
+            for i in range(5)]
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    assert len(done) == 5 and all(r.done for r in done)
+    assert eng.stats["waves"] >= 2                # 250 cols over 128-col waves
+    for r in done:
+        np.testing.assert_allclose(r.out, d @ r.b, rtol=1e-4, atol=1e-4)
+
+
+def test_invalidate_prepared_after_mutation(rng):
+    d = _random_sparse(rng, 16, 300, 0.1)
+    inc = InCRS.from_dense(d)
+    b = jnp.asarray(rng.normal(size=(300, 8)).astype(np.float32))
+    y1 = np.asarray(ops.incrs_spmm(inc, b))
+    inc.crs.values = inc.crs.values * 2.0     # in-place operand mutation
+    ops.invalidate_prepared(inc)
+    y2 = np.asarray(ops.incrs_spmm(inc, b))
+    np.testing.assert_allclose(y2, 2.0 * y1, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n", [520, 640, 1032])
+def test_incrs_spmm_bn_autoselect_odd_widths(rng, n):
+    d = _random_sparse(rng, 32, 400, 0.08)
+    b = rng.normal(size=(400, n)).astype(np.float32)
+    out = np.asarray(ops.incrs_spmm(InCRS.from_dense(d), jnp.asarray(b)))
+    np.testing.assert_allclose(out, d @ b, rtol=1e-4, atol=1e-4)

@@ -2,7 +2,9 @@
 latency ordering on sparse data (the paper's Fig. 4/5 direction)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hyp import given, settings, st  # noqa: E402  (skips @given tests
+#                                               when hypothesis is absent)
 
 from repro.core.crs import CRS
 from repro.core.mesh_sim import (conventional_mm_latency, fpic_latency,

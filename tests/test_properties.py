@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+from _hyp import given, settings, st  # noqa: E402  (skips @given tests
+#                                               when hypothesis is absent)
 
 from repro.core.crs import CRS
 from repro.kernels import ops, ref

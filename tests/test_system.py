@@ -4,6 +4,7 @@ import numpy as np
 import pytest
 
 
+@pytest.mark.slow
 def test_train_launcher_end_to_end(tmp_path):
     """Train a smoke config for a few steps, checkpoint, resume, improve."""
     from repro.launch.train import main
@@ -17,6 +18,7 @@ def test_train_launcher_end_to_end(tmp_path):
     assert np.isfinite(loss2)
 
 
+@pytest.mark.slow
 def test_serve_launcher_end_to_end():
     from repro.launch.serve import main
     n = main(["--arch", "granite-34b", "--smoke", "--n-requests", "5",
