@@ -8,3 +8,5 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q
 python benchmarks/kernel_bench.py --json BENCH_kernels.json
+# trainable-InCRS end-to-end smoke (fused-kernel fwd/bwd + serve round trip)
+python examples/train_unstructured.py --steps 8

@@ -17,6 +17,14 @@ grid axis is the reduction ("operand stream" of the paper's Fig. 2 mesh);
 row/col tiles are parallel. This is the same fusion that streaming SpMM
 accelerators (Sextans, SpArch) perform between their decompression front-end
 and their accumulation array.
+
+Two grid orders are provided (``ops.incrs_spmm`` picks by shape):
+
+* ``incrs_spmm``        — grid (row-tile, col-tile, section), accumulator
+  per output tile; every col tile re-expands the section stripe.
+* ``incrs_spmm_reuse``  — grid (row-tile, section, col-tile); the stripe is
+  expanded ONCE into a VMEM scratch and reused across all col tiles, with
+  an output-stationary (bm, N) row-panel accumulator.
 """
 from __future__ import annotations
 
@@ -37,24 +45,28 @@ from ._compat import CompilerParams
 _ONEHOT_BYTES = 2 * 1024 * 1024
 
 
-def _kernel(idx_ref, val_ref, b_ref, o_ref, acc_ref, *, section: int):
-    @pl.when(pl.program_id(2) == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    idx = idx_ref[:, 0, :]                    # (bm, smax) local col, -1 pad
-    val = val_ref[:, 0, :]
+def _expand_stripe(idx, val, section: int) -> jnp.ndarray:
+    """One-hot-expand one (bm, smax) section stripe to dense (bm, section),
+    chunked over smax so the one-hot transient stays VMEM-sized."""
     bm, smax = idx.shape
     iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, section), 2)
     chunk = max(1, _ONEHOT_BYTES // (bm * section * 4))
-    # Dense stripe of A for this (row-tile, section) — exists only in VMEM;
-    # built chunk-by-chunk so the one-hot transient stays VMEM-sized.
     stripe = jnp.zeros((bm, section), jnp.float32)
     for k0 in range(0, smax, chunk):
         oh = (idx[:, k0:k0 + chunk, None] == iota).astype(jnp.float32)
         stripe += jnp.einsum(
             "rks,rk->rs", oh, val[:, k0:k0 + chunk].astype(jnp.float32),
             preferred_element_type=jnp.float32)
+    return stripe
+
+
+def _kernel(idx_ref, val_ref, b_ref, o_ref, acc_ref, *, section: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Dense stripe of A for this (row-tile, section) — exists only in VMEM.
+    stripe = _expand_stripe(idx_ref[:, 0, :], val_ref[:, 0, :], section)
     acc_ref[...] += jnp.dot(stripe, b_ref[...].astype(jnp.float32),
                             preferred_element_type=jnp.float32)
 
@@ -94,4 +106,75 @@ def incrs_spmm(idx: jnp.ndarray, val: jnp.ndarray, b: jnp.ndarray, *,
         interpret=interpret,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(idx, val, b)
+
+
+# ----------------------------------------------------------------------
+# Stripe-reuse variant: grid reordered to (row-tile, SECTION, col-tile) so
+# the col-tile axis iterates innermost. The decompressed (bm, section)
+# stripe is built once per (row-tile, section) into a VMEM scratch and
+# REUSED across every col tile — the baseline order re-expands it per col
+# tile. The price is an output-stationary (bm, N) row-panel accumulator
+# (the out block is revisited once per section, non-consecutively, so the
+# running sum must live in scratch): SpArch/Sextans-style output-stationary
+# accumulation. VMEM bound: bm*N*4B panel + bm*section*4B stripe — callers
+# (ops.incrs_spmm variant="auto") fall back to the baseline order when the
+# panel would not fit.
+
+
+def _kernel_reuse(idx_ref, val_ref, b_ref, o_ref, stripe_ref, acc_ref, *,
+                  section: int, bn: int):
+    s, j = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _expand():
+        stripe_ref[...] = _expand_stripe(idx_ref[:, 0, :], val_ref[:, 0, :],
+                                         section)
+
+    contrib = jnp.dot(stripe_ref[...], b_ref[...].astype(jnp.float32),
+                      preferred_element_type=jnp.float32)
+    sl = pl.dslice(j * bn, bn)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[:, sl] = contrib
+
+    @pl.when(s != 0)
+    def _acc():
+        acc_ref[:, sl] += contrib
+
+    @pl.when(s == pl.num_programs(1) - 1)
+    def _done():
+        o_ref[...] = acc_ref[:, sl].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("section", "bm", "bn", "interpret"))
+def incrs_spmm_reuse(idx: jnp.ndarray, val: jnp.ndarray, b: jnp.ndarray, *,
+                     section: int = 256, bm: int = 128, bn: int = 128,
+                     interpret: bool = False) -> jnp.ndarray:
+    """Same contract as ``incrs_spmm`` but each section stripe is expanded
+    exactly once per row tile (held in VMEM scratch) instead of once per
+    (row tile, col tile): n_sections expansions per row tile vs
+    n_sections * n_col_tiles."""
+    m, n_sections, smax = idx.shape
+    k, n = b.shape
+    assert m % bm == 0 and n % bn == 0, ((m, n), (bm, bn))
+    assert k == n_sections * section, (k, n_sections, section)
+    grid = (m // bm, n_sections, n // bn)
+    return pl.pallas_call(
+        functools.partial(_kernel_reuse, section=section, bn=bn),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, 1, smax), lambda i, s, j: (i, s, 0)),
+            pl.BlockSpec((bm, 1, smax), lambda i, s, j: (i, s, 0)),
+            pl.BlockSpec((section, bn), lambda i, s, j: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, s, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, section), jnp.float32),
+                        pltpu.VMEM((bm, n), jnp.float32)],
+        interpret=interpret,
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
     )(idx, val, b)

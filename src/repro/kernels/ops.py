@@ -7,6 +7,7 @@ the backend.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 import weakref
 from typing import Dict, Tuple
 
@@ -23,6 +24,7 @@ from .flash_attention import flash_attention as _flash_kernel
 from .dense_mm import dense_mm as _dense_mm_kernel
 from .incrs_gather import incrs_gather as _incrs_gather_kernel
 from .incrs_spmm import incrs_spmm as _incrs_spmm_kernel
+from .incrs_spmm import incrs_spmm_reuse as _incrs_spmm_reuse_kernel
 from .index_match_spmm import index_match_spmm as _index_match_kernel
 
 INTERPRET = jax.default_backend() != "tpu"
@@ -43,27 +45,44 @@ def dense_mm(a, b, *, bm: int = 128, bn: int = 128, bk: int = 128,
 
 
 # ----------------------------------------------------------------------
-def prep_bsr(bsr: BSR) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """BSR -> (row_of, col_of, values) flat arrays for the kernel.
+def bsr_kernel_meta(bsr: BSR
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """BSR -> kernel block lists ``(row_of + sentinel, col_of, vpos)``.
 
-    Empty block-rows get one explicit zero tile so every output row is
-    written. ``row_of`` carries one sentinel repeat at the end (the kernel
-    reads row_of[t + 1] to detect row boundaries).
+    Empty block-rows get one explicit zero tile (stably sorted into place)
+    so every output block-row is written — the kernel walks block runs, and
+    an absent row would leave its output tile holding garbage — and the
+    trailing ``row_of`` sentinel is well-defined even for an all-empty
+    matrix. ``vpos[q]`` is the slot of real block ``q`` inside the padded
+    sequence (pad slots expect zero values).
     """
     deg = np.diff(bsr.row_ptr)
     row_of = np.repeat(np.arange(bsr.n_block_rows, dtype=np.int32),
                        deg.astype(np.int64))
     col_of = bsr.col_idx.astype(np.int32)
-    values = bsr.values
+    vpos = np.arange(len(col_of), dtype=np.int32)
     empty = np.nonzero(deg == 0)[0].astype(np.int32)
     if empty.size:
-        row_of = np.concatenate([row_of, empty])
-        col_of = np.concatenate([col_of, np.zeros_like(empty)])
-        values = np.concatenate(
-            [values, np.zeros((empty.size,) + bsr.block, values.dtype)])
-        order = np.argsort(row_of, kind="stable")
-        row_of, col_of, values = row_of[order], col_of[order], values[order]
+        row_all = np.concatenate([row_of, empty])
+        col_all = np.concatenate([col_of, np.zeros_like(empty)])
+        order = np.argsort(row_all, kind="stable")
+        inv = np.empty(order.size, np.int64)
+        inv[order] = np.arange(order.size)
+        vpos = inv[:len(col_of)].astype(np.int32)
+        row_of, col_of = row_all[order], col_all[order]
     row_of = np.concatenate([row_of, row_of[-1:]])       # sentinel
+    return row_of.astype(np.int32), col_of, vpos
+
+
+def prep_bsr(bsr: BSR) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """BSR -> (row_of, col_of, values) flat arrays for the kernel, with
+    zero tiles in place for empty block-rows (see ``bsr_kernel_meta``)."""
+    row_of, col_of, vpos = bsr_kernel_meta(bsr)
+    values = bsr.values
+    if len(col_of) != len(values):
+        padded = np.zeros((len(col_of),) + bsr.block, values.dtype)
+        padded[vpos] = values
+        values = padded
     return (jnp.asarray(row_of), jnp.asarray(col_of), jnp.asarray(values))
 
 
@@ -93,13 +112,21 @@ def bsr_matmul_arrays(row_of, col_of, values, b, *, n_block_rows: int,
 
 # ----------------------------------------------------------------------
 def prep_rounds(crs: CRS, rounds: int, rmax: int | None = None,
-                pad_rows_to: int = 128
+                pad_rows_to: int = 128, on_overflow: str = "raise"
                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """CRS -> padded per-round (idx, val); idx local in [0, R), -1 = pad.
 
     Rows are padded up to a multiple of ``pad_rows_to``; at most R non-zeros
     fit in one round window, so rmax <= R always holds.
+
+    A caller-supplied ``rmax`` smaller than the densest (row, round) count
+    cannot hold every non-zero: ``on_overflow="raise"`` (default) rejects it
+    with a ValueError, ``on_overflow="drop"`` keeps the first ``rmax``
+    non-zeros per round window and warns about the rest.
     """
+    if on_overflow not in ("raise", "drop"):
+        raise ValueError(f"on_overflow must be 'raise' or 'drop', "
+                         f"got {on_overflow!r}")
     m, n = crs.shape
     n_rounds = max(1, -(-n // rounds))
     counts = np.zeros((m, n_rounds), dtype=np.int64)
@@ -107,8 +134,19 @@ def prep_rounds(crs: CRS, rounds: int, rmax: int | None = None,
     if crs.nnz:
         row_of = np.repeat(np.arange(m), np.diff(crs.row_ptr).astype(np.int64))
         np.add.at(counts, (row_of, crs.col_idx // rounds), 1)
-    rmax = int(counts.max(initial=1)) if rmax is None else rmax
+    rmax_true = int(counts.max(initial=1))
+    rmax = rmax_true if rmax is None else rmax
     rmax = max(1, min(rmax, rounds))
+    if rmax < rmax_true:
+        if on_overflow == "raise":
+            raise ValueError(
+                f"rmax={rmax} cannot hold the densest (row, round) window "
+                f"({rmax_true} non-zeros); raise rmax or pass "
+                f"on_overflow='drop'")
+        warnings.warn(
+            f"prep_rounds: dropping non-zeros beyond slot {rmax} in "
+            f"{int((counts > rmax).sum())} overfull (row, round) windows "
+            f"(densest holds {rmax_true})", stacklevel=2)
     mp = -(-m // pad_rows_to) * pad_rows_to
     idx = np.full((mp, n_rounds, rmax), -1, dtype=np.int32)
     val = np.zeros((mp, n_rounds, rmax), dtype=np.float32)
@@ -122,8 +160,14 @@ def prep_rounds(crs: CRS, rounds: int, rmax: int | None = None,
             [[0], np.cumsum(counts.reshape(-1))[:-1]])
         g = row_of * n_rounds + r
         slot = np.arange(crs.nnz, dtype=np.int64) - group_start[g]
-        idx[row_of, r, slot] = crs.col_idx % rounds
-        val[row_of, r, slot] = crs.values
+        if rmax < rmax_true:
+            sel = slot < rmax
+            row_of, r, slot = row_of[sel], r[sel], slot[sel]
+            idx[row_of, r, slot] = crs.col_idx[sel] % rounds
+            val[row_of, r, slot] = crs.values[sel]
+        else:
+            idx[row_of, r, slot] = crs.col_idx % rounds
+            val[row_of, r, slot] = crs.values
     return jnp.asarray(idx), jnp.asarray(val)
 
 
@@ -231,11 +275,15 @@ def prepare_incrs(incrs: InCRS, *, pad_rows_to: int = 128) -> PreparedOperand:
     key = (id(incrs), incrs.section, incrs.block, pad_rows_to)
     hit = _PREP_CACHE.get(key)
     if hit is not None and hit[0]() is incrs:
+        # Promote to most-recently-used: dict order is insertion order, so
+        # re-inserting makes eviction (pop of the first key) true LRU — a
+        # hot operand prepped early must outlive cold late-comers.
+        _PREP_CACHE[key] = _PREP_CACHE.pop(key)
         return hit[1]
     idx, val = prep_sections(incrs, pad_rows_to=pad_rows_to)
     prep = PreparedOperand(idx, val, incrs.shape, incrs.section)
     if len(_PREP_CACHE) >= _PREP_CACHE_MAX:
-        _PREP_CACHE.pop(next(iter(_PREP_CACHE)))
+        _PREP_CACHE.pop(next(iter(_PREP_CACHE)))      # least recently used
     _PREP_CACHE[key] = (weakref.ref(incrs), prep)
     # Drop the entry (and its device arrays) the moment the operand dies —
     # without this, a dead entry pins idx/val until the cap-eviction path.
@@ -250,17 +298,36 @@ def invalidate_prepared(incrs: InCRS) -> None:
         _PREP_CACHE.pop(k, None)
 
 
+# Row-panel accumulator budget of the stripe-reuse variant (bm x Np f32
+# held in VMEM for a whole row tile) — beyond this, fall back to the
+# re-expanding order whose accumulator is one (bm, bn) tile.
+_REUSE_PANEL_BYTES = 2 * 1024 * 1024
+
+
 def incrs_spmm(a: InCRS | PreparedOperand, b, *, bm: int = 128,
-               bn: int | None = None, interpret: bool | None = None):
+               bn: int | None = None, variant: str = "auto",
+               interpret: bool | None = None):
     """C = A @ B fused: InCRS section stripes are one-hot-expanded in VMEM
     and contracted on the MXU in the same grid step — the dense (M, K)
     intermediate of ``incrs_to_dense -> dense_mm`` never touches HBM.
 
     ``a`` may be a raw InCRS (prepped through the memo cache) or an explicit
     ``PreparedOperand``. ``bn`` defaults to a wide (512-capped) col tile:
-    every col tile re-expands the section stripe, so fewer/wider tiles do
-    strictly less decompression work. Returns C[:M, :N] unpadded, f32.
+    in the expand order every col tile re-expands the section stripe, so
+    fewer/wider tiles do strictly less decompression work (the reuse order
+    expands once per row tile regardless). Returns C[:M, :N] unpadded, f32.
+
+    ``variant`` picks the grid order (see ``kernels/incrs_spmm.py``):
+    "expand" re-expands the stripe per col tile, "reuse" expands once per
+    (row tile, section) and reuses it across col tiles behind an
+    output-stationary row-panel accumulator. "auto" (default) picks by
+    shape: reuse when the col-tile count makes re-expansion the dominant
+    waste (>= 4 tiles, per ``kernel_bench.py``) and the row panel fits the
+    VMEM budget.
     """
+    if variant not in ("auto", "expand", "reuse"):
+        raise ValueError(f"variant must be 'auto', 'expand' or 'reuse', "
+                         f"got {variant!r}")
     interpret = INTERPRET if interpret is None else interpret
     prep = a if isinstance(a, PreparedOperand) else \
         prepare_incrs(a, pad_rows_to=bm)
@@ -277,9 +344,15 @@ def incrs_spmm(a: InCRS | PreparedOperand, b, *, bm: int = 128,
         bn = -(-np128 // (tiles * 128)) * 128
     kp = prep.n_sections * prep.section
     np_ = -(-n // bn) * bn
+    if variant == "auto":
+        variant = "reuse" if (np_ // bn >= 4
+                              and bm * np_ * 4 <= _REUSE_PANEL_BYTES) \
+            else "expand"
     b = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
-    out = _incrs_spmm_kernel(prep.idx, prep.val, b, section=prep.section,
-                             bm=bm, bn=bn, interpret=interpret)
+    kernel = _incrs_spmm_reuse_kernel if variant == "reuse" \
+        else _incrs_spmm_kernel
+    out = kernel(prep.idx, prep.val, b, section=prep.section,
+                 bm=bm, bn=bn, interpret=interpret)
     return out[:m, :n]
 
 
@@ -323,7 +396,8 @@ def flash_mha(q, k, v, *, window=None, soft_cap=None, bq: int = 128,
 
 
 __all__ = [
-    "INTERPRET", "dense_mm", "prep_bsr", "bsr_matmul", "bsr_matmul_arrays",
+    "INTERPRET", "dense_mm", "bsr_kernel_meta", "prep_bsr", "bsr_matmul",
+    "bsr_matmul_arrays",
     "prep_rounds", "index_match_matmul", "prep_sections", "PreparedOperand",
     "prepare_incrs", "invalidate_prepared", "incrs_spmm", "incrs_to_dense",
     "flash_mha", "ref",

@@ -97,10 +97,14 @@ class ServeEngine:
             cache_dtype=self.cache_dtype)
         self.stats["prefill_tokens"] += bsz * s
         lg = np.asarray(logits, dtype=np.float32)
-        last = np.array([self._sample(lg[i], wave[i].temperature)
-                         for i in range(bsz)], dtype=np.int32)
-        for r, t in zip(wave, last):
-            r.out.append(int(t))
+        # Prefill sample only for lanes that actually want tokens: a
+        # max_new=0 request must come back empty, and sampling for it would
+        # consume shared-RNG draws that shift its wave-mates' outputs.
+        last = np.zeros(bsz, dtype=np.int32)
+        for i, r in enumerate(wave):
+            if r.max_new > 0:
+                last[i] = self._sample(lg[i], r.temperature)
+                r.out.append(int(last[i]))
         npfx = cfg.n_prefix_embeds if cfg.input_mode == "embeds" else 0
         for step in range(1, max_new):
             pos = s + npfx + step - 1
@@ -109,6 +113,9 @@ class ServeEngine:
             self.stats["decode_tokens"] += bsz
             lg = np.asarray(logits[:, -1], dtype=np.float32)
             for i, r in enumerate(wave):
+                # Finished lanes are frozen: no sampling (shared-RNG
+                # isolation) and ``last[i]`` stays put — the lockstep batch
+                # still carries the lane, but nothing it produces is used.
                 if len(r.out) < r.max_new:
                     tok = self._sample(lg[i], r.temperature)
                     r.out.append(tok)
@@ -150,15 +157,23 @@ class SpMMEngine:
     """
 
     def __init__(self, a, *, max_wave_cols: int = 512,
-                 interpret: Optional[bool] = None):
+                 variant: str = "auto", interpret: Optional[bool] = None):
         """``a``: an ``InCRS`` (prepped here, once, via the memo cache) or
-        an already-built ``ops.PreparedOperand``."""
+        an already-built ``ops.PreparedOperand``. ``variant`` selects the
+        kernel grid order ("expand" | "reuse" | "auto" — see
+        ``ops.incrs_spmm``); "auto" switches to the stripe-reuse kernel
+        when a wave is wide enough that per-col-tile re-expansion would
+        dominate."""
         from ..kernels import ops
+        if variant not in ("auto", "expand", "reuse"):
+            raise ValueError(f"variant must be 'auto', 'expand' or "
+                             f"'reuse', got {variant!r}")
         self._ops = ops
         self.a = a
         self.prep = a if isinstance(a, ops.PreparedOperand) else \
             ops.prepare_incrs(a)
         self.max_wave_cols = max_wave_cols
+        self.variant = variant
         self.interpret = interpret
         self.queue: List[SpMMRequest] = []
         self.finished: List[SpMMRequest] = []
@@ -183,6 +198,7 @@ class SpMMEngine:
         b = jnp.asarray(np.concatenate([r.b for r in wave], axis=1)
                         .astype(np.float32))
         c = np.asarray(self._ops.incrs_spmm(self.prep, b,
+                                            variant=self.variant,
                                             interpret=self.interpret))
         off = 0
         for r in wave:

@@ -1,5 +1,7 @@
 from .linear import (SparseLinearParams, sparse_linear_init,  # noqa: F401
-                     sparse_linear_apply, InCRSLinearParams,
+                     sparse_linear_from_mask, sparse_linear_apply,
+                     InCRSLinearParams, InCRSLinearMeta,
                      incrs_linear_init, incrs_linear_from_dense,
-                     incrs_linear_apply)
+                     incrs_linear_stack_init, incrs_linear_apply,
+                     incrs_to_dense_weight)
 from .prune import prune_to_bsr  # noqa: F401

@@ -34,19 +34,29 @@ from ..kernels import ops
 
 @dataclasses.dataclass(frozen=True)
 class SparseLinearMeta:
-    """Static metadata for one sparse weight (hashable, jit-static)."""
+    """Static metadata for one sparse weight (hashable, jit-static).
+
+    ``row_of``/``col_of`` (and their ``t_`` twins) are the KERNEL block
+    lists: they include one explicit zero tile per empty block-row (the
+    kernel writes each output block-row from its block run — an absent row
+    would stay unwritten) plus the trailing sentinel. ``vpos[q]`` is the
+    slot of real (trainable) block ``q`` inside that padded sequence; pad
+    slots hold zeros and receive no gradient.
+    """
     d_in: int
     d_out: int
     block: int
     row_of: Tuple[int, ...]          # fwd BSR (W^T: out-major) + sentinel
     col_of: Tuple[int, ...]
+    vpos: Tuple[int, ...]            # real block -> slot in padded fwd list
     t_perm: Tuple[int, ...]          # permutation fwd blocks -> bwd blocks
     t_row_of: Tuple[int, ...]        # bwd BSR (W: in-major) + sentinel
     t_col_of: Tuple[int, ...]
+    t_vpos: Tuple[int, ...]          # real block -> slot in padded bwd list
 
     @property
     def nnz(self) -> int:
-        return len(self.col_of)
+        return len(self.vpos)
 
     @property
     def n_block_rows(self) -> int:
@@ -63,12 +73,17 @@ class SparseLinearParams:
     meta: SparseLinearMeta
 
 
-def _bsr_meta(bsr: BSR):
-    deg = np.diff(bsr.row_ptr)
-    row_of = np.repeat(np.arange(bsr.n_block_rows, dtype=np.int32),
-                       deg.astype(np.int64))
-    row_of = np.concatenate([row_of, row_of[-1:]])
-    return row_of.astype(np.int32), bsr.col_idx.astype(np.int32)
+# Kernel block lists with explicit zero tiles for empty block-rows — the
+# single source of this invariant lives next to the kernel prep.
+_bsr_meta = ops.bsr_kernel_meta
+
+
+def real_blocks(meta: SparseLinearMeta) -> Tuple[np.ndarray, np.ndarray]:
+    """(block-row, block-col) of each real (trainable) block, in values
+    order — the padded kernel lists minus the injected zero tiles."""
+    vpos = np.asarray(meta.vpos, dtype=np.int64)
+    return (np.asarray(meta.row_of[:-1], np.int32)[vpos],
+            np.asarray(meta.col_of, np.int32)[vpos])
 
 
 def sparse_linear_init(key, d_in: int, d_out: int, block: int,
@@ -78,11 +93,20 @@ def sparse_linear_init(key, d_in: int, d_out: int, block: int,
     w = np.asarray(jax.random.normal(key, (d_in, d_out))) * scale
     wt = np.ascontiguousarray(w.T)                     # (out, in)
     mask = magnitude_block_mask(wt, (block, block), density)
+    return sparse_linear_from_mask(w, mask, block, dtype=dtype)
+
+
+def sparse_linear_from_mask(w: np.ndarray, mask: np.ndarray, block: int,
+                            dtype=jnp.float32) -> SparseLinearParams:
+    """Pack a dense W (d_in, d_out) under an explicit block-occupancy mask
+    of W^T (out-major, shape (d_out//block, d_in//block))."""
+    d_in, d_out = w.shape
+    wt = np.ascontiguousarray(np.asarray(w).T)         # (out, in)
     fwd = BSR.from_mask(wt, mask, (block, block))      # W^T blocks
-    bwd = BSR.from_mask(np.ascontiguousarray(w),
+    bwd = BSR.from_mask(np.ascontiguousarray(np.asarray(w)),
                         mask.T, (block, block))        # W blocks
-    row_of, col_of = _bsr_meta(fwd)
-    t_row_of, t_col_of = _bsr_meta(bwd)
+    row_of, col_of, vpos = _bsr_meta(fwd)
+    t_row_of, t_col_of, t_vpos = _bsr_meta(bwd)
     # permutation: fwd block p at (r, c) -> bwd block at (c, r)
     fwd_pos = {}
     p = 0
@@ -97,8 +121,10 @@ def sparse_linear_init(key, d_in: int, d_out: int, block: int,
     meta = SparseLinearMeta(
         d_in, d_out, block,
         tuple(int(x) for x in row_of), tuple(int(x) for x in col_of),
+        tuple(int(x) for x in vpos),
         tuple(perm),
-        tuple(int(x) for x in t_row_of), tuple(int(x) for x in t_col_of))
+        tuple(int(x) for x in t_row_of), tuple(int(x) for x in t_col_of),
+        tuple(int(x) for x in t_vpos))
     return SparseLinearParams(jnp.asarray(fwd.values, dtype), meta)
 
 
@@ -112,13 +138,24 @@ def _pad_tokens(xt: jnp.ndarray) -> jnp.ndarray:
     return jnp.pad(xt, ((0, 0), (0, tp - t)))
 
 
+def _pad_slots(values: jnp.ndarray, vpos: Tuple[int, ...],
+               n_slots: int) -> jnp.ndarray:
+    """Scatter real block values into the zero-tile-padded kernel slot
+    sequence (identity when no block-row was empty)."""
+    if n_slots == values.shape[0]:
+        return values
+    return jnp.zeros((n_slots,) + values.shape[1:], values.dtype
+                     ).at[jnp.asarray(vpos, jnp.int32)].set(values)
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
 def _sparse_mm(values, x, meta: SparseLinearMeta):
     """y[T, out] = x[T, in] @ W, W^T stored as BSR values."""
     yt = ops.bsr_matmul_arrays(
         jnp.asarray(meta.row_of, jnp.int32),
         jnp.asarray(meta.col_of, jnp.int32),
-        values, _pad_tokens(x.T), n_block_rows=meta.n_block_rows)
+        _pad_slots(values, meta.vpos, len(meta.col_of)),
+        _pad_tokens(x.T), n_block_rows=meta.n_block_rows)
     return yt[:, :x.shape[0]].T
 
 
@@ -136,13 +173,16 @@ def _sparse_mm_bwd(meta, res, dy):
     dxt = ops.bsr_matmul_arrays(
         jnp.asarray(meta.t_row_of, jnp.int32),
         jnp.asarray(meta.t_col_of, jnp.int32),
-        tvals, _pad_tokens(dy.T), n_block_rows=meta.n_block_rows_t)
+        _pad_slots(tvals, meta.t_vpos, len(meta.t_col_of)),
+        _pad_tokens(dy.T), n_block_rows=meta.n_block_rows_t)
     dx = dxt[:, :dy.shape[0]].T
     # dW^T blocks: block p at (r=out-block, c=in-block):
     #   dWt[p] = dy_block(r)^T ... careful: y^T = Wt x^T; dWt[p] =
     #   dy^T[r-block rows] @ x^T[c-block cols]^T = dy[:, r]^T x[:, c]
-    row_of = jnp.asarray(meta.row_of[:-1], jnp.int32)
-    col_of = jnp.asarray(meta.col_of, jnp.int32)
+    # Gradients only for the REAL blocks — injected zero tiles stay frozen.
+    g_rows, g_cols = real_blocks(meta)
+    row_of = jnp.asarray(g_rows, jnp.int32)
+    col_of = jnp.asarray(g_cols, jnp.int32)
     t = dy.shape[0]
     dyb = dy.T.reshape(meta.n_block_rows, blk, t)          # (R, blk, T)
     xb = x.T.reshape(meta.n_block_rows_t, blk, t)          # (C, blk, T)
@@ -163,31 +203,117 @@ def sparse_linear_apply(p: SparseLinearParams, x: jnp.ndarray) -> jnp.ndarray:
 
 
 # ----------------------------------------------------------------------
-# InCRS-backed linear: unstructured sparsity through the FUSED SpMM kernel.
+# InCRS-backed linear: unstructured sparsity through the FUSED SpMM kernel,
+# TRAINABLE end-to-end.
 #
 # Where SparseLinear needs block structure (whole MXU tiles skipped),
-# InCRSLinear handles element-level sparsity: the weight is stored as InCRS
-# and multiplied through ``ops.incrs_spmm``, which decompresses section
-# stripes in VMEM and contracts them on the MXU in one pass — the dense
-# weight never materializes in HBM. Host-side prep runs ONCE at init via
-# the ``PreparedOperand`` cache; every forward call reuses it. Inference
-# path (frozen weights): the forward is not differentiable wrt the sparse
-# operand — train with SparseLinear, deploy with InCRSLinear.
+# InCRSLinear handles element-level sparsity: the weight is stored as
+# section stripes (built once at init from the packed counter-vectors via
+# ``ops.prep_sections``) and multiplied through ``ops.incrs_spmm``. The
+# backward pass keeps the paper's "only useful computation" property:
+#
+#   y  = x @ W            fused SpMM over W^T stripes (d_out, d_in)
+#   dx = dy @ W^T         a SECOND fused SpMM over the TRANSPOSED stripes
+#                         (d_in, d_out), whose values are a precomputed
+#                         gather (``t_gather``) of the forward values
+#   dW^T                  restricted to the live non-zeros via a gather
+#                         over the section-stripe ``idx`` — T MACs per
+#                         non-zero, never the dense (d_out, d_in) outer
+#                         product
+#
+# The stripe ``idx`` arrays are static metadata (never traced as data
+# dependencies); only ``values`` is a pytree leaf, so the layer is an
+# optimizer-visible differentiable parameter like any dense weight.
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class InCRSLinearMeta:
+    """Static metadata of one trainable InCRS weight.
+
+    ``eq=False`` -> identity hash/eq: the meta rides as pytree aux data and
+    as a ``custom_vjp`` nondiff argument, where identity semantics keep jit
+    caches stable (array-valued fields would make generated __eq__ raise).
+    """
+    fwd_idx: jnp.ndarray      # (Op, Si, smax) int32 — W^T stripes, -1 pad
+    bwd_idx: jnp.ndarray      # (Ip, So, smax_t) int32 — W stripes, -1 pad
+    t_gather: jnp.ndarray     # (Ip*So*smax_t,) int32 — bwd slot -> flat fwd
+    #                           slot (the one-past-the-end slot reads 0.0)
+    d_in: int
+    d_out: int
+    section: int
+    nnz: int                  # live non-zeros (the host InCRS itself is NOT
+    #                           kept — it would pin a duplicate weight copy)
 
 
 @dataclasses.dataclass
 class InCRSLinearParams:
-    prep: "ops.PreparedOperand"      # W^T (d_out, d_in) section stripes
-    d_in: int
-    d_out: int
-    incrs: "InCRS"                   # kept alive so the prep cache stays hot
+    values: jnp.ndarray       # (Op, Si, smax) f32 — the trainable leaf
+    meta: InCRSLinearMeta
+
+    @property
+    def d_in(self) -> int:
+        return self.meta.d_in
+
+    @property
+    def d_out(self) -> int:
+        return self.meta.d_out
+
+    @property
+    def nnz(self) -> int:
+        return self.meta.nnz
+
+    @property
+    def density(self) -> float:
+        return self.meta.nnz / float(self.meta.d_in * self.meta.d_out)
+
+    @property
+    def prep(self) -> "ops.PreparedOperand":
+        """Device-ready W^T operand view over the CURRENT values — what
+        ``serve.SpMMEngine`` consumes."""
+        return ops.PreparedOperand(self.meta.fwd_idx, self.values,
+                                   (self.meta.d_out, self.meta.d_in),
+                                   self.meta.section)
+
+
+jax.tree_util.register_pytree_node(
+    InCRSLinearParams,
+    lambda p: ((p.values,), p.meta),
+    lambda meta, children: InCRSLinearParams(children[0], meta))
+
+
+def _transpose_gather(fwd_idx: np.ndarray, bwd_idx: np.ndarray,
+                      section: int, d_in: int) -> np.ndarray:
+    """Map every bwd stripe slot to the flat fwd slot holding the same
+    non-zero (pad slots -> the extra zero slot at index fwd_idx.size).
+
+    Keys are the global (out, in) coordinates: fwd slot (r, s, k) holds
+    W^T[r, idx + s*section]; bwd slot (r', s', k') holds W[r', idx' +
+    s'*section] = W^T[idx' + s'*section, r'].
+    """
+    r_f, s_f, _ = np.indices(fwd_idx.shape)
+    fmask = fwd_idx >= 0
+    fkey = (r_f[fmask].astype(np.int64) * d_in
+            + fwd_idx[fmask] + s_f[fmask].astype(np.int64) * section)
+    fpos = np.flatnonzero(fmask.ravel())
+    order = np.argsort(fkey)
+    fkey, fpos = fkey[order], fpos[order]
+    r_b, s_b, _ = np.indices(bwd_idx.shape)
+    bmask = bwd_idx >= 0
+    bkey = ((bwd_idx[bmask].astype(np.int64)
+             + s_b[bmask].astype(np.int64) * section) * d_in + r_b[bmask])
+    where = np.searchsorted(fkey, bkey)
+    assert bkey.size == fkey.size and np.array_equal(fkey[where], bkey), \
+        "fwd/bwd stripe non-zero sets must be transposes of each other"
+    t_gather = np.full(bwd_idx.size, fwd_idx.size, dtype=np.int32)
+    t_gather[np.flatnonzero(bmask.ravel())] = fpos[where]
+    return t_gather
 
 
 def incrs_linear_from_dense(w: np.ndarray, density: float | None = None,
                             section: int | None = None,
                             block: int | None = None) -> InCRSLinearParams:
     """Pack a dense W (d_in, d_out) — optionally magnitude-pruned to
-    element ``density`` — into the fused-kernel serving form."""
+    element ``density`` — into the trainable fused-kernel form."""
     from ..core.incrs import InCRS, S_DEFAULT, B_DEFAULT
     section = S_DEFAULT if section is None else section
     block = B_DEFAULT if block is None else block
@@ -197,8 +323,15 @@ def incrs_linear_from_dense(w: np.ndarray, density: float | None = None,
         thresh = np.partition(np.abs(wt).ravel(), -keep)[-keep]
         wt = np.where(np.abs(wt) >= thresh, wt, 0.0).astype(np.float32)
     incrs = InCRS.from_dense(wt, section=section, block=block)
-    prep = ops.prepare_incrs(incrs)
-    return InCRSLinearParams(prep, w.shape[0], w.shape[1], incrs)
+    incrs_t = InCRS.from_dense(np.ascontiguousarray(wt.T),
+                               section=section, block=block)
+    fwd_idx, fwd_val = ops.prep_sections(incrs, pad_rows_to=128)
+    bwd_idx, _ = ops.prep_sections(incrs_t, pad_rows_to=128)
+    t_gather = _transpose_gather(np.asarray(fwd_idx), np.asarray(bwd_idx),
+                                 section, w.shape[0])
+    meta = InCRSLinearMeta(fwd_idx, bwd_idx, jnp.asarray(t_gather),
+                           w.shape[0], w.shape[1], section, incrs.crs.nnz)
+    return InCRSLinearParams(fwd_val, meta)
 
 
 def incrs_linear_init(key, d_in: int, d_out: int, density: float,
@@ -207,24 +340,101 @@ def incrs_linear_init(key, d_in: int, d_out: int, density: float,
     return incrs_linear_from_dense(w, density, **kw)
 
 
+def incrs_linear_stack_init(key, n_stages: int, d_in: int, d_out: int,
+                            density: float, scale: float = 0.02,
+                            **kw) -> InCRSLinearParams:
+    """Shared-pattern parameter stack for pipeline-parallel stages: ONE
+    InCRS sparsity pattern (so a single static meta serves every stage and
+    the values leaf stacks along the stage axis, as ``train.pipeline``
+    requires), independent per-stage values on that pattern."""
+    k0, kv = jax.random.split(key)
+    p0 = incrs_linear_init(k0, d_in, d_out, density, scale, **kw)
+    live = np.asarray(p0.meta.fwd_idx) >= 0
+    noise = np.asarray(jax.random.normal(
+        kv, (n_stages - 1,) + p0.values.shape)) * scale
+    rest = jnp.asarray((noise * live[None]).astype(np.float32))
+    return InCRSLinearParams(
+        jnp.concatenate([p0.values[None], rest], axis=0), p0.meta)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _incrs_mm(values, x, meta: InCRSLinearMeta):
+    """y[T, d_out] = x[T, d_in] @ W, with W^T stored as section stripes."""
+    prep = ops.PreparedOperand(meta.fwd_idx, values,
+                               (meta.d_out, meta.d_in), meta.section)
+    return ops.incrs_spmm(prep, x.T).T
+
+
+def _incrs_mm_fwd(values, x, meta):
+    return _incrs_mm(values, x, meta), (values, x)
+
+
+def _incrs_mm_bwd(meta, res, dy):
+    values, x = res
+    # dx^T = W @ dy^T: the second fused SpMM, over the transposed stripes.
+    # Their values are a gather of the forward values (t_gather maps pad
+    # slots to the appended zero).
+    flat = jnp.concatenate([values.reshape(-1),
+                            jnp.zeros((1,), values.dtype)])
+    tvals = flat[meta.t_gather].reshape(meta.bwd_idx.shape)
+    tprep = ops.PreparedOperand(meta.bwd_idx, tvals,
+                                (meta.d_in, meta.d_out), meta.section)
+    dx = ops.incrs_spmm(tprep, dy.T).T
+    # dW^T[r, c] = sum_t dy[t, r] x[t, c], evaluated ONLY at the live
+    # non-zeros: gather x's columns by the stripe idx, one T-length MAC per
+    # stored value — compute scales with nnz, not d_out*d_in. Scanned one
+    # section at a time so the gathered-x intermediate peaks at
+    # (Op, smax, T), not the whole padded-nnz x T.
+    idx = meta.fwd_idx
+    n_sections = idx.shape[1]
+    gcol = jnp.where(
+        idx >= 0,
+        idx + meta.section * jnp.arange(n_sections,
+                                        dtype=jnp.int32)[None, :, None], 0)
+    kp = n_sections * meta.section
+    xpt = jnp.pad(x.astype(jnp.float32),
+                  ((0, 0), (0, kp - x.shape[1]))).T          # (kp, T)
+    dyp = jnp.pad(dy.astype(jnp.float32),
+                  ((0, 0), (0, idx.shape[0] - dy.shape[1])))   # (T, Op)
+
+    def section_dw(_, gs):                           # gs: (Op, smax)
+        xg = jnp.take(xpt, gs, axis=0)               # (Op, smax, T)
+        return None, jnp.einsum("rkt,tr->rk", xg, dyp,
+                                preferred_element_type=jnp.float32)
+
+    _, dvals = jax.lax.scan(section_dw, None, jnp.moveaxis(gcol, 1, 0))
+    dvals = jnp.where(idx >= 0, jnp.moveaxis(dvals, 0, 1), 0.0)
+    return dvals.astype(values.dtype), dx.astype(x.dtype)
+
+
+_incrs_mm.defvjp(_incrs_mm_fwd, _incrs_mm_bwd)
+
+
 def incrs_linear_apply(p: InCRSLinearParams, x: jnp.ndarray) -> jnp.ndarray:
-    """x: (..., d_in) -> (..., d_out) through the fused InCRS SpMM."""
+    """x: (..., d_in) -> (..., d_out) through the fused InCRS SpMM;
+    differentiable wrt ``p.values`` and ``x``."""
     lead = x.shape[:-1]
-    x2 = x.reshape(-1, p.d_in)
-    yt = ops.incrs_spmm(p.prep, x2.T)        # (d_out, T)
-    return yt.T.reshape(*lead, p.d_out)
+    x2 = x.reshape(-1, p.meta.d_in)
+    y = _incrs_mm(p.values, x2, p.meta)
+    return y.reshape(*lead, p.meta.d_out)
 
 
 def incrs_to_dense_weight(p: InCRSLinearParams) -> np.ndarray:
-    """Densify W (d_in, d_out) for oracles/tests."""
-    return p.incrs.crs.to_dense().T
+    """Densify W (d_in, d_out) from the CURRENT values, for oracles/tests."""
+    idx = np.asarray(p.meta.fwd_idx)
+    vals = np.asarray(p.values)
+    wt = np.zeros((idx.shape[0], idx.shape[1] * p.meta.section), np.float32)
+    r, s, k = np.nonzero(idx >= 0)
+    wt[r, idx[r, s, k] + s * p.meta.section] = vals[r, s, k]
+    return wt[:p.meta.d_out, :p.meta.d_in].T
 
 
 def to_dense(p: SparseLinearParams) -> jnp.ndarray:
     """Densify W (d_in, d_out) for oracles/tests."""
     blk = p.meta.block
     out = jnp.zeros((p.meta.d_out, p.meta.d_in), p.values.dtype)
-    for q, (r, c) in enumerate(zip(p.meta.row_of[:-1], p.meta.col_of)):
+    rows, cols = real_blocks(p.meta)
+    for q, (r, c) in enumerate(zip(rows, cols)):
         out = out.at[r * blk:(r + 1) * blk, c * blk:(c + 1) * blk].set(
             p.values[q])
     return out.T

@@ -135,9 +135,13 @@ def adamw_update(cfg: AdamWConfig, grads, state, params):
 
     paths_p, treedef = jax.tree_util.tree_flatten_with_path(params)
     flat_p = [x for _, x in paths_p]
-    # no weight decay on pruning masks (fixed metadata) or norm scales
-    decays = [not any(getattr(k, "key", "").startswith(("mask_", "norm"))
-                      for k in path if hasattr(k, "key"))
+    # no weight decay on pruning masks (fixed metadata) or norm scales.
+    # Path keys may be non-strings (e.g. FlattenedIndexKey ints from custom
+    # pytree nodes like InCRSLinearParams) — only dict-style str keys name
+    # mask/norm tensors.
+    decays = [not any(isinstance(getattr(k, "key", None), str)
+                      and k.key.startswith(("mask_", "norm"))
+                      for k in path)
               for path, _ in paths_p]
     flat_g = treedef.flatten_up_to(grads)
     flat_m = treedef.flatten_up_to(state["m"])

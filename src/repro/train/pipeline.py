@@ -79,3 +79,23 @@ def split_stages(stacked_params, n_stages: int):
         assert g % n_stages == 0, (g, n_stages)
         return a.reshape(n_stages, g // n_stages, *a.shape[1:])
     return jax.tree.map(r, stacked_params)
+
+
+def incrs_stage_fn(act: Callable = jnp.tanh) -> Callable:
+    """Stage function over a shared-pattern ``sparse.InCRSLinearParams``
+    stack (``incrs_linear_stack_init``): each stage applies the fused InCRS
+    SpMM (custom VJP, so ``jax.grad`` through ``pipeline_apply`` yields the
+    reverse-schedule backward on the same sparse kernels) followed by
+    ``act``.
+
+    Only the ``values`` leaf carries a stage axis; the stripe metadata is
+    pytree aux data shared by every stage, which is exactly what the
+    per-stage ``leaf[0]`` slicing and the ``P(axis)`` param specs above
+    require — per-stage patterns would need per-stage static metadata and
+    cannot ride one ``shard_map``.
+    """
+    from ..sparse.linear import incrs_linear_apply
+
+    def stage(params_one_stage, h):
+        return act(incrs_linear_apply(params_one_stage, h))
+    return stage

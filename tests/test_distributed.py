@@ -50,6 +50,44 @@ def test_pipeline_forward_backward():
     """))
 
 
+def test_pipeline_incrs_stages_forward_backward():
+    """Shared-pattern InCRS stages through the pipeline: the fused-SpMM
+    custom VJP must transpose cleanly through shard_map/scan/ppermute."""
+    print(_run("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh
+        from repro.train.pipeline import pipeline_apply, incrs_stage_fn
+        from repro.sparse.linear import (incrs_linear_stack_init,
+                                         incrs_to_dense_weight)
+        mesh = Mesh(np.array(jax.devices()[:2]), ("pipe",))
+        ps = incrs_linear_stack_init(jax.random.PRNGKey(0), 2, 64, 64,
+                                     density=0.2, scale=0.3,
+                                     section=64, block=8)
+        stage = incrs_stage_fn()
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 64))
+        out = pipeline_apply(stage, ps, x, n_stages=2, n_micro=4, mesh=mesh)
+        ws = [jnp.asarray(incrs_to_dense_weight(
+                  dataclasses.replace(ps, values=ps.values[i])))
+              for i in range(2)]
+        ref = x
+        for w in ws: ref = jnp.tanh(ref @ w)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
+        g = jax.grad(lambda p: (pipeline_apply(stage, p, x, n_stages=2,
+                     n_micro=4, mesh=mesh) ** 2).sum())(ps)
+        gws = jax.grad(lambda wl: ((lambda r: (r ** 2).sum())(
+            jnp.tanh(jnp.tanh(x @ wl[0]) @ wl[1]))))(ws)
+        for i in range(2):
+            gd = incrs_to_dense_weight(
+                dataclasses.replace(ps, values=g.values[i]))
+            live = np.abs(np.asarray(ws[i])) > 0
+            np.testing.assert_allclose(gd[live], np.asarray(gws[i])[live],
+                                       rtol=1e-3, atol=1e-3)
+        print("PIPELINE_INCRS_OK")
+    """, n_devices=2))
+
+
 def test_compressed_psum_error_feedback():
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np

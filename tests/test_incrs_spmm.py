@@ -152,6 +152,39 @@ def test_fused_matches_twopass(rng):
 
 
 # ----------------------------------------------------------------------
+def test_prep_rounds_small_rmax_raises(rng):
+    d = _random_sparse(rng, 8, 64, 0.5)
+    crs = CRS.from_dense(d)
+    true_max = int(np.asarray(
+        ops.prep_rounds(crs, 32, pad_rows_to=8)[0]).shape[2])
+    assert true_max > 1
+    with pytest.raises(ValueError, match="rmax"):
+        ops.prep_rounds(crs, 32, rmax=true_max - 1, pad_rows_to=8)
+
+
+def test_prep_rounds_small_rmax_drop_warns(rng):
+    d = _random_sparse(rng, 8, 64, 0.5)
+    crs = CRS.from_dense(d)
+    gi_full, gv_full = ops.prep_rounds(crs, 32, pad_rows_to=8)
+    rmax = gi_full.shape[2] - 1
+    with pytest.warns(UserWarning, match="dropping"):
+        gi, gv = ops.prep_rounds(crs, 32, rmax=rmax, pad_rows_to=8,
+                                 on_overflow="drop")
+    assert gi.shape[2] == rmax
+    # kept slots are exactly the first rmax of the full prep
+    np.testing.assert_array_equal(np.asarray(gi),
+                                  np.asarray(gi_full)[:, :, :rmax])
+    np.testing.assert_array_equal(np.asarray(gv),
+                                  np.asarray(gv_full)[:, :, :rmax])
+
+
+def test_prep_rounds_rejects_bad_on_overflow(rng):
+    crs = CRS.from_dense(np.eye(4, dtype=np.float32))
+    with pytest.raises(ValueError, match="on_overflow"):
+        ops.prep_rounds(crs, 4, on_overflow="clamp")
+
+
+# ----------------------------------------------------------------------
 def test_prepared_operand_cache(rng):
     d = _random_sparse(rng, 16, 300, 0.1)
     inc = InCRS.from_dense(d)
@@ -161,6 +194,24 @@ def test_prepared_operand_cache(rng):
     assert ops.prepare_incrs(inc, pad_rows_to=8) is not p1
     inc2 = InCRS.from_dense(d)
     assert ops.prepare_incrs(inc2) is not p1      # different live object
+
+
+def test_prep_cache_evicts_lru_not_fifo(rng, monkeypatch):
+    """A hot operand prepped EARLY must survive eviction; the coldest
+    (least-recently-used) entry goes first."""
+    monkeypatch.setattr(ops, "_PREP_CACHE_MAX", 3)
+    ops._PREP_CACHE.clear()
+    mats = [InCRS.from_dense(_random_sparse(rng, 8, 64, 0.2))
+            for _ in range(4)]
+    hot = ops.prepare_incrs(mats[0])              # oldest insertion...
+    ops.prepare_incrs(mats[1])
+    ops.prepare_incrs(mats[2])                    # cache full
+    assert ops.prepare_incrs(mats[0]) is hot      # ...promoted on hit
+    ops.prepare_incrs(mats[3])                    # evicts ONE entry
+    assert ops.prepare_incrs(mats[0]) is hot      # hot entry survived
+    # mats[1] (the true LRU) was the one evicted: re-prep builds anew
+    keys = {k[0] for k in ops._PREP_CACHE}
+    assert id(mats[1]) not in keys and id(mats[0]) in keys
 
 
 # ----------------------------------------------------------------------
@@ -217,7 +268,7 @@ def test_incrs_linear_matches_dense(rng):
     want = np.asarray(x).reshape(-1, 300) @ w
     np.testing.assert_allclose(np.asarray(y).reshape(-1, 64), want,
                                rtol=1e-4, atol=1e-4)
-    assert abs(p.incrs.crs.density - 0.05) < 0.01
+    assert abs(p.density - 0.05) < 0.01
 
 
 def test_spmm_engine_serves_and_reuses_prep(rng):

@@ -65,6 +65,51 @@ def test_mixed_lengths_split_into_waves(params):
     assert eng.stats["waves"] == 2
 
 
+def test_max_new_zero_returns_empty(params):
+    """Regression: the prefill sample was appended unconditionally, so a
+    max_new=0 request came back with one token."""
+    eng = ServeEngine(CFG, params, n_slots=2, cache_dtype=jnp.float32)
+    eng.submit(Request(0, np.arange(8, dtype=np.int32), max_new=0))
+    eng.submit(Request(1, np.arange(8, dtype=np.int32), max_new=3))
+    done = eng.run()
+    by_rid = {r.rid: r for r in done}
+    assert by_rid[0].out == [] and by_rid[0].done
+    assert len(by_rid[1].out) == 3
+
+
+def test_mixed_max_new_lanes_match_solo_runs(params):
+    """Each lane of a heterogeneous wave must produce exactly what it would
+    produce alone — finished lanes are frozen, not re-sampled."""
+    prompt = np.arange(6, 14, dtype=np.int32)
+    solo = {}
+    for mn in (2, 5):
+        eng = ServeEngine(CFG, params, n_slots=1, cache_dtype=jnp.float32)
+        eng.submit(Request(0, prompt, max_new=mn))
+        solo[mn] = eng.run()[0].out
+    eng = ServeEngine(CFG, params, n_slots=2, cache_dtype=jnp.float32)
+    eng.submit(Request(0, prompt, max_new=2))
+    eng.submit(Request(1, prompt, max_new=5))
+    done = {r.rid: r.out for r in eng.run()}
+    assert done[0] == solo[2]
+    assert done[1] == solo[5]
+
+
+def test_finished_lane_does_not_perturb_sampling(params):
+    """Shared-RNG isolation: a max_new=0 wave-mate must not consume RNG
+    draws that shift a sampled lane's tokens."""
+    prompt = np.arange(8, dtype=np.int32)
+    outs = []
+    for with_mate in (False, True):
+        eng = ServeEngine(CFG, params, n_slots=2, cache_dtype=jnp.float32,
+                          seed=3)
+        eng.submit(Request(0, prompt, max_new=4, temperature=1.0))
+        if with_mate:
+            eng.submit(Request(1, prompt, max_new=0, temperature=1.0))
+        outs.append({r.rid: r.out for r in eng.run()}[0])
+    assert outs[0] == outs[1]
+    assert len(outs[0]) == 4
+
+
 def test_temperature_sampling_runs(params):
     eng = ServeEngine(CFG, params, n_slots=2, cache_dtype=jnp.float32,
                       seed=7)

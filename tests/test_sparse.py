@@ -6,7 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.sparse.linear import (sparse_linear_apply, sparse_linear_init,
+from repro.sparse.linear import (real_blocks, sparse_linear_apply,
+                                 sparse_linear_from_mask, sparse_linear_init,
                                  to_dense)
 from repro.sparse.prune import prune_to_bsr, sparsity_schedule
 
@@ -36,7 +37,8 @@ def test_sparse_linear_vjp_matches_dense(rng):
                           argnums=(0, 1))(wd, x)
     np.testing.assert_allclose(gx, gx_ref, rtol=1e-3, atol=1e-3)
     blk = p.meta.block
-    for q, (r, c) in enumerate(zip(p.meta.row_of[:-1], p.meta.col_of)):
+    rows, cols = real_blocks(p.meta)
+    for q, (r, c) in enumerate(zip(rows, cols)):
         np.testing.assert_allclose(
             gv[q], gw.T[r * blk:(r + 1) * blk, c * blk:(c + 1) * blk],
             rtol=1e-3, atol=1e-3)
@@ -50,6 +52,45 @@ def test_sparse_linear_3d_batch(rng):
     np.testing.assert_allclose(y.reshape(-1, 128),
                                x.reshape(-1, 128) @ to_dense(p),
                                rtol=1e-4, atol=1e-4)
+
+
+def test_sparse_linear_empty_block_rows(rng):
+    """Regression: a mask with empty block-rows (in either orientation)
+    used to leave output block-rows UNWRITTEN by the kernel — forward and
+    dx both came back as garbage at low density."""
+    d_in, d_out, blk = 192, 256, 64
+    mask = np.zeros((d_out // blk, d_in // blk), bool)     # (4, 3) blocks
+    mask[0, 1] = mask[2, 1] = True     # fwd rows 1, 3 empty; bwd rows 0, 2
+    w = rng.normal(size=(d_in, d_out)).astype(np.float32) * 0.2
+    p = sparse_linear_from_mask(w, mask, blk)
+    x = jnp.asarray(rng.normal(size=(16, d_in)).astype(np.float32))
+    wd = to_dense(p)
+    np.testing.assert_allclose(sparse_linear_apply(p, x), x @ wd,
+                               rtol=1e-4, atol=1e-4)
+    # dx runs the TRANSPOSED metadata (bwd empty rows) — must match dense
+    gx = jax.grad(lambda x_: (sparse_linear_apply(p, x_) ** 2).sum())(x)
+    gx_ref = jax.grad(lambda x_: ((x_ @ wd) ** 2).sum())(x)
+    np.testing.assert_allclose(gx, gx_ref, rtol=1e-3, atol=1e-3)
+    # values grads exist only for the 2 real blocks, not the zero tiles
+    gv = jax.grad(lambda v: (sparse_linear_apply(
+        dataclasses.replace(p, values=v), x) ** 2).sum())(p.values)
+    assert gv.shape == (2, blk, blk)
+
+
+def test_sparse_linear_all_empty_weight(rng):
+    """Regression: an all-empty weight crashed _bsr_meta (row_of[-1:] on an
+    empty array); it must behave as the zero linear map."""
+    d_in = d_out = 128
+    blk = 64
+    mask = np.zeros((d_out // blk, d_in // blk), bool)
+    w = rng.normal(size=(d_in, d_out)).astype(np.float32)
+    p = sparse_linear_from_mask(w, mask, blk)
+    assert p.values.shape[0] == 0
+    x = jnp.asarray(rng.normal(size=(8, d_in)).astype(np.float32))
+    y = sparse_linear_apply(p, x)
+    np.testing.assert_array_equal(np.asarray(y), 0.0)
+    gx = jax.grad(lambda x_: (sparse_linear_apply(p, x_) ** 2).sum())(x)
+    np.testing.assert_array_equal(np.asarray(gx), 0.0)
 
 
 def test_prune_to_bsr_density(rng):
