@@ -7,6 +7,15 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q
+# Multi-device substrate (sharded InCRS data path, pipeline, psum) on 8
+# fake CPU devices so every shard_map path is exercised without TPUs. The
+# test file also re-fakes devices in its own subprocesses; the env var here
+# additionally covers any future in-process multi-device tests.
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python -m pytest -x -q tests/test_distributed.py
 python benchmarks/kernel_bench.py --json BENCH_kernels.json
 # trainable-InCRS end-to-end smoke (fused-kernel fwd/bwd + serve round trip)
 python examples/train_unstructured.py --steps 8
+# row-sharded SpMM serving smoke (8-way mesh on fake CPU devices)
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python -m repro.launch.serve --spmm --spmm-shards 8 --n-requests 4

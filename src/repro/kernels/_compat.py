@@ -1,13 +1,31 @@
-"""Version compatibility for the Pallas TPU API surface.
+"""Version compatibility for the Pallas TPU API surface + shard_map.
 
 jax renamed ``pltpu.TPUCompilerParams`` -> ``pltpu.CompilerParams`` across
 releases; resolve whichever this jax provides so the kernels run on both.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to a top-level
+export, and its replication-check kwarg was renamed ``check_rep`` ->
+``check_vma`` independently of the move. Every shard_map call site in the
+repo (pipeline parallelism, the sharded InCRS data path) goes through the
+``shard_map`` / ``SHARD_MAP_KW`` pair resolved here.
 """
 from __future__ import annotations
+
+import inspect as _inspect
 
 from jax.experimental.pallas import tpu as pltpu
 
 CompilerParams = getattr(pltpu, "CompilerParams", None) or \
     getattr(pltpu, "TPUCompilerParams")
 
-__all__ = ["CompilerParams"]
+try:                                       # newer jax: top-level export
+    from jax import shard_map
+except ImportError:                        # older jax: experimental module
+    from jax.experimental.shard_map import shard_map
+
+SHARD_MAP_KW = (
+    {"check_vma": False}
+    if "check_vma" in _inspect.signature(shard_map).parameters
+    else {"check_rep": False})
+
+__all__ = ["CompilerParams", "shard_map", "SHARD_MAP_KW"]

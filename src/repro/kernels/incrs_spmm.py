@@ -29,6 +29,7 @@ Two grid orders are provided (``ops.incrs_spmm`` picks by shape):
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -89,6 +90,11 @@ def incrs_spmm(idx: jnp.ndarray, val: jnp.ndarray, b: jnp.ndarray, *,
     """
     m, n_sections, smax = idx.shape
     k, n = b.shape
+    # Shard-local grid bounds: a row-sharded operand hands each device a
+    # panel that may be smaller than one default row tile (or padded to a
+    # granularity the tile does not divide) — shrink bm to the largest
+    # tile that tiles the panel instead of rejecting the shard.
+    bm = math.gcd(bm, m)
     assert m % bm == 0 and n % bn == 0, ((m, n), (bm, bn))
     assert k == n_sections * section, (k, n_sections, section)
     grid = (m // bm, n // bn, n_sections)
@@ -159,6 +165,7 @@ def incrs_spmm_reuse(idx: jnp.ndarray, val: jnp.ndarray, b: jnp.ndarray, *,
     n_sections * n_col_tiles."""
     m, n_sections, smax = idx.shape
     k, n = b.shape
+    bm = math.gcd(bm, m)                   # shard-local grid bounds
     assert m % bm == 0 and n % bn == 0, ((m, n), (bm, bn))
     assert k == n_sections * section, (k, n_sections, section)
     grid = (m // bm, n_sections, n // bn)

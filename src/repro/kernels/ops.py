@@ -7,6 +7,7 @@ the backend.
 from __future__ import annotations
 
 import dataclasses
+import math
 import warnings
 import weakref
 from typing import Dict, Tuple
@@ -14,11 +15,13 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..core.bsr import BSR
 from ..core.crs import CRS
 from ..core.incrs import InCRS
 from . import ref
+from ._compat import SHARD_MAP_KW, shard_map
 from .bsr_spmm import bsr_spmm as _bsr_spmm_kernel
 from .flash_attention import flash_attention as _flash_kernel
 from .dense_mm import dense_mm as _dense_mm_kernel
@@ -298,6 +301,133 @@ def invalidate_prepared(incrs: InCRS) -> None:
         _PREP_CACHE.pop(k, None)
 
 
+# ----------------------------------------------------------------------
+# Row-sharded prep: the paper's mesh scales by giving each comparator-mesh
+# row its OWN slice of the sparse operand while the dense operand is shared
+# across the mesh (§IV); Sextans/SpArch partition the sparse matrix across
+# compute units the same way. Here each mesh device owns one contiguous
+# output-row stripe panel of the section stripes; the dense RHS stays
+# replicated and per-shard output panels concatenate along rows.
+def shard_axes(mesh: Mesh, axis) -> Tuple[Tuple[str, ...], int]:
+    """Normalize the shard-axis spec and count the shards it yields:
+    ``axis=None`` -> every mesh axis (one shard per device), a name or
+    tuple of names otherwise. Returns ``(axes, n_shards)``. The single
+    source of the axes->shard-count rule — the sharded packer in
+    ``sparse.linear`` uses it too, so the two always agree."""
+    if axis is None:
+        axes = tuple(mesh.axis_names)
+    else:
+        axes = (axis,) if isinstance(axis, str) else tuple(axis)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n_shards = 1
+    for a in axes:
+        n_shards *= sizes[a]
+    return axes, n_shards
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ShardedPreparedOperand:
+    """Row-sharded section-stripe form of one InCRS operand, bound to a
+    mesh placement: shard ``s`` holds global output rows
+    ``[s * rows_per_shard, (s + 1) * rows_per_shard)`` (the tail shard may
+    be partially empty) and ``idx``/``val`` carry a ``NamedSharding`` over
+    ``axes`` so no device ever materializes another shard's stripes."""
+    idx: jnp.ndarray              # (n_shards, Rp, n_sections, smax) int32
+    val: jnp.ndarray              # (n_shards, Rp, n_sections, smax) f32
+    shape: Tuple[int, int]        # global (M, K) of the sparse operand
+    section: int
+    rows_per_shard: int           # real output rows owned by each shard
+    mesh: Mesh
+    axes: Tuple[str, ...]         # mesh axes the shard dim is split over
+
+    @property
+    def n_shards(self) -> int:
+        return self.idx.shape[0]
+
+    @property
+    def n_sections(self) -> int:
+        return self.idx.shape[2]
+
+    @property
+    def padded_rows(self) -> int:
+        return self.idx.shape[1]
+
+
+def prepare_incrs_sharded(incrs: InCRS, mesh: Mesh, *, axis=None,
+                          pad_rows_to: int = 128) -> ShardedPreparedOperand:
+    """Partition an InCRS operand into per-device output-row stripe shards.
+
+    The section stripes are built once on the host (the same vectorized
+    ``prep_sections`` path as the single-device prep — per-row content is
+    bit-identical), split into ``n_shards`` contiguous row ranges, and
+    placed with a ``NamedSharding`` so each device of ``mesh`` holds only
+    its own panel. ``axis`` (default: every mesh axis) names the mesh
+    axes the shard dimension is split over.
+    """
+    axes, n_shards = shard_axes(mesh, axis)
+    m, _ = incrs.shape
+    gi, gv = prep_sections(incrs, pad_rows_to=1)
+    gi, gv = np.asarray(gi), np.asarray(gv)            # (m, Si, smax)
+    rows_per_shard = -(-m // n_shards)
+    rp = -(-rows_per_shard // pad_rows_to) * pad_rows_to
+    _, si, smax = gi.shape
+    idx = np.full((n_shards, rp, si, smax), -1, dtype=np.int32)
+    val = np.zeros((n_shards, rp, si, smax), dtype=np.float32)
+    for s in range(n_shards):
+        lo = s * rows_per_shard
+        hi = min(m, lo + rows_per_shard)
+        if hi > lo:
+            idx[s, :hi - lo] = gi[lo:hi]
+            val[s, :hi - lo] = gv[lo:hi]
+    sharding = NamedSharding(mesh, P(axes))
+    return ShardedPreparedOperand(
+        jax.device_put(jnp.asarray(idx), sharding),
+        jax.device_put(jnp.asarray(val), sharding),
+        incrs.shape, incrs.section, rows_per_shard, mesh, axes)
+
+
+def incrs_spmm_sharded(a: InCRS | ShardedPreparedOperand, b, *,
+                       mesh: Mesh | None = None, axis=None,
+                       pad_rows_to: int = 128, bn: int | None = None,
+                       variant: str = "auto",
+                       interpret: bool | None = None):
+    """C = A @ B with A row-sharded across the mesh.
+
+    Each device runs the fused kernel over its own stripe panel under
+    ``shard_map``; B is broadcast (replicated in-spec) to every device and
+    the per-shard output panels concatenate along output rows — A is never
+    gathered dense OR sparse onto a single device. At the default
+    ``pad_rows_to`` the per-shard row tiles match the single-device
+    ``incrs_spmm`` tiles exactly (same stripe content, same dot shapes),
+    so results match it bitwise; a smaller ``pad_rows_to`` shrinks the
+    local row tile and is exact only to dot-reduction reassociation.
+    """
+    if isinstance(a, ShardedPreparedOperand):
+        prep = a
+    else:
+        if mesh is None:
+            raise ValueError("incrs_spmm_sharded needs mesh= when given a "
+                             "raw InCRS (or pass a ShardedPreparedOperand)")
+        prep = prepare_incrs_sharded(a, mesh, axis=axis,
+                                     pad_rows_to=pad_rows_to)
+    m, k = prep.shape
+    k2, n = b.shape
+    assert k == k2, (prep.shape, b.shape)
+    rps, section = prep.rows_per_shard, prep.section
+
+    def local(idx, val, bl):
+        p1 = PreparedOperand(idx[0], val[0], (rps, k), section)
+        return incrs_spmm(p1, bl, bn=bn, variant=variant,
+                          interpret=interpret)
+
+    spec0 = P(prep.axes)
+    y = shard_map(local, mesh=prep.mesh, in_specs=(spec0, spec0, P()),
+                  out_specs=P(prep.axes), **SHARD_MAP_KW)(
+        prep.idx, prep.val, jnp.asarray(b))
+    return y[:m]
+
+
+# ----------------------------------------------------------------------
 # Row-panel accumulator budget of the stripe-reuse variant (bm x Np f32
 # held in VMEM for a whole row tile) — beyond this, fall back to the
 # re-expanding order whose accumulator is one (bm, bn) tile.
@@ -331,6 +461,10 @@ def incrs_spmm(a: InCRS | PreparedOperand, b, *, bm: int = 128,
     interpret = INTERPRET if interpret is None else interpret
     prep = a if isinstance(a, PreparedOperand) else \
         prepare_incrs(a, pad_rows_to=bm)
+    # Shard-local panels (row-sharded operands) can be narrower than one
+    # default row tile, or padded to a sub-128 granularity that 128 does
+    # not divide — shrink bm to the largest tile that tiles the panel.
+    bm = math.gcd(bm, prep.padded_rows)
     assert prep.padded_rows % bm == 0, (prep.padded_rows, bm)
     m, k = prep.shape
     k2, n = b.shape
@@ -400,5 +534,7 @@ __all__ = [
     "bsr_matmul_arrays",
     "prep_rounds", "index_match_matmul", "prep_sections", "PreparedOperand",
     "prepare_incrs", "invalidate_prepared", "incrs_spmm", "incrs_to_dense",
+    "ShardedPreparedOperand", "prepare_incrs_sharded", "incrs_spmm_sharded",
+    "shard_axes",
     "flash_mha", "ref",
 ]

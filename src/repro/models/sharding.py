@@ -44,7 +44,21 @@ DEFAULT_RULES: Dict[str, MeshAxes] = {
     "layers": None,               # stacked scan groups — never sharded
     "fsdp": "data",               # FSDP dim of weights (embed dim of params)
     "stage": None,
+    # Row-sharded InCRS stripe metadata (sparse.ShardedInCRSLinearParams /
+    # ops.ShardedPreparedOperand): the leading shard dim of the stacked
+    # (shard, rows, section, slot) stripe arrays splits over these axes —
+    # one output-row panel per device. The trailing dims never shard (a
+    # stripe row is the kernel's unit of work).
+    "incrs_shard": ("data", "model"),
+    "incrs_row": None,            # padded output rows within one shard
+    "incrs_section": None,        # section axis of the stripe arrays
+    "incrs_slot": None,           # slot (smax) axis of the stripe arrays
 }
+
+# Logical axes of the sharded stripe arrays — resolve(INCRS_STRIPE_AXES)
+# under an active mesh yields the PartitionSpec their NamedSharding uses.
+INCRS_STRIPE_AXES = ("incrs_shard", "incrs_row", "incrs_section",
+                     "incrs_slot")
 
 
 class _Ctx(threading.local):

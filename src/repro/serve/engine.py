@@ -13,6 +13,8 @@ RG-LRU states all flow through ``model.decode_step`` opaquely.
 from __future__ import annotations
 
 import dataclasses
+import functools
+import warnings
 from collections import defaultdict
 from typing import Dict, List, Optional
 
@@ -87,13 +89,16 @@ class ServeEngine:
         max_new = max(r.max_new for r in wave)
         prompts = jnp.asarray(np.stack([r.prompt for r in wave]))
         pfx = None
+        npfx = cfg.n_prefix_embeds if cfg.input_mode == "embeds" else 0
         if cfg.input_mode == "embeds":
             # modality stub: deterministic zero frontend embeddings
-            pfx = jnp.zeros((bsz, cfg.n_prefix_embeds, cfg.d_model),
-                            jnp.dtype(cfg.dtype))
+            pfx = jnp.zeros((bsz, npfx, cfg.d_model), jnp.dtype(cfg.dtype))
+        # The prefix embeddings occupy cache positions too: decode advances
+        # to s + npfx + max_new - 1, so the allocation must cover npfx —
+        # leaving it out overflows the KV ring whenever alloc_extra < npfx.
         logits, cache = M.prefill_step(
             cfg, self.params, prompts, prefix_embeds=pfx,
-            alloc_seq=s + max_new + self.alloc_extra,
+            alloc_seq=s + npfx + max_new + self.alloc_extra,
             cache_dtype=self.cache_dtype)
         self.stats["prefill_tokens"] += bsz * s
         lg = np.asarray(logits, dtype=np.float32)
@@ -105,7 +110,6 @@ class ServeEngine:
             if r.max_new > 0:
                 last[i] = self._sample(lg[i], r.temperature)
                 r.out.append(int(last[i]))
-        npfx = cfg.n_prefix_embeds if cfg.input_mode == "embeds" else 0
         for step in range(1, max_new):
             pos = s + npfx + step - 1
             logits, cache = self._decode_jit(
@@ -146,7 +150,8 @@ class SpMMRequest:
 
 
 class SpMMEngine:
-    """Batched SpMM serving on the fused InCRS kernel.
+    """Batched SpMM serving on the fused InCRS kernel, single- or
+    multi-device.
 
     The sparse operand is format-prepped exactly once (through the
     ``ops.prepare_incrs`` cache) at construction; every request wave reuses
@@ -154,24 +159,51 @@ class SpMMEngine:
     kernel alone — no per-request host prep, no dense densification of A.
     Requests are column-concatenated into waves of up to ``max_wave_cols``
     so small RHSs share one kernel launch.
+
+    With a ``mesh`` (or a pre-built ``ops.ShardedPreparedOperand``), the
+    operand is row-sharded — one output-row stripe panel per mesh device —
+    and each wave broadcasts its dense RHS to every device, runs the
+    per-shard fused kernels under ``shard_map``, and concatenates the
+    per-shard output panels. A is never gathered onto one device, so the
+    servable operand scales with device count instead of one chip's VMEM.
     """
 
     def __init__(self, a, *, max_wave_cols: int = 512,
-                 variant: str = "auto", interpret: Optional[bool] = None):
-        """``a``: an ``InCRS`` (prepped here, once, via the memo cache) or
-        an already-built ``ops.PreparedOperand``. ``variant`` selects the
-        kernel grid order ("expand" | "reuse" | "auto" — see
-        ``ops.incrs_spmm``); "auto" switches to the stripe-reuse kernel
-        when a wave is wide enough that per-col-tile re-expansion would
-        dominate."""
+                 variant: str = "auto", interpret: Optional[bool] = None,
+                 mesh=None, shard_axis=None):
+        """``a``: an ``InCRS`` (prepped here, once, via the memo cache), an
+        already-built ``ops.PreparedOperand``, or — for multi-device
+        serving — an ``ops.ShardedPreparedOperand`` (e.g. the ``.prep`` of
+        a trained ``sparse.ShardedInCRSLinearParams``). Passing ``mesh``
+        (with optional ``shard_axis``) row-shards a raw InCRS across that
+        mesh at construction. ``variant`` selects the kernel grid order
+        ("expand" | "reuse" | "auto" — see ``ops.incrs_spmm``); "auto"
+        switches to the stripe-reuse kernel when a wave is wide enough that
+        per-col-tile re-expansion would dominate."""
         from ..kernels import ops
         if variant not in ("auto", "expand", "reuse"):
             raise ValueError(f"variant must be 'auto', 'expand' or "
                              f"'reuse', got {variant!r}")
         self._ops = ops
         self.a = a
-        self.prep = a if isinstance(a, ops.PreparedOperand) else \
-            ops.prepare_incrs(a)
+        if isinstance(a, ops.ShardedPreparedOperand):
+            if mesh is not None and mesh is not a.mesh:
+                raise ValueError(
+                    "ShardedPreparedOperand is already bound to a mesh — "
+                    "drop mesh=, or re-prep the raw InCRS on the new mesh")
+            self.prep = a
+        elif isinstance(a, ops.PreparedOperand):
+            if mesh is not None:
+                raise ValueError(
+                    "cannot re-shard an already-built single-device "
+                    "PreparedOperand — pass the raw InCRS with mesh=, or "
+                    "an ops.ShardedPreparedOperand")
+            self.prep = a
+        elif mesh is not None:
+            self.prep = ops.prepare_incrs_sharded(a, mesh, axis=shard_axis)
+        else:
+            self.prep = ops.prepare_incrs(a)
+        self.sharded = isinstance(self.prep, ops.ShardedPreparedOperand)
         self.max_wave_cols = max_wave_cols
         self.variant = variant
         self.interpret = interpret
@@ -181,7 +213,12 @@ class SpMMEngine:
 
     def submit(self, req: SpMMRequest):
         k = self.a.shape[1]
-        assert req.b.shape[0] == k, (req.b.shape, self.a.shape)
+        # A hard error, not an assert: shape validation must hold under
+        # ``python -O`` too, or a mis-shaped RHS slips into a wave.
+        if req.b.ndim != 2 or req.b.shape[0] != k:
+            raise ValueError(
+                f"request {req.rid}: b has shape {req.b.shape}, expected "
+                f"({k}, cols) to multiply against A of shape {self.a.shape}")
         self.queue.append(req)
 
     def _next_wave(self) -> List[SpMMRequest]:
@@ -195,15 +232,34 @@ class SpMMEngine:
         return wave
 
     def _run_wave(self, wave: List[SpMMRequest]):
-        b = jnp.asarray(np.concatenate([r.b for r in wave], axis=1)
-                        .astype(np.float32))
-        c = np.asarray(self._ops.incrs_spmm(self.prep, b,
-                                            variant=self.variant,
-                                            interpret=self.interpret))
+        # Promote WITHIN the wave: a bf16 request sharing a wave with f32
+        # neighbours computes at f32, and every request's panel comes back
+        # in ITS OWN dtype. The fused kernel accumulates in f32 — that is
+        # the compute-precision ceiling — so a wider-than-f32 wave (f64
+        # requests) is computed at f32 and says so instead of silently
+        # relabeling f32 numbers as f64.
+        wave_dt = functools.reduce(jnp.promote_types,
+                                   (r.b.dtype for r in wave))
+        if jnp.issubdtype(wave_dt, jnp.floating) and \
+                jnp.finfo(wave_dt).bits > 32:
+            warnings.warn(
+                f"SpMMEngine: wave dtype {np.dtype(wave_dt)} exceeds the "
+                f"fused kernel's f32 accumulation — results carry the "
+                f"request dtype but f32 precision", stacklevel=3)
+        b = jnp.asarray(np.concatenate(
+            [np.asarray(r.b, dtype=wave_dt) for r in wave], axis=1))
+        if self.sharded:
+            c = self._ops.incrs_spmm_sharded(self.prep, b,
+                                             variant=self.variant,
+                                             interpret=self.interpret)
+        else:
+            c = self._ops.incrs_spmm(self.prep, b, variant=self.variant,
+                                     interpret=self.interpret)
+        c = np.asarray(c)
         off = 0
         for r in wave:
             w = r.b.shape[1]
-            r.out = c[:, off:off + w]
+            r.out = c[:, off:off + w].astype(r.b.dtype)
             off += w
             r.done = True
             self.finished.append(r)

@@ -3,5 +3,10 @@ from .linear import (SparseLinearParams, sparse_linear_init,  # noqa: F401
                      InCRSLinearParams, InCRSLinearMeta,
                      incrs_linear_init, incrs_linear_from_dense,
                      incrs_linear_stack_init, incrs_linear_apply,
-                     incrs_to_dense_weight)
+                     incrs_to_dense_weight,
+                     ShardedInCRSLinearParams, ShardedInCRSLinearMeta,
+                     incrs_linear_from_dense_sharded,
+                     incrs_linear_sharded_init, incrs_linear_shard,
+                     incrs_linear_sharded_apply,
+                     incrs_sharded_to_dense_weight)
 from .prune import prune_to_bsr  # noqa: F401

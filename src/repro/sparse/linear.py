@@ -27,9 +27,11 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..core.bsr import BSR, magnitude_block_mask
 from ..kernels import ops
+from ..kernels._compat import SHARD_MAP_KW, shard_map
 
 
 @dataclasses.dataclass(frozen=True)
@@ -302,11 +304,27 @@ def _transpose_gather(fwd_idx: np.ndarray, bwd_idx: np.ndarray,
     bkey = ((bwd_idx[bmask].astype(np.int64)
              + s_b[bmask].astype(np.int64) * section) * d_in + r_b[bmask])
     where = np.searchsorted(fkey, bkey)
-    assert bkey.size == fkey.size and np.array_equal(fkey[where], bkey), \
+    # Clip before the probe: a bkey beyond every fkey must surface as the
+    # invariant message below, not as an IndexError inside it.
+    ok = bkey.size == fkey.size and np.array_equal(
+        fkey[np.clip(where, 0, max(fkey.size - 1, 0))] if fkey.size
+        else fkey, bkey)
+    assert ok, \
         "fwd/bwd stripe non-zero sets must be transposes of each other"
     t_gather = np.full(bwd_idx.size, fwd_idx.size, dtype=np.int32)
     t_gather[np.flatnonzero(bmask.ravel())] = fpos[where]
     return t_gather
+
+
+def _prune_magnitude(wt: np.ndarray, density: float | None) -> np.ndarray:
+    """Magnitude-prune a dense W^T to element ``density`` with one GLOBAL
+    threshold — shared by the single-device and sharded packers so both see
+    the identical non-zero pattern for the same (w, density)."""
+    if density is not None and density < 1.0:
+        keep = max(1, int(round(wt.size * density)))
+        thresh = np.partition(np.abs(wt).ravel(), -keep)[-keep]
+        wt = np.where(np.abs(wt) >= thresh, wt, 0.0).astype(np.float32)
+    return wt
 
 
 def incrs_linear_from_dense(w: np.ndarray, density: float | None = None,
@@ -317,11 +335,8 @@ def incrs_linear_from_dense(w: np.ndarray, density: float | None = None,
     from ..core.incrs import InCRS, S_DEFAULT, B_DEFAULT
     section = S_DEFAULT if section is None else section
     block = B_DEFAULT if block is None else block
-    wt = np.ascontiguousarray(np.asarray(w, np.float32).T)   # (out, in)
-    if density is not None and density < 1.0:
-        keep = max(1, int(round(wt.size * density)))
-        thresh = np.partition(np.abs(wt).ravel(), -keep)[-keep]
-        wt = np.where(np.abs(wt) >= thresh, wt, 0.0).astype(np.float32)
+    wt = _prune_magnitude(
+        np.ascontiguousarray(np.asarray(w, np.float32).T), density)
     incrs = InCRS.from_dense(wt, section=section, block=block)
     incrs_t = InCRS.from_dense(np.ascontiguousarray(wt.T),
                                section=section, block=block)
@@ -369,29 +384,23 @@ def _incrs_mm_fwd(values, x, meta):
     return _incrs_mm(values, x, meta), (values, x)
 
 
-def _incrs_mm_bwd(meta, res, dy):
-    values, x = res
-    # dx^T = W @ dy^T: the second fused SpMM, over the transposed stripes.
-    # Their values are a gather of the forward values (t_gather maps pad
-    # slots to the appended zero).
-    flat = jnp.concatenate([values.reshape(-1),
-                            jnp.zeros((1,), values.dtype)])
-    tvals = flat[meta.t_gather].reshape(meta.bwd_idx.shape)
-    tprep = ops.PreparedOperand(meta.bwd_idx, tvals,
-                                (meta.d_in, meta.d_out), meta.section)
-    dx = ops.incrs_spmm(tprep, dy.T).T
-    # dW^T[r, c] = sum_t dy[t, r] x[t, c], evaluated ONLY at the live
-    # non-zeros: gather x's columns by the stripe idx, one T-length MAC per
-    # stored value — compute scales with nnz, not d_out*d_in. Scanned one
-    # section at a time so the gathered-x intermediate peaks at
-    # (Op, smax, T), not the whole padded-nnz x T.
-    idx = meta.fwd_idx
+def _stripe_dw(idx: jnp.ndarray, section: int, x, dy) -> jnp.ndarray:
+    """dW^T restricted to the live non-zeros of one stripe set.
+
+    dW^T[r, c] = sum_t dy[t, r] x[t, c], evaluated ONLY at the live
+    non-zeros: gather x's columns by the stripe idx, one T-length MAC per
+    stored value — compute scales with nnz, not d_out*d_in. Scanned one
+    section at a time so the gathered-x intermediate peaks at
+    (Op, smax, T), not the whole padded-nnz x T. Shared by the
+    single-device and row-sharded VJPs (the sharded one calls it with a
+    shard-local ``idx``/``dy`` panel).
+    """
     n_sections = idx.shape[1]
     gcol = jnp.where(
         idx >= 0,
-        idx + meta.section * jnp.arange(n_sections,
-                                        dtype=jnp.int32)[None, :, None], 0)
-    kp = n_sections * meta.section
+        idx + section * jnp.arange(n_sections,
+                                   dtype=jnp.int32)[None, :, None], 0)
+    kp = n_sections * section
     xpt = jnp.pad(x.astype(jnp.float32),
                   ((0, 0), (0, kp - x.shape[1]))).T          # (kp, T)
     dyp = jnp.pad(dy.astype(jnp.float32),
@@ -403,7 +412,21 @@ def _incrs_mm_bwd(meta, res, dy):
                                 preferred_element_type=jnp.float32)
 
     _, dvals = jax.lax.scan(section_dw, None, jnp.moveaxis(gcol, 1, 0))
-    dvals = jnp.where(idx >= 0, jnp.moveaxis(dvals, 0, 1), 0.0)
+    return jnp.where(idx >= 0, jnp.moveaxis(dvals, 0, 1), 0.0)
+
+
+def _incrs_mm_bwd(meta, res, dy):
+    values, x = res
+    # dx^T = W @ dy^T: the second fused SpMM, over the transposed stripes.
+    # Their values are a gather of the forward values (t_gather maps pad
+    # slots to the appended zero).
+    flat = jnp.concatenate([values.reshape(-1),
+                            jnp.zeros((1,), values.dtype)])
+    tvals = flat[meta.t_gather].reshape(meta.bwd_idx.shape)
+    tprep = ops.PreparedOperand(meta.bwd_idx, tvals,
+                                (meta.d_in, meta.d_out), meta.section)
+    dx = ops.incrs_spmm(tprep, dy.T).T
+    dvals = _stripe_dw(meta.fwd_idx, meta.section, x, dy)
     return dvals.astype(values.dtype), dx.astype(x.dtype)
 
 
@@ -427,6 +450,295 @@ def incrs_to_dense_weight(p: InCRSLinearParams) -> np.ndarray:
     r, s, k = np.nonzero(idx >= 0)
     wt[r, idx[r, s, k] + s * p.meta.section] = vals[r, s, k]
     return wt[:p.meta.d_out, :p.meta.d_in].T
+
+
+# ----------------------------------------------------------------------
+# Row-sharded InCRSLinear: the paper's mesh scales by giving each row of the
+# comparator array its OWN slice of the sparse operand while the dense input
+# is shared (§IV). Here W^T (d_out, d_in) is split into n_shards contiguous
+# OUTPUT-row panels — one per mesh device along the shard axes — and:
+#
+#   y  = x @ W      per-shard fused SpMM under shard_map; each device
+#                   computes its own (T, shard_width) output panel, panels
+#                   concatenate along d_out (no collective in forward)
+#   dx = dy @ W^T   per-shard fused SpMM over the shard's TRANSPOSED
+#                   stripes with the shard's dy panel, then ALL-REDUCED
+#                   (psum) across the row shards — the contraction dim
+#                   d_out is what the sharding split
+#   dW^T            shard-LOCAL (no collective): a shard's weight rows only
+#                   ever see its own dy panel
+#
+# Per-row arithmetic is identical to the single-device fused path (same
+# stripe content, same tile shapes), so forward and dW match it bitwise;
+# dx sums the same per-section contributions with a cross-device reduction
+# tree, exact to reassociation of the f32 accumulation.
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ShardedInCRSLinearMeta:
+    """Static metadata of one row-sharded trainable InCRS weight.
+
+    All per-shard stripe arrays carry a leading shard axis placed with a
+    ``NamedSharding`` over ``axes`` of ``mesh`` — a device only ever holds
+    its own panel's metadata. ``eq=False`` -> identity hash/eq, same
+    rationale as ``InCRSLinearMeta``.
+    """
+    fwd_idx: jnp.ndarray      # (S, Op_s, Si, smax) int32 — W^T shard stripes
+    bwd_idx: jnp.ndarray      # (S, Ip, So_s, smax_t) int32 — W shard stripes
+    t_gather: jnp.ndarray     # (S, Ip*So_s*smax_t) int32 — per-shard bwd
+    #                           slot -> shard-local flat fwd slot
+    d_in: int
+    d_out: int
+    section: int
+    nnz: int
+    mesh: Mesh
+    axes: Tuple[str, ...]     # mesh axes the shard dim is split over
+    shard_width: int          # d_out // n_shards output rows per shard
+
+    @property
+    def n_shards(self) -> int:
+        return self.fwd_idx.shape[0]
+
+
+@dataclasses.dataclass
+class ShardedInCRSLinearParams:
+    values: jnp.ndarray       # (S, Op_s, Si, smax) f32 — trainable leaf,
+    #                           NamedSharding over the shard axes
+    meta: ShardedInCRSLinearMeta
+
+    @property
+    def d_in(self) -> int:
+        return self.meta.d_in
+
+    @property
+    def d_out(self) -> int:
+        return self.meta.d_out
+
+    @property
+    def nnz(self) -> int:
+        return self.meta.nnz
+
+    @property
+    def density(self) -> float:
+        return self.meta.nnz / float(self.meta.d_in * self.meta.d_out)
+
+    @property
+    def prep(self) -> "ops.ShardedPreparedOperand":
+        """Row-sharded device-ready W^T operand over the CURRENT values —
+        what a multi-device ``serve.SpMMEngine`` consumes directly."""
+        return ops.ShardedPreparedOperand(
+            self.meta.fwd_idx, self.values,
+            (self.meta.d_out, self.meta.d_in), self.meta.section,
+            self.meta.shard_width, self.meta.mesh, self.meta.axes)
+
+
+jax.tree_util.register_pytree_node(
+    ShardedInCRSLinearParams,
+    lambda p: ((p.values,), p.meta),
+    lambda meta, children: ShardedInCRSLinearParams(children[0], meta))
+
+
+def _resolve_shard_axes(mesh: Mesh | None, axis):
+    """Pick the mesh + shard-axis spec (for ``ops.shard_axes``): explicit
+    args win; otherwise the active ``models.sharding`` context supplies the
+    mesh and its "incrs_shard" logical rule supplies the axes (falling
+    back to every mesh axis)."""
+    from ..models import sharding as sh
+    if mesh is None:
+        mesh = sh.current_mesh()
+        if mesh is None:
+            raise ValueError(
+                "row-sharded InCRSLinear needs a mesh — pass mesh= or "
+                "construct inside models.sharding.axis_rules(...)")
+    if axis is None and sh.current_mesh() is mesh:
+        rule = sh.resolve(sh.INCRS_STRIPE_AXES)[0]
+        if rule is not None:
+            axis = rule
+    return mesh, axis
+
+
+def _crs_from_mask(dense: np.ndarray, mask: np.ndarray):
+    """CRS over an EXPLICIT occupancy mask: a slot where ``mask`` is True
+    is live even when the stored value is exactly 0.0 — what a
+    pattern-preserving reshard of trained weights needs (``CRS.from_dense``
+    would silently drop such slots from the pattern)."""
+    from ..core.crs import CRS
+    m, n = dense.shape
+    rows, cols = np.nonzero(mask)                    # C order = (row, col)
+    values = dense[rows, cols].astype(np.float32)
+    row_ptr = np.zeros(m + 1, dtype=np.int64)
+    np.add.at(row_ptr, rows + 1, 1)
+    return CRS(values, cols.astype(np.int32), np.cumsum(row_ptr), (m, n))
+
+
+def incrs_linear_from_dense_sharded(
+        w: np.ndarray, density: float | None = None, *,
+        mask: np.ndarray | None = None, mesh: Mesh | None = None,
+        axis=None, section: int | None = None,
+        block: int | None = None) -> ShardedInCRSLinearParams:
+    """Pack a dense W (d_in, d_out) — optionally magnitude-pruned with the
+    SAME global threshold as the single-device packer — into the
+    row-sharded trainable form: one contiguous d_out panel per device of
+    ``mesh`` along ``axis`` (default: the "incrs_shard" logical rule of the
+    active sharding context, else every mesh axis).
+
+    ``mask`` (bool, same shape as ``w``, mutually exclusive with
+    ``density``) fixes the sparsity pattern explicitly — slots the mask
+    keeps stay live even at value 0.0 (used by ``incrs_linear_shard`` to
+    preserve a trained layer's pattern exactly)."""
+    from ..core.incrs import InCRS, S_DEFAULT, B_DEFAULT
+    section = S_DEFAULT if section is None else section
+    block = B_DEFAULT if block is None else block
+    mesh, axis = _resolve_shard_axes(mesh, axis)
+    axes, n_shards = ops.shard_axes(mesh, axis)
+    d_in, d_out = w.shape
+    if d_out % n_shards:
+        raise ValueError(f"d_out={d_out} must divide into {n_shards} "
+                         f"row shards (mesh axes {axes})")
+    sw = d_out // n_shards
+    wt = np.ascontiguousarray(np.asarray(w, np.float32).T)
+    if mask is not None:
+        if density is not None:
+            raise ValueError("pass density OR mask, not both")
+        maskt = np.ascontiguousarray(np.asarray(mask, bool).T)
+    else:
+        wt = _prune_magnitude(wt, density)
+        maskt = wt != 0.0
+    per = []
+    for s in range(n_shards):
+        wts = np.ascontiguousarray(wt[s * sw:(s + 1) * sw])
+        ms = np.ascontiguousarray(maskt[s * sw:(s + 1) * sw])
+        inc = InCRS.from_crs(_crs_from_mask(wts, ms),
+                             section=section, block=block)
+        inc_t = InCRS.from_crs(
+            _crs_from_mask(np.ascontiguousarray(wts.T),
+                           np.ascontiguousarray(ms.T)),
+            section=section, block=block)
+        fi, fv = ops.prep_sections(inc, pad_rows_to=128)
+        bi, _ = ops.prep_sections(inc_t, pad_rows_to=128)
+        per.append((np.asarray(fi), np.asarray(fv), np.asarray(bi),
+                    inc.crs.nnz))
+    # Stack per-shard preps on a common slot width (extra slots are -1/0.0
+    # pads, which expand to exact +0.0 in the kernel — per-row results stay
+    # bit-identical to the unsharded prep).
+    smax = max(p[0].shape[2] for p in per)
+    smax_t = max(p[2].shape[2] for p in per)
+
+    def pad3(a, s, fill):
+        return np.pad(a, ((0, 0), (0, 0), (0, s - a.shape[2])),
+                      constant_values=fill)
+
+    fis = np.stack([pad3(p[0], smax, -1) for p in per])
+    fvs = np.stack([pad3(p[1], smax, 0.0) for p in per])
+    bis = np.stack([pad3(p[2], smax_t, -1) for p in per])
+    tgs = np.stack([_transpose_gather(fis[s], bis[s], section, d_in)
+                    for s in range(n_shards)])
+    sharding = NamedSharding(mesh, P(axes))
+    put = lambda a: jax.device_put(jnp.asarray(a), sharding)
+    meta = ShardedInCRSLinearMeta(
+        put(fis), put(bis), put(tgs), d_in, d_out, section,
+        sum(p[3] for p in per), mesh, axes, sw)
+    return ShardedInCRSLinearParams(put(fvs), meta)
+
+
+def incrs_linear_sharded_init(key, d_in: int, d_out: int, density: float,
+                              scale: float = 0.02,
+                              **kw) -> ShardedInCRSLinearParams:
+    w = np.asarray(jax.random.normal(key, (d_in, d_out))) * scale
+    return incrs_linear_from_dense_sharded(w, density, **kw)
+
+
+def incrs_linear_shard(p: InCRSLinearParams, *, mesh: Mesh | None = None,
+                       axis=None) -> ShardedInCRSLinearParams:
+    """Re-shard a trained single-device ``InCRSLinearParams`` across a mesh
+    (values and pattern preserved — e.g. train on one device, deploy the
+    SAME weights into multi-device serving). The live-slot mask rides along
+    explicitly, so a trained value that happens to be exactly 0.0 stays a
+    trainable slot instead of silently leaving the pattern."""
+    idx = np.asarray(p.meta.fwd_idx)
+    maskt = np.zeros((idx.shape[0], idx.shape[1] * p.meta.section), bool)
+    r, s, k = np.nonzero(idx >= 0)
+    maskt[r, idx[r, s, k] + s * p.meta.section] = True
+    mask = maskt[:p.meta.d_out, :p.meta.d_in].T
+    return incrs_linear_from_dense_sharded(
+        incrs_to_dense_weight(p), mask=mask, mesh=mesh, axis=axis,
+        section=p.meta.section)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _incrs_mm_sharded(values, x, meta: ShardedInCRSLinearMeta):
+    """y[T, d_out] = x[T, d_in] @ W with W^T row-sharded: each device runs
+    the fused SpMM over its own stripe panel; panels concatenate on d_out."""
+    ax = meta.axes
+
+    def local(v, fidx, xl):
+        prep1 = ops.PreparedOperand(fidx[0], v[0],
+                                    (meta.shard_width, meta.d_in),
+                                    meta.section)
+        return ops.incrs_spmm(prep1, xl.T).T          # (T, shard_width)
+
+    return shard_map(local, mesh=meta.mesh,
+                     in_specs=(P(ax), P(ax), P()),
+                     out_specs=P(None, ax), **SHARD_MAP_KW)(
+        values, meta.fwd_idx, x)
+
+
+def _incrs_mm_sharded_fwd(values, x, meta):
+    return _incrs_mm_sharded(values, x, meta), (values, x)
+
+
+def _incrs_mm_sharded_bwd(meta, res, dy):
+    values, x = res
+    ax = meta.axes
+
+    def local(v, fidx, bidx, tg, dyl, xl):
+        v1, fidx1, bidx1, tg1 = v[0], fidx[0], bidx[0], tg[0]
+        # dx: the shard's transposed-stripe fused SpMM sees only the
+        # shard's dy panel (its slice of the d_out contraction), so the
+        # partial products MUST be summed across row shards.
+        flat = jnp.concatenate([v1.reshape(-1), jnp.zeros((1,), v1.dtype)])
+        tvals = flat[tg1].reshape(bidx1.shape)
+        tprep = ops.PreparedOperand(bidx1, tvals,
+                                    (meta.d_in, meta.shard_width),
+                                    meta.section)
+        dx = jax.lax.psum(ops.incrs_spmm(tprep, dyl.T).T, ax)
+        # dW: shard-local — this shard's weight rows only ever meet its
+        # own dy panel; no collective.
+        dvals = _stripe_dw(fidx1, meta.section, xl, dyl)
+        return dvals[None], dx
+
+    dvals, dx = shard_map(local, mesh=meta.mesh,
+                          in_specs=(P(ax), P(ax), P(ax), P(ax),
+                                    P(None, ax), P()),
+                          out_specs=(P(ax), P()), **SHARD_MAP_KW)(
+        values, meta.fwd_idx, meta.bwd_idx, meta.t_gather, dy, x)
+    return dvals.astype(values.dtype), dx.astype(x.dtype)
+
+
+_incrs_mm_sharded.defvjp(_incrs_mm_sharded_fwd, _incrs_mm_sharded_bwd)
+
+
+def incrs_linear_sharded_apply(p: ShardedInCRSLinearParams,
+                               x: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., d_in) -> (..., d_out) through per-shard fused SpMMs;
+    differentiable wrt ``p.values`` and ``x``."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, p.meta.d_in)
+    y = _incrs_mm_sharded(p.values, x2, p.meta)
+    return y.reshape(*lead, p.meta.d_out)
+
+
+def incrs_sharded_to_dense_weight(p: ShardedInCRSLinearParams) -> np.ndarray:
+    """Densify W (d_in, d_out) from the CURRENT sharded values (gathers to
+    host — for oracles/tests only)."""
+    idx = np.asarray(p.meta.fwd_idx)                 # (S, Op_s, Si, smax)
+    vals = np.asarray(p.values)
+    sw, section = p.meta.shard_width, p.meta.section
+    wt = np.zeros((p.meta.d_out, idx.shape[2] * section), np.float32)
+    for s in range(idx.shape[0]):
+        r, ss, k = np.nonzero(idx[s] >= 0)
+        wt[s * sw + r, idx[s][r, ss, k] + ss * section] = vals[s][r, ss, k]
+    return wt[:, :p.meta.d_in].T
 
 
 def to_dense(p: SparseLinearParams) -> jnp.ndarray:

@@ -16,17 +16,11 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-try:                                       # newer jax: top-level export
-    from jax import shard_map
-except ImportError:                        # older jax: experimental module
-    from jax.experimental.shard_map import shard_map
-# The replication-check kwarg was renamed check_rep -> check_vma
-# independently of the export move; pick whichever this jax accepts.
-import inspect as _inspect
-_SHARD_MAP_KW = (
-    {"check_vma": False}
-    if "check_vma" in _inspect.signature(shard_map).parameters
-    else {"check_rep": False})
+
+# shard_map version compat is shared with the sharded InCRS data path
+# (sparse/linear.py, kernels/ops.py); the canonical shim lives next to the
+# kernels. The old names are re-exported here for existing importers.
+from ..kernels._compat import SHARD_MAP_KW as _SHARD_MAP_KW, shard_map
 
 
 def pipeline_apply(stage_fn: Callable, stage_params, x, *, n_stages: int,

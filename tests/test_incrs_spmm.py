@@ -288,6 +288,73 @@ def test_spmm_engine_serves_and_reuses_prep(rng):
         np.testing.assert_allclose(r.out, d @ r.b, rtol=1e-4, atol=1e-4)
 
 
+def test_incrs_linear_shard_preserves_zero_valued_slots(rng):
+    """Resharding a trained layer must keep a live slot whose value landed
+    on exactly 0.0 — the pattern rides along as an explicit mask, not
+    re-derived from non-zeros."""
+    from jax.sharding import Mesh
+    from repro.sparse.linear import (incrs_linear_init, incrs_linear_shard,
+                                     incrs_to_dense_weight,
+                                     incrs_sharded_to_dense_weight)
+    p = incrs_linear_init(jax.random.PRNGKey(0), 40, 64, density=0.2,
+                          section=32, block=8)
+    live = np.asarray(p.meta.fwd_idx) >= 0
+    r, s, k = np.nonzero(live)
+    vals = np.asarray(p.values).copy()
+    vals[r[0], s[0], k[0]] = 0.0                  # a trained-to-zero weight
+    import dataclasses
+    p = dataclasses.replace(p, values=jnp.asarray(vals))
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    ps = incrs_linear_shard(p, mesh=mesh)
+    assert ps.nnz == p.nnz                        # slot still in the pattern
+    np.testing.assert_array_equal(incrs_to_dense_weight(p),
+                                  incrs_sharded_to_dense_weight(ps))
+
+
+def test_spmm_engine_submit_rejects_bad_shapes(rng):
+    """Shape validation must be a real error (asserts vanish under -O)."""
+    from repro.serve.engine import SpMMEngine, SpMMRequest
+    inc = InCRS.from_dense(_random_sparse(rng, 16, 300, 0.1))
+    eng = SpMMEngine(inc)
+    with pytest.raises(ValueError, match="expected"):
+        eng.submit(SpMMRequest(0, rng.normal(size=(299, 4))
+                               .astype(np.float32)))
+    with pytest.raises(ValueError, match="expected"):
+        eng.submit(SpMMRequest(1, rng.normal(size=300).astype(np.float32)))
+    assert not eng.queue
+
+
+def test_spmm_engine_preserves_request_dtypes(rng):
+    """A wave computes at the PROMOTED dtype (up to the kernel's f32
+    accumulation ceiling) and each request's panel comes back in its own
+    dtype — no silent f32 blanket relabeling. A wider-than-f32 wave warns
+    that compute stays f32."""
+    import warnings as _w
+    from repro.serve.engine import SpMMEngine, SpMMRequest
+    d = _random_sparse(rng, 32, 300, 0.1)
+    inc = InCRS.from_dense(d)
+    eng = SpMMEngine(inc, max_wave_cols=64)
+    bf16 = np.asarray(jnp.asarray(
+        rng.normal(size=(300, 8)).astype(np.float32), jnp.bfloat16))
+    f32 = rng.normal(size=(300, 8)).astype(np.float32)
+    for i, b in enumerate((bf16, f32)):
+        eng.submit(SpMMRequest(i, b))
+    with _w.catch_warnings():
+        _w.simplefilter("error")                      # f32-wave: no warning
+        done = {r.rid: r for r in eng.run()}
+    assert done[0].out.dtype == bf16.dtype            # bf16 in, bf16 out
+    assert done[1].out.dtype == np.float32
+    f64 = rng.normal(size=(300, 8)).astype(np.float64)
+    eng.submit(SpMMRequest(2, f64))
+    with pytest.warns(UserWarning, match="f32 precision"):
+        done[2] = eng.run()[-1]
+    assert done[2].out.dtype == np.float64            # dtype kept, f32 math
+    for i, b in enumerate((bf16, f32, f64)):
+        np.testing.assert_allclose(
+            done[i].out.astype(np.float32),
+            d @ b.astype(np.float32), rtol=1e-2, atol=1e-2)
+
+
 def test_invalidate_prepared_after_mutation(rng):
     d = _random_sparse(rng, 16, 300, 0.1)
     inc = InCRS.from_dense(d)

@@ -110,6 +110,37 @@ def test_finished_lane_does_not_perturb_sampling(params):
     assert len(outs[0]) == 4
 
 
+def test_embeds_mode_alloc_includes_prefix(monkeypatch):
+    """Regression: the cache allocation ignored n_prefix_embeds, so in
+    embeds mode a small alloc_extra under-allocated the KV ring (decode
+    positions advance to s + npfx + max_new - 1 but only s + max_new slots
+    existed — the ring silently overwrote the oldest positions). The
+    engine must request at least s + npfx + max_new slots even at
+    alloc_extra=0, and still produce the same greedy tokens as a generous
+    allocation."""
+    cfg = ModelConfig("t", 2, 64, 4, 2, 128, 256, dtype="float32",
+                      input_mode="embeds", n_prefix_embeds=16)
+    p = M.init(cfg, jax.random.PRNGKey(0))[0]
+    seen = {}
+    real_prefill = M.prefill_step
+
+    def spy(cfg_, params_, prompts, **kw):
+        seen["alloc_seq"] = kw["alloc_seq"]
+        return real_prefill(cfg_, params_, prompts, **kw)
+
+    monkeypatch.setattr(M, "prefill_step", spy)
+    outs = []
+    for extra in (64, 0):
+        eng = ServeEngine(cfg, p, n_slots=1, cache_dtype=jnp.float32,
+                          alloc_extra=extra)
+        eng.submit(Request(0, np.arange(4, 12, dtype=np.int32), max_new=6))
+        outs.append(eng.run()[0].out)
+    # decode writes positions up to s + npfx + max_new - 1
+    assert seen["alloc_seq"] >= 8 + 16 + 6
+    assert outs[0] == outs[1]
+    assert len(outs[1]) == 6
+
+
 def test_temperature_sampling_runs(params):
     eng = ServeEngine(CFG, params, n_slots=2, cache_dtype=jnp.float32,
                       seed=7)
