@@ -95,6 +95,36 @@ def run(seed: int = 0):
         "workload": f"{spec.m}x{spec.n} d={spec.density} @ 256 cols",
     }
 
+    # Sparsity-lifecycle repack: one full magnitude re-prune of a trainable
+    # InCRSLinear on the SAME workload (densify -> new mask -> rebuild
+    # counters/stripes/t_gather), against the fused SpMM it amortizes over.
+    # The ratio is the "how many multiplies must a pattern survive" number
+    # a re-pruning schedule's cadence should beat.
+    from repro.sparse import linear as slin, pattern as spat
+    lp = slin.incrs_linear_from_dense(a_sp.to_dense().T,
+                                      section=inc.section, block=inc.block)
+    dens = [0.02, 0.015, 0.01]
+
+    def _repack_cycle():
+        p = lp
+        for d in dens:
+            p = spat.magnitude_repack(p, d)
+        return p.values
+
+    repack_us = _time(_repack_cycle) / len(dens)
+    rows.append(("incrs_repack", repack_us,
+                 f"nnz={a_sp.nnz};per-repack;vs_fused="
+                 f"{repack_us / fused_us:.1f}x"))
+    comparisons["incrs_repack_vs_spmm"] = {
+        "repack_us": repack_us,
+        "fused_spmm_us": fused_us,
+        # one repack costs this many fused SpMMs — the number of
+        # multiplies a pattern must outlive for re-prep to amortize
+        "repack_cost_in_spmms": repack_us / fused_us,
+        "workload": f"{spec.m}x{spec.n} d={spec.density} magnitude "
+                    f"re-prune, amortized over 256-col fused SpMM",
+    }
+
     # Stripe-reuse vs per-col-tile re-expansion on the same operand, at a
     # fixed 128-wide col tiling over a 1024-col RHS (8 col tiles): the
     # baseline order expands every section stripe once PER TILE, the reuse

@@ -1,0 +1,174 @@
+"""End-to-end sparsity LIFECYCLE on the fused InCRS kernel:
+
+  schedule -> repack -> checkpoint -> resume -> hot-swap deploy.
+
+A 2-layer MLP student starts DENSE (every slot of an all-True
+``SparsityPattern`` is trainable), regresses a dense teacher on the fused
+``incrs_spmm`` forward/backward, and is magnitude-re-pruned down the cubic
+``PruneSchedule`` by the trainer's prune callback: values surviving each
+pattern change carry over, AdamW moments ride the same repack (pruned
+slots' moments reset). Mid-schedule the run checkpoints through
+``CheckpointManager`` — patterns ride along — and is resumed into a FRESH
+dense template, proving auto-resume continues mid-schedule with the exact
+pruned shapes. A ``serve.SpMMEngine`` starts serving the layer's INITIAL
+pattern; after training, the final re-pruned pattern is hot-swapped into
+the RUNNING engine with ``swap_pattern`` (no restart) and served results
+are checked against the trained dense oracle.
+
+Run: PYTHONPATH=src python examples/train_reprune.py --steps 24
+"""
+import argparse
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.sparse.linear import (incrs_linear_apply, incrs_linear_init,
+                                 incrs_to_dense_weight)
+from repro.sparse.pattern import PruneSchedule, get_pattern
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.train.trainer import make_prune_callback
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--d-in", type=int, default=128)
+    ap.add_argument("--d-hidden", type=int, default=128)
+    ap.add_argument("--d-out", type=int, default=64)
+    ap.add_argument("--density", type=float, default=0.15,
+                    help="final target density of the schedule")
+    ap.add_argument("--steps", type=int, default=24)
+    ap.add_argument("--prune-every", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--section", type=int, default=64)
+    ap.add_argument("--block", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="checkpoint directory (default: a temp dir)")
+    args = ap.parse_args(argv)
+
+    rng = np.random.default_rng(0)
+    w1 = rng.normal(size=(args.d_in, args.d_hidden)).astype(np.float32) * 0.2
+    w2 = rng.normal(size=(args.d_hidden, args.d_out)).astype(np.float32) * 0.2
+    x = jnp.asarray(rng.normal(size=(args.batch, args.d_in))
+                    .astype(np.float32))
+    y = jnp.tanh(x @ jnp.asarray(w1)) @ jnp.asarray(w2)
+
+    kw = dict(section=args.section, block=args.block)
+
+    def init_params():
+        # density=1.0 -> an all-live pattern: the layers START dense and
+        # the schedule prunes them down.
+        k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+        return {
+            "l1": incrs_linear_init(k1, args.d_in, args.d_hidden, 1.0,
+                                    scale=0.2, **kw),
+            "l2": incrs_linear_init(k2, args.d_hidden, args.d_out, 1.0,
+                                    scale=0.2, **kw),
+        }
+
+    params = init_params()
+    print(f"student starts dense: l1 density "
+          f"{params['l1'].density:.2f}, target {args.density}")
+
+    def loss_fn(p):
+        h = jnp.tanh(incrs_linear_apply(p["l1"], x))
+        return jnp.mean((incrs_linear_apply(p["l2"], h) - y) ** 2)
+
+    opt = AdamWConfig(lr=3e-3, weight_decay=0.0,
+                      warmup_steps=max(2, args.steps // 10),
+                      total_steps=args.steps)
+    opt_state = adamw_init(opt, params)
+    schedule = PruneSchedule(args.density, args.steps,
+                             warmup_frac=0.2, every=args.prune_every)
+    prune_cb = make_prune_callback(schedule)
+
+    @jax.jit
+    def step_fn(p, s):
+        loss, grads = jax.value_and_grad(loss_fn)(p)
+        p, s, _ = adamw_update(opt, grads, s, p)
+        return p, s, loss
+
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="reprune_ck_")
+    ck = CheckpointManager(ckpt_dir, keep=2, async_write=False)
+    resume_at = args.steps // 2
+
+    # Serving starts on the INITIAL (dense) pattern — the engine keeps
+    # running across the whole training run and gets the final pattern
+    # hot-swapped in at the end.
+    from repro.serve.engine import SpMMEngine, SpMMRequest
+    eng = SpMMEngine(params["l1"], max_wave_cols=256)
+    eng.submit(SpMMRequest(0, rng.normal(size=(args.d_in, 16))
+                           .astype(np.float32)))
+    eng.run()
+
+    def run_steps(params, opt_state, lo, hi):
+        last = None
+        for step in range(lo, hi):
+            params, opt_state, info = prune_cb(step, params, opt_state)
+            if info:
+                print(f"  step {step:3d}: re-pruned {info['layers']} "
+                      f"layers to density {info['density']:.3f} "
+                      f"(pattern v{get_pattern(params['l1']).version})")
+            params, opt_state, loss = step_fn(params, opt_state)
+            last = float(loss)
+            ck.save(step + 1, {"params": params, "opt": opt_state})
+        return params, opt_state, last
+
+    t0 = time.time()
+    params, opt_state, _ = run_steps(params, opt_state, 0, resume_at)
+    mid_version = get_pattern(params["l1"]).version
+    assert mid_version > 0, "schedule should have re-pruned by mid-run"
+
+    # --- simulated preemption: fresh DENSE template, restore, continue.
+    print(f"resuming at step {ck.latest_step()} from {ckpt_dir} "
+          f"(pattern v{mid_version}, mid-schedule)")
+    template = {"params": init_params(), "opt": None}
+    template["opt"] = adamw_init(opt, template["params"])
+    state = ck.restore(ck.latest_step(), template)
+    params, opt_state = state["params"], state["opt"]
+    assert get_pattern(params["l1"]).version == mid_version, \
+        "restore must land mid-schedule, not at version 0"
+
+    params, opt_state, last = run_steps(params, opt_state,
+                                        resume_at, args.steps)
+    # final schedule tick: the cubic curve reaches final_density exactly
+    # AT total_steps.
+    params, opt_state, info = prune_cb(args.steps, params, opt_state)
+    if info:
+        print(f"  final re-prune to density {info['density']:.3f} "
+              f"(pattern v{get_pattern(params['l1']).version})")
+    dt = time.time() - t0
+    dens = params["l1"].density
+    print(f"trained {args.steps} steps in {dt:.1f}s: final loss "
+          f"{last:.4f}, l1 density {dens:.3f} "
+          f"(pattern v{get_pattern(params['l1']).version})")
+    tol = 1.5 / (args.d_in * args.d_hidden)
+    assert dens <= args.density + max(0.02, tol), \
+        "schedule must reach the target density"
+
+    # --- hot-swap the final pattern into the running engine.
+    eng.swap_pattern(params["l1"])
+    reqs = [SpMMRequest(i + 1, rng.normal(size=(args.d_in, 16))
+                        .astype(np.float32)) for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    done = [r for r in eng.run() if r.rid > 0]
+    w1_trained = incrs_to_dense_weight(params["l1"])
+    for r in done:
+        np.testing.assert_allclose(r.out, w1_trained.T @ r.b,
+                                   rtol=1e-3, atol=1e-3)
+    print(f"hot-swapped pattern v{eng.pattern_version} into the running "
+          f"engine (swaps={eng.stats['pattern_swaps']}); served "
+          f"{len(done)} requests on the final pattern — "
+          f"schedule -> repack -> checkpoint -> resume -> deploy OK")
+    if args.ckpt_dir is None:
+        import shutil
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

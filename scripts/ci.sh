@@ -16,6 +16,11 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 python benchmarks/kernel_bench.py --json BENCH_kernels.json
 # trainable-InCRS end-to-end smoke (fused-kernel fwd/bwd + serve round trip)
 python examples/train_unstructured.py --steps 8
-# row-sharded SpMM serving smoke (8-way mesh on fake CPU devices)
+# sparsity-lifecycle smoke: scheduled re-pruning -> mid-schedule
+# checkpoint/resume -> hot-swap into a running SpMMEngine
+python examples/train_reprune.py --steps 8
+# row-sharded SpMM serving smoke (8-way mesh on fake CPU devices), with a
+# live pattern swap into the running engine
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
-    python -m repro.launch.serve --spmm --spmm-shards 8 --n-requests 4
+    python -m repro.launch.serve --spmm --spmm-shards 8 --spmm-swap \
+    --n-requests 4

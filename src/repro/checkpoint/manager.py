@@ -14,9 +14,15 @@
                  (N -> M reshape is just a different device_put).
   * AUTO-RESUME — ``latest_step`` + ``restore`` pick up after preemption;
                  partial writes are ignored (no manifest entry).
+  * PATTERNS   — sparsity-lifecycle layers (``sparse.pattern``) save their
+                 pattern (mask + version) alongside the values; ``restore``
+                 repacks the template to the saved pattern first, so a job
+                 auto-resumes MID-SCHEDULE with the exact pruned shapes.
 
-Pytrees are flattened to ``path -> array`` with '/'-joined keys; the
-treedef is reconstructed from the target template on restore.
+Pytrees are flattened to ``path -> array`` with '/'-joined keys via
+``jax.tree_util`` key-paths, so REGISTERED custom pytree nodes (e.g. an
+``InCRSLinearParams`` tree) round-trip; the treedef is reconstructed from
+the target template on restore.
 """
 from __future__ import annotations
 
@@ -28,31 +34,129 @@ import time
 from typing import Any, Dict, Optional
 
 import jax
+import jax.tree_util as tu
 import numpy as np
 
+_PATTERN_PREFIX = "__pattern__/"
 
-def _flatten(tree, prefix="") -> Dict[str, np.ndarray]:
+
+def _key_str(k) -> str:
+    """One key-path entry -> path segment. Dict/sequence keys keep the
+    historical '/'-joined format; GetAttrKey names registered-node leaves
+    (e.g. ``.../values``); anything else falls back to its index/repr."""
+    if isinstance(k, tu.DictKey):
+        return str(k.key)
+    if isinstance(k, tu.SequenceKey):
+        return str(k.idx)
+    if isinstance(k, tu.GetAttrKey):
+        return str(k.name)
+    if isinstance(k, tu.FlattenedIndexKey):
+        return str(k.key)
+    return str(k)
+
+
+def _path_str(path) -> str:
+    return "/".join(_key_str(k) for k in path)
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    """path -> leaf, traversing EVERY registered pytree node (custom nodes
+    included) — not just dicts/lists."""
     out = {}
-    if isinstance(tree, dict):
-        for k, v in tree.items():
-            out.update(_flatten(v, f"{prefix}{k}/"))
-    elif isinstance(tree, (list, tuple)):
-        for i, v in enumerate(tree):
-            out.update(_flatten(v, f"{prefix}{i}/"))
-    else:
-        out[prefix[:-1]] = np.asarray(tree)
+    for path, leaf in tu.tree_flatten_with_path(tree)[0]:
+        key = _path_str(path)
+        if key in out:
+            raise ValueError(f"duplicate checkpoint key {key!r}")
+        out[key] = leaf
     return out
 
 
-def _unflatten_like(template, flat: Dict[str, np.ndarray], prefix=""):
-    if isinstance(template, dict):
-        return {k: _unflatten_like(v, flat, f"{prefix}{k}/")
-                for k, v in template.items()}
-    if isinstance(template, (list, tuple)):
-        t = [_unflatten_like(v, flat, f"{prefix}{i}/")
-             for i, v in enumerate(template)]
-        return type(template)(t)
-    return flat[prefix[:-1]]
+def _unflatten_like(template, flat: Dict[str, np.ndarray]):
+    paths, treedef = tu.tree_flatten_with_path(template)
+    leaves = []
+    for path, _ in paths:
+        key = _path_str(path)
+        if key not in flat:
+            raise KeyError(f"checkpoint is missing array {key!r}")
+        leaves.append(flat[key])
+    return treedef.unflatten(leaves)
+
+
+# ----------------------------------------------------------------------
+def _pattern_nodes(tree) -> Dict[str, Any]:
+    """path -> sparsity-lifecycle node, for every pattern-carrying sparse
+    layer in the tree (empty when the sparse package is absent)."""
+    try:
+        from ..sparse import pattern as spat
+    except ImportError:                               # pragma: no cover
+        return {}
+    out = {}
+    for path, leaf in tu.tree_flatten_with_path(
+            tree, is_leaf=spat.is_lifecycle_node)[0]:
+        if spat.is_lifecycle_node(leaf):
+            out[_path_str(path)] = leaf
+    return out
+
+
+def _pattern_arrays(tree) -> Dict[str, np.ndarray]:
+    """Serialized pattern state: per lifecycle node, its packed mask bits
+    and a [d_in, d_out, version] state vector under reserved keys."""
+    from ..sparse import pattern as spat
+    out = {}
+    for path, node in _pattern_nodes(tree).items():
+        pat = spat.get_pattern(node)
+        out[f"{_PATTERN_PREFIX}{path}/mask"] = np.packbits(pat.mask)
+        out[f"{_PATTERN_PREFIX}{path}/state"] = np.asarray(
+            [pat.mask.shape[0], pat.mask.shape[1], pat.version], np.int64)
+    return out
+
+
+def _saved_patterns(flat: Dict[str, np.ndarray]) -> Dict[str, tuple]:
+    """Reserved keys -> {node path: (mask, version)}."""
+    out = {}
+    for key in flat:
+        if key.startswith(_PATTERN_PREFIX) and key.endswith("/state"):
+            path = key[len(_PATTERN_PREFIX):-len("/state")]
+            d_in, d_out, version = (int(x) for x in flat[key])
+            bits = flat[f"{_PATTERN_PREFIX}{path}/mask"]
+            mask = np.unpackbits(bits, count=d_in * d_out).astype(bool)
+            out[path] = (mask.reshape(d_in, d_out), version)
+    return out
+
+
+def _retarget_patterns(template, saved: Dict[str, tuple]):
+    """Repack the template's lifecycle nodes to their SAVED patterns so
+    the flattened value shapes line up with the checkpoint.
+
+    Nodes that shared one metadata object in the template (params and
+    their AdamW moment mirrors) are repacked through ONE donor and
+    ``repack_onto``, so they share the new metadata object too — jax
+    pytree structure checks compare custom-node metadata by identity.
+    """
+    from ..sparse import pattern as spat
+    paths, treedef = tu.tree_flatten_with_path(
+        template, is_leaf=spat.is_lifecycle_node)
+    donors: Dict[tuple, Any] = {}
+    leaves = []
+    for path, leaf in paths:
+        key = _path_str(path)
+        if key not in saved or not spat.is_lifecycle_node(leaf):
+            leaves.append(leaf)
+            continue
+        mask, version = saved[key]
+        cur = spat.get_pattern(leaf)
+        if cur.version == version and np.array_equal(cur.mask, mask):
+            leaves.append(leaf)
+            continue
+        dk = (id(leaf.meta), mask.tobytes(), version)
+        donor = donors.get(dk)
+        if donor is None:
+            donor = spat.repack(leaf, mask, version=version)
+            donors[dk] = donor
+            leaves.append(donor)
+        else:
+            leaves.append(spat.repack_onto(leaf, donor))
+    return treedef.unflatten(leaves)
 
 
 class CheckpointManager:
@@ -124,11 +228,13 @@ class CheckpointManager:
 
     # ------------------------------------------------------------------
     def save(self, step: int, tree) -> None:
-        """Gather to host and enqueue (async) or write inline (sync)."""
+        """Gather to host and enqueue (async) or write inline (sync).
+        Sparsity patterns of lifecycle layers ride along automatically."""
         if self._err:
             raise RuntimeError("async checkpoint writer failed") from self._err
         flat = {k: np.asarray(jax.device_get(v))
                 for k, v in _flatten(tree).items()}
+        flat.update(_pattern_arrays(tree))
         if self._thread is None:
             self._write(step, flat)
         else:
@@ -146,10 +252,20 @@ class CheckpointManager:
 
     def restore(self, step: int, template, shardings=None):
         """Load arrays and place them. ``shardings`` (same structure as
-        template, or None) enables elastic restore onto any mesh."""
+        template, or None) enables elastic restore onto any mesh.
+
+        When the checkpoint carries sparsity patterns, the template's
+        lifecycle nodes are REPACKED to the saved pattern (mask + version)
+        before shape-matching — a fresh-init template restores straight
+        into a mid-prune-schedule state."""
         path = os.path.join(self.dir, f"step_{step:08d}.npz")
         with np.load(path) as z:
             flat = {k: z[k] for k in z.files}
+        saved_pats = _saved_patterns(flat)
+        if saved_pats:
+            template = _retarget_patterns(template, saved_pats)
+        flat = {k: v for k, v in flat.items()
+                if not k.startswith(_PATTERN_PREFIX)}
         tree = _unflatten_like(template, flat)
         # cast to template dtypes (checkpoint stores exact dtypes already)
         def place(x, t, s):

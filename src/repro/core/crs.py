@@ -63,6 +63,26 @@ class CRS:
         row_ptr = np.cumsum(row_ptr)
         return CRS(values, cols.astype(np.int32), row_ptr, (m, n))
 
+    @staticmethod
+    def from_mask(dense: np.ndarray, mask: np.ndarray) -> "CRS":
+        """CRS over an EXPLICIT occupancy mask: a slot where ``mask`` is
+        True is live even when the stored value is exactly 0.0 — what a
+        pattern-preserving repack of trained weights needs
+        (``CRS.from_dense`` would silently drop such slots). Non-zero
+        ordering matches ``from_dense`` exactly (row-major), so packing a
+        ``dense`` under ``mask = dense != 0`` is bit-identical to
+        ``from_dense(dense)``."""
+        m, n = dense.shape
+        if mask.shape != (m, n):
+            # hard error, not assert: must hold under python -O too
+            raise ValueError(f"mask shape {mask.shape} != dense shape "
+                             f"{(m, n)}")
+        rows, cols = np.nonzero(mask)                # C order = (row, col)
+        values = dense[rows, cols].astype(np.float32)
+        row_ptr = np.zeros(m + 1, dtype=np.int64)
+        np.add.at(row_ptr, rows + 1, 1)
+        return CRS(values, cols.astype(np.int32), np.cumsum(row_ptr), (m, n))
+
     def to_dense(self) -> np.ndarray:
         m, n = self.shape
         out = np.zeros((m, n), dtype=self.values.dtype)

@@ -265,7 +265,8 @@ _PREP_CACHE: Dict[Tuple[int, int, int, int],
 _PREP_CACHE_MAX = 64
 
 
-def prepare_incrs(incrs: InCRS, *, pad_rows_to: int = 128) -> PreparedOperand:
+def prepare_incrs(incrs: InCRS, *, pad_rows_to: int = 128,
+                  pattern=None) -> PreparedOperand:
     """Prep an InCRS operand for the fused SpMM kernel, memoized.
 
     Repeated SpMMs against the same live InCRS object (serving engines,
@@ -274,7 +275,21 @@ def prepare_incrs(incrs: InCRS, *, pad_rows_to: int = 128) -> PreparedOperand:
     The operand is treated as IMMUTABLE once prepped: mutating
     ``incrs.crs`` in place afterwards leaves the cached arrays stale.
     Rebuild the InCRS (or call ``invalidate_prepared``) after mutation.
+
+    ``pattern`` (a ``sparse.SparsityPattern``) keys the memo on the
+    pattern lineage instead, guarded by BOTH the pattern version and this
+    InCRS object's identity: a repack (version bump) invalidates and
+    rebuilds, and so does rebuilding the InCRS from updated values under
+    the same pattern — see ``prepare_versioned``.
     """
+    if pattern is not None:
+        return prepare_versioned(
+            pattern,
+            f"incrs/{incrs.section}/{incrs.block}/{pad_rows_to}",
+            lambda: PreparedOperand(
+                *prep_sections(incrs, pad_rows_to=pad_rows_to),
+                incrs.shape, incrs.section),
+            token=incrs)
     key = (id(incrs), incrs.section, incrs.block, pad_rows_to)
     hit = _PREP_CACHE.get(key)
     if hit is not None and hit[0]() is incrs:
@@ -299,6 +314,51 @@ def invalidate_prepared(incrs: InCRS) -> None:
     mutating its CRS data in place (prep treats operands as immutable)."""
     for k in [k for k in _PREP_CACHE if k[0] == id(incrs)]:
         _PREP_CACHE.pop(k, None)
+
+
+# ----------------------------------------------------------------------
+# Pattern-version-keyed prep: entries are owned by a sparsity-pattern
+# LINEAGE (``sparse.pattern.SparsityPattern`` — any object with ``uid`` and
+# ``version`` works; ops stays import-free of the sparse layer). A repack
+# bumps the pattern's version, so the next lookup rebuilds the
+# ``PreparedOperand``/``ShardedPreparedOperand`` and replaces the stale
+# entry — the cache can never serve a pre-repack operand for an evolved
+# pattern. An optional ``token`` (the source InCRS) additionally guards
+# object identity: values can change WITHOUT a version bump (training on a
+# fixed pattern), so an operand rebuilt from updated weights must miss.
+_VERSIONED_CACHE: Dict[Tuple[int, str],
+                       Tuple[int, object, object]] = {}
+_VERSIONED_CACHE_MAX = 32
+
+
+def prepare_versioned(pattern, flavor: str, build, token=None):
+    """Memoize ``build()`` under ``(pattern.uid, flavor)``, guarded by
+    ``pattern.version`` AND (when given) the identity of the live source
+    object ``token``: a version mismatch (the pattern was repacked) or a
+    different/dead token (the source was rebuilt — possibly with updated
+    values) invalidates the entry and rebuilds. LRU-evicted at the cap,
+    same policy as the per-object prep cache above."""
+    key = (pattern.uid, str(flavor))
+    hit = _VERSIONED_CACHE.get(key)
+    if hit is not None and hit[0] == pattern.version and \
+            (hit[1] is None or hit[1]() is token):
+        _VERSIONED_CACHE[key] = _VERSIONED_CACHE.pop(key)   # LRU promote
+        return hit[2]
+    prep = build()
+    _VERSIONED_CACHE.pop(key, None)
+    if len(_VERSIONED_CACHE) >= _VERSIONED_CACHE_MAX:
+        _VERSIONED_CACHE.pop(next(iter(_VERSIONED_CACHE)))
+    _VERSIONED_CACHE[key] = (
+        pattern.version, weakref.ref(token) if token is not None else None,
+        prep)
+    return prep
+
+
+def invalidate_pattern(pattern) -> None:
+    """Drop every versioned prep entry of ``pattern``'s lineage (explicit
+    eviction — version bumps already invalidate lazily)."""
+    for k in [k for k in _VERSIONED_CACHE if k[0] == pattern.uid]:
+        _VERSIONED_CACHE.pop(k, None)
 
 
 # ----------------------------------------------------------------------
@@ -354,7 +414,8 @@ class ShardedPreparedOperand:
 
 
 def prepare_incrs_sharded(incrs: InCRS, mesh: Mesh, *, axis=None,
-                          pad_rows_to: int = 128) -> ShardedPreparedOperand:
+                          pad_rows_to: int = 128,
+                          pattern=None) -> ShardedPreparedOperand:
     """Partition an InCRS operand into per-device output-row stripe shards.
 
     The section stripes are built once on the host (the same vectorized
@@ -362,8 +423,19 @@ def prepare_incrs_sharded(incrs: InCRS, mesh: Mesh, *, axis=None,
     bit-identical), split into ``n_shards`` contiguous row ranges, and
     placed with a ``NamedSharding`` so each device of ``mesh`` holds only
     its own panel. ``axis`` (default: every mesh axis) names the mesh
-    axes the shard dimension is split over.
+    axes the shard dimension is split over. ``pattern`` memoizes the shard
+    prep on the pattern lineage, invalidated by repack version bumps —
+    see ``prepare_versioned``.
     """
+    if pattern is not None:
+        axes_n, _ = shard_axes(mesh, axis)
+        return prepare_versioned(
+            pattern,
+            f"incrs_sharded/{id(mesh)}/{axes_n}/{incrs.section}/"
+            f"{incrs.block}/{pad_rows_to}",
+            lambda: prepare_incrs_sharded(incrs, mesh, axis=axis,
+                                          pad_rows_to=pad_rows_to),
+            token=incrs)
     axes, n_shards = shard_axes(mesh, axis)
     m, _ = incrs.shape
     gi, gv = prep_sections(incrs, pad_rows_to=1)
@@ -534,6 +606,7 @@ __all__ = [
     "bsr_matmul_arrays",
     "prep_rounds", "index_match_matmul", "prep_sections", "PreparedOperand",
     "prepare_incrs", "invalidate_prepared", "incrs_spmm", "incrs_to_dense",
+    "prepare_versioned", "invalidate_pattern",
     "ShardedPreparedOperand", "prepare_incrs_sharded", "incrs_spmm_sharded",
     "shard_axes",
     "flash_mha", "ref",

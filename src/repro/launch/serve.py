@@ -58,6 +58,26 @@ def _main_spmm(args):
     ref = a.to_dense()
     err = max(float(np.abs(r.out - ref @ r.b).max()) for r in done)
     print(f"  max |err| vs dense oracle: {err:.2e}")
+    if args.spmm_swap:
+        # Live pattern swap: magnitude-re-prune the operand to half its
+        # density and deploy it into the RUNNING engine between waves.
+        from ..core.crs import CRS
+        from ..sparse.pattern import SparsityPattern, magnitude_mask
+        dense = ref
+        pat = SparsityPattern(magnitude_mask(dense, spec.density / 2))
+        inc2 = InCRS.from_crs(CRS.from_mask(dense, pat.mask))
+        eng.swap_pattern(inc2, mesh=mesh)
+        reqs2 = [SpMMRequest(100 + i, rng.normal(
+            size=(spec.n, args.spmm_batch_cols)).astype(np.float32))
+            for i in range(args.n_requests)]
+        for r in reqs2:
+            eng.submit(r)
+        done2 = [r for r in eng.run() if r.rid >= 100]
+        ref2 = np.where(pat.mask, dense, 0.0)
+        err2 = max(float(np.abs(r.out - ref2 @ r.b).max()) for r in done2)
+        print(f"  swapped to d={pat.density:.3f} "
+              f"(swaps={eng.stats['pattern_swaps']}): served "
+              f"{len(done2)} more, max |err|: {err2:.2e}")
     return len(done)
 
 
@@ -76,6 +96,10 @@ def main(argv=None):
     ap.add_argument("--spmm-shards", type=int, default=1,
                     help="row-shard the sparse operand across this many "
                          "devices (1 = single-device)")
+    ap.add_argument("--spmm-swap", action="store_true",
+                    help="after the first waves, re-prune the operand to "
+                         "half density and hot-swap it into the running "
+                         "engine (lifecycle smoke)")
     ap.add_argument("--spmm-rows", type=int, default=256)
     ap.add_argument("--spmm-cols", type=int, default=1024)
     ap.add_argument("--spmm-density", type=float, default=0.03)

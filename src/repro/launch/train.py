@@ -30,6 +30,13 @@ def main(argv=None):
     ap.add_argument("--int8-opt", action="store_true")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--prune-final-density", type=float, default=None,
+                    help="magnitude-re-prune every sparse-linear layer on "
+                         "the cubic schedule down to this density (no-op "
+                         "for configs without sparse layers)")
+    ap.add_argument("--prune-every", type=int, default=10,
+                    help="re-prune cadence in steps")
+    ap.add_argument("--prune-warmup-frac", type=float, default=0.1)
     args = ap.parse_args(argv)
 
     import jax
@@ -74,9 +81,27 @@ def main(argv=None):
     data = Prefetcher(src, depth=2, timeout_s=60.0,
                       fallback=lambda n: src.batch_at(10**9 + n))
 
+    prune_cb = None
+    if args.prune_final_density is not None:
+        if args.int8_opt:
+            # fail NOW, not at the first due step after the dense warmup:
+            # quantized moments cannot ride a slot remap.
+            raise SystemExit("--prune-final-density requires plain f32 "
+                             "moments; drop --int8-opt")
+        from ..sparse.pattern import PruneSchedule
+        prune_cb = trainer.make_prune_callback(PruneSchedule(
+            args.prune_final_density, args.steps,
+            warmup_frac=args.prune_warmup_frac, every=args.prune_every))
+
     t0 = time.time()
     tokens_done = 0
     for step in range(start_step, args.steps):
+        if prune_cb is not None:
+            params, opt_state, pinfo = prune_cb(step, params, opt_state)
+            if pinfo:
+                print(f"step {step:5d}  re-pruned {pinfo['layers']} layers "
+                      f"to density {pinfo['density']:.3f} "
+                      f"({pinfo['nnz']} non-zeros)", flush=True)
         batch = {k: jnp.asarray(v) for k, v in next(data).items()}
         params, opt_state, metrics = step_fn(params, opt_state, batch)
         tokens_done += args.batch * args.seq

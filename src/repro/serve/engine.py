@@ -185,31 +185,76 @@ class SpMMEngine:
             raise ValueError(f"variant must be 'auto', 'expand' or "
                              f"'reuse', got {variant!r}")
         self._ops = ops
-        self.a = a
-        if isinstance(a, ops.ShardedPreparedOperand):
-            if mesh is not None and mesh is not a.mesh:
-                raise ValueError(
-                    "ShardedPreparedOperand is already bound to a mesh — "
-                    "drop mesh=, or re-prep the raw InCRS on the new mesh")
-            self.prep = a
-        elif isinstance(a, ops.PreparedOperand):
-            if mesh is not None:
-                raise ValueError(
-                    "cannot re-shard an already-built single-device "
-                    "PreparedOperand — pass the raw InCRS with mesh=, or "
-                    "an ops.ShardedPreparedOperand")
-            self.prep = a
-        elif mesh is not None:
-            self.prep = ops.prepare_incrs_sharded(a, mesh, axis=shard_axis)
-        else:
-            self.prep = ops.prepare_incrs(a)
-        self.sharded = isinstance(self.prep, ops.ShardedPreparedOperand)
+        self.pattern_version: Optional[int] = None
+        self._set_operand(a, mesh, shard_axis)
         self.max_wave_cols = max_wave_cols
         self.variant = variant
         self.interpret = interpret
         self.queue: List[SpMMRequest] = []
         self.finished: List[SpMMRequest] = []
         self.stats: Dict[str, int] = defaultdict(int)
+
+    def _build_operand(self, a, mesh, shard_axis):
+        """Resolve ``a`` to ``(operand, prep, pattern_version)`` WITHOUT
+        touching engine state — every validation error leaves the engine
+        exactly as it was (swap_pattern relies on this)."""
+        ops = self._ops
+        pattern = getattr(a, "pattern", None)       # lifecycle layer params
+        if pattern is not None and hasattr(a, "prep"):
+            a = a.prep                              # device-ready view
+        if isinstance(a, ops.ShardedPreparedOperand):
+            if mesh is not None and mesh is not a.mesh:
+                raise ValueError(
+                    "ShardedPreparedOperand is already bound to a mesh — "
+                    "drop mesh=, or re-prep the raw InCRS on the new mesh")
+            prep = a
+        elif isinstance(a, ops.PreparedOperand):
+            if mesh is not None:
+                raise ValueError(
+                    "cannot re-shard an already-built single-device "
+                    "PreparedOperand — pass the raw InCRS with mesh=, or "
+                    "an ops.ShardedPreparedOperand")
+            prep = a
+        elif mesh is not None:
+            prep = ops.prepare_incrs_sharded(a, mesh, axis=shard_axis)
+        else:
+            prep = ops.prepare_incrs(a)
+        return a, prep, getattr(pattern, "version", None)
+
+    def _set_operand(self, a, mesh, shard_axis):
+        self.a, self.prep, self.pattern_version = \
+            self._build_operand(a, mesh, shard_axis)
+        self.sharded = isinstance(self.prep,
+                                  self._ops.ShardedPreparedOperand)
+
+    # ------------------------------------------------------------------
+    def swap_pattern(self, a, *, mesh=None, shard_axis=None) -> None:
+        """Hot-swap the serving operand between waves — deploy a freshly
+        re-pruned (or re-trained) pattern into the RUNNING engine without
+        a restart.
+
+        ``a`` accepts everything the constructor does, plus any
+        pattern-carrying sparse layer params (``InCRSLinearParams`` /
+        ``ShardedInCRSLinearParams`` — their ``.prep`` view is used and
+        ``pattern_version`` is recorded). The operand's global shape must
+        match the current one: queued requests were validated against it,
+        and a re-pruned layer keeps its logical shape by construction.
+        Single-device and sharded operands can replace each other freely —
+        waves after the swap simply take the other kernel path. A rejected
+        swap (any ValueError) leaves the engine serving the OLD operand.
+        """
+        new_a, new_prep, new_version = self._build_operand(a, mesh,
+                                                           shard_axis)
+        if tuple(new_prep.shape) != tuple(self.prep.shape):
+            raise ValueError(
+                f"swap_pattern: new operand shape {tuple(new_prep.shape)} "
+                f"!= serving shape {tuple(self.prep.shape)} — an engine "
+                f"serves one logical A; start a new engine for a new shape")
+        self.a, self.prep, self.pattern_version = new_a, new_prep, \
+            new_version
+        self.sharded = isinstance(new_prep,
+                                  self._ops.ShardedPreparedOperand)
+        self.stats["pattern_swaps"] += 1
 
     def submit(self, req: SpMMRequest):
         k = self.a.shape[1]

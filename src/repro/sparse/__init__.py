@@ -9,4 +9,8 @@ from .linear import (SparseLinearParams, sparse_linear_init,  # noqa: F401
                      incrs_linear_sharded_init, incrs_linear_shard,
                      incrs_linear_sharded_apply,
                      incrs_sharded_to_dense_weight)
-from .prune import prune_to_bsr  # noqa: F401
+from .prune import prune_to_bsr, sparsity_schedule  # noqa: F401
+from .pattern import (SparsityPattern, PruneSchedule,  # noqa: F401
+                      magnitude_mask, expand_block_mask,
+                      is_lifecycle_node, get_pattern, node_to_dense,
+                      repack, magnitude_repack, repack_onto)

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,8 +30,11 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..core.bsr import BSR, magnitude_block_mask
+from ..core.crs import CRS
 from ..kernels import ops
 from ..kernels._compat import SHARD_MAP_KW, shard_map
+from .pattern import (FamilyOps, SparsityPattern, expand_block_mask,
+                      magnitude_mask, register_family)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +58,11 @@ class SparseLinearMeta:
     t_row_of: Tuple[int, ...]        # bwd BSR (W: in-major) + sentinel
     t_col_of: Tuple[int, ...]
     t_vpos: Tuple[int, ...]          # real block -> slot in padded bwd list
+    # the lifecycle pattern this meta was packed for; compare=False keeps
+    # it out of the generated __eq__/__hash__ (two equal metas from the
+    # same pattern snapshot still hit one jit cache entry)
+    pattern: Any = dataclasses.field(default=None, compare=False,
+                                     repr=False)
 
     @property
     def nnz(self) -> int:
@@ -73,6 +81,24 @@ class SparseLinearMeta:
 class SparseLinearParams:
     values: jnp.ndarray              # (nnz, block, block) — W^T blocks
     meta: SparseLinearMeta
+
+    @property
+    def pattern(self) -> "SparsityPattern | None":
+        return self.meta.pattern
+
+
+def _register_params_pytree(cls) -> None:
+    """Values is the one traced leaf; the meta rides as aux data with
+    identity hash/eq. Registered WITH keys so checkpoint key-paths name
+    the leaf ``.../values`` instead of a bare flat index."""
+    jax.tree_util.register_pytree_with_keys(
+        cls,
+        lambda p: (((jax.tree_util.GetAttrKey("values"), p.values),),
+                   p.meta),
+        lambda meta, children: cls(children[0], meta))
+
+
+_register_params_pytree(SparseLinearParams)
 
 
 # Kernel block lists with explicit zero tiles for empty block-rows — the
@@ -99,9 +125,14 @@ def sparse_linear_init(key, d_in: int, d_out: int, block: int,
 
 
 def sparse_linear_from_mask(w: np.ndarray, mask: np.ndarray, block: int,
-                            dtype=jnp.float32) -> SparseLinearParams:
+                            dtype=jnp.float32, *,
+                            _pattern: "SparsityPattern | None" = None
+                            ) -> SparseLinearParams:
     """Pack a dense W (d_in, d_out) under an explicit block-occupancy mask
-    of W^T (out-major, shape (d_out//block, d_in//block))."""
+    of W^T (out-major, shape (d_out//block, d_in//block)).
+
+    ``_pattern`` is the lifecycle-internal path (``pattern.repack``): the
+    evolved pattern rides in instead of being minted from ``mask``."""
     d_in, d_out = w.shape
     wt = np.ascontiguousarray(np.asarray(w).T)         # (out, in)
     fwd = BSR.from_mask(wt, mask, (block, block))      # W^T blocks
@@ -120,13 +151,16 @@ def sparse_linear_from_mask(w: np.ndarray, mask: np.ndarray, block: int,
     for r in range(bwd.n_block_rows):
         for q in range(bwd.row_ptr[r], bwd.row_ptr[r + 1]):
             perm.append(fwd_pos[(int(bwd.col_idx[q]), r)])
+    if _pattern is None:
+        _pattern = SparsityPattern(expand_block_mask(mask, block))
     meta = SparseLinearMeta(
         d_in, d_out, block,
         tuple(int(x) for x in row_of), tuple(int(x) for x in col_of),
         tuple(int(x) for x in vpos),
         tuple(perm),
         tuple(int(x) for x in t_row_of), tuple(int(x) for x in t_col_of),
-        tuple(int(x) for x in t_vpos))
+        tuple(int(x) for x in t_vpos), pattern=_pattern)
+    _pattern.packed["bsr"] = meta
     return SparseLinearParams(jnp.asarray(fwd.values, dtype), meta)
 
 
@@ -245,12 +279,19 @@ class InCRSLinearMeta:
     section: int
     nnz: int                  # live non-zeros (the host InCRS itself is NOT
     #                           kept — it would pin a duplicate weight copy)
+    block: int = 32           # InCRS counter block (B_DEFAULT) — a repack
+    #                           rebuilds the counters at the same granularity
+    pattern: Any = None       # the lifecycle SparsityPattern of this meta
 
 
 @dataclasses.dataclass
 class InCRSLinearParams:
     values: jnp.ndarray       # (Op, Si, smax) f32 — the trainable leaf
     meta: InCRSLinearMeta
+
+    @property
+    def pattern(self) -> "SparsityPattern | None":
+        return self.meta.pattern
 
     @property
     def d_in(self) -> int:
@@ -277,10 +318,7 @@ class InCRSLinearParams:
                                    self.meta.section)
 
 
-jax.tree_util.register_pytree_node(
-    InCRSLinearParams,
-    lambda p: ((p.values,), p.meta),
-    lambda meta, children: InCRSLinearParams(children[0], meta))
+_register_params_pytree(InCRSLinearParams)
 
 
 def _transpose_gather(fwd_idx: np.ndarray, bwd_idx: np.ndarray,
@@ -316,37 +354,67 @@ def _transpose_gather(fwd_idx: np.ndarray, bwd_idx: np.ndarray,
     return t_gather
 
 
-def _prune_magnitude(wt: np.ndarray, density: float | None) -> np.ndarray:
-    """Magnitude-prune a dense W^T to element ``density`` with one GLOBAL
-    threshold — shared by the single-device and sharded packers so both see
-    the identical non-zero pattern for the same (w, density)."""
-    if density is not None and density < 1.0:
-        keep = max(1, int(round(wt.size * density)))
-        thresh = np.partition(np.abs(wt).ravel(), -keep)[-keep]
-        wt = np.where(np.abs(wt) >= thresh, wt, 0.0).astype(np.float32)
-    return wt
+def _resolve_pattern(w: np.ndarray, density, mask,
+                     _pattern) -> SparsityPattern:
+    """One rule for every constructor: an explicit lifecycle pattern wins;
+    else an explicit element mask of W (slots it keeps stay live even at
+    value 0.0); else a global-threshold magnitude selection at ``density``
+    (None -> exactly the non-zeros, the historical from-dense behavior)."""
+    if _pattern is not None:
+        return _pattern
+    if mask is not None:
+        if density is not None:
+            raise ValueError("pass density OR mask, not both")
+        return SparsityPattern(mask)
+    return SparsityPattern(magnitude_mask(w, density))
+
+
+def _pack_incrs(w: np.ndarray, pat: SparsityPattern, section: int,
+                block: int) -> InCRSLinearParams:
+    """Pack dense W values under ``pat`` into the trainable fused-kernel
+    form — THE single-device InCRS packer; the public constructors are
+    thin wrappers that only decide where the pattern comes from."""
+    from ..core.incrs import InCRS
+    d_in, d_out = w.shape
+    if pat.shape != (d_in, d_out):
+        raise ValueError(f"pattern mask shape {pat.shape} != weight shape "
+                         f"{(d_in, d_out)}")
+    wt = np.ascontiguousarray(np.asarray(w, np.float32).T)
+    maskt = np.ascontiguousarray(pat.mask.T)
+    incrs = InCRS.from_crs(CRS.from_mask(wt, maskt),
+                           section=section, block=block)
+    incrs_t = InCRS.from_crs(
+        CRS.from_mask(np.ascontiguousarray(wt.T),
+                      np.ascontiguousarray(maskt.T)),
+        section=section, block=block)
+    fwd_idx, fwd_val = ops.prep_sections(incrs, pad_rows_to=128)
+    bwd_idx, _ = ops.prep_sections(incrs_t, pad_rows_to=128)
+    t_gather = _transpose_gather(np.asarray(fwd_idx), np.asarray(bwd_idx),
+                                 section, d_in)
+    meta = InCRSLinearMeta(fwd_idx, bwd_idx, jnp.asarray(t_gather),
+                           d_in, d_out, section, incrs.crs.nnz,
+                           block=block, pattern=pat)
+    pat.packed["incrs"] = meta
+    return InCRSLinearParams(fwd_val, meta)
 
 
 def incrs_linear_from_dense(w: np.ndarray, density: float | None = None,
                             section: int | None = None,
-                            block: int | None = None) -> InCRSLinearParams:
+                            block: int | None = None, *,
+                            mask: np.ndarray | None = None,
+                            _pattern: SparsityPattern | None = None
+                            ) -> InCRSLinearParams:
     """Pack a dense W (d_in, d_out) — optionally magnitude-pruned to
-    element ``density`` — into the trainable fused-kernel form."""
-    from ..core.incrs import InCRS, S_DEFAULT, B_DEFAULT
+    element ``density``, or under an explicit element ``mask`` of W whose
+    slots stay live even at value 0.0 — into the trainable fused-kernel
+    form. For a fixed selection this is bit-identical to the historical
+    prune-then-``InCRS.from_dense`` path."""
+    from ..core.incrs import S_DEFAULT, B_DEFAULT
     section = S_DEFAULT if section is None else section
     block = B_DEFAULT if block is None else block
-    wt = _prune_magnitude(
-        np.ascontiguousarray(np.asarray(w, np.float32).T), density)
-    incrs = InCRS.from_dense(wt, section=section, block=block)
-    incrs_t = InCRS.from_dense(np.ascontiguousarray(wt.T),
-                               section=section, block=block)
-    fwd_idx, fwd_val = ops.prep_sections(incrs, pad_rows_to=128)
-    bwd_idx, _ = ops.prep_sections(incrs_t, pad_rows_to=128)
-    t_gather = _transpose_gather(np.asarray(fwd_idx), np.asarray(bwd_idx),
-                                 section, w.shape[0])
-    meta = InCRSLinearMeta(fwd_idx, bwd_idx, jnp.asarray(t_gather),
-                           w.shape[0], w.shape[1], section, incrs.crs.nnz)
-    return InCRSLinearParams(fwd_val, meta)
+    w = np.asarray(w, np.float32)
+    return _pack_incrs(w, _resolve_pattern(w, density, mask, _pattern),
+                       section, block)
 
 
 def incrs_linear_init(key, d_in: int, d_out: int, density: float,
@@ -494,6 +562,8 @@ class ShardedInCRSLinearMeta:
     mesh: Mesh
     axes: Tuple[str, ...]     # mesh axes the shard dim is split over
     shard_width: int          # d_out // n_shards output rows per shard
+    block: int = 32           # InCRS counter block (B_DEFAULT)
+    pattern: Any = None       # the lifecycle SparsityPattern of this meta
 
     @property
     def n_shards(self) -> int:
@@ -505,6 +575,10 @@ class ShardedInCRSLinearParams:
     values: jnp.ndarray       # (S, Op_s, Si, smax) f32 — trainable leaf,
     #                           NamedSharding over the shard axes
     meta: ShardedInCRSLinearMeta
+
+    @property
+    def pattern(self) -> "SparsityPattern | None":
+        return self.meta.pattern
 
     @property
     def d_in(self) -> int:
@@ -532,10 +606,7 @@ class ShardedInCRSLinearParams:
             self.meta.shard_width, self.meta.mesh, self.meta.axes)
 
 
-jax.tree_util.register_pytree_node(
-    ShardedInCRSLinearParams,
-    lambda p: ((p.values,), p.meta),
-    lambda meta, children: ShardedInCRSLinearParams(children[0], meta))
+_register_params_pytree(ShardedInCRSLinearParams)
 
 
 def _resolve_shard_axes(mesh: Mesh | None, axis):
@@ -557,25 +628,13 @@ def _resolve_shard_axes(mesh: Mesh | None, axis):
     return mesh, axis
 
 
-def _crs_from_mask(dense: np.ndarray, mask: np.ndarray):
-    """CRS over an EXPLICIT occupancy mask: a slot where ``mask`` is True
-    is live even when the stored value is exactly 0.0 — what a
-    pattern-preserving reshard of trained weights needs (``CRS.from_dense``
-    would silently drop such slots from the pattern)."""
-    from ..core.crs import CRS
-    m, n = dense.shape
-    rows, cols = np.nonzero(mask)                    # C order = (row, col)
-    values = dense[rows, cols].astype(np.float32)
-    row_ptr = np.zeros(m + 1, dtype=np.int64)
-    np.add.at(row_ptr, rows + 1, 1)
-    return CRS(values, cols.astype(np.int32), np.cumsum(row_ptr), (m, n))
-
-
 def incrs_linear_from_dense_sharded(
         w: np.ndarray, density: float | None = None, *,
         mask: np.ndarray | None = None, mesh: Mesh | None = None,
         axis=None, section: int | None = None,
-        block: int | None = None) -> ShardedInCRSLinearParams:
+        block: int | None = None,
+        _pattern: SparsityPattern | None = None
+        ) -> ShardedInCRSLinearParams:
     """Pack a dense W (d_in, d_out) — optionally magnitude-pruned with the
     SAME global threshold as the single-device packer — into the
     row-sharded trainable form: one contiguous d_out panel per device of
@@ -585,34 +644,34 @@ def incrs_linear_from_dense_sharded(
     ``mask`` (bool, same shape as ``w``, mutually exclusive with
     ``density``) fixes the sparsity pattern explicitly — slots the mask
     keeps stay live even at value 0.0 (used by ``incrs_linear_shard`` to
-    preserve a trained layer's pattern exactly)."""
+    preserve a trained layer's pattern exactly). ``_pattern`` is the
+    lifecycle-internal path: the already-evolved pattern rides in."""
     from ..core.incrs import InCRS, S_DEFAULT, B_DEFAULT
     section = S_DEFAULT if section is None else section
     block = B_DEFAULT if block is None else block
     mesh, axis = _resolve_shard_axes(mesh, axis)
     axes, n_shards = ops.shard_axes(mesh, axis)
+    w = np.asarray(w, np.float32)
     d_in, d_out = w.shape
     if d_out % n_shards:
         raise ValueError(f"d_out={d_out} must divide into {n_shards} "
                          f"row shards (mesh axes {axes})")
     sw = d_out // n_shards
-    wt = np.ascontiguousarray(np.asarray(w, np.float32).T)
-    if mask is not None:
-        if density is not None:
-            raise ValueError("pass density OR mask, not both")
-        maskt = np.ascontiguousarray(np.asarray(mask, bool).T)
-    else:
-        wt = _prune_magnitude(wt, density)
-        maskt = wt != 0.0
+    pat = _resolve_pattern(w, density, mask, _pattern)
+    if pat.shape != (d_in, d_out):
+        raise ValueError(f"pattern mask shape {pat.shape} != weight shape "
+                         f"{(d_in, d_out)}")
+    wt = np.ascontiguousarray(w.T)
+    maskt = np.ascontiguousarray(pat.mask.T)
     per = []
     for s in range(n_shards):
         wts = np.ascontiguousarray(wt[s * sw:(s + 1) * sw])
         ms = np.ascontiguousarray(maskt[s * sw:(s + 1) * sw])
-        inc = InCRS.from_crs(_crs_from_mask(wts, ms),
+        inc = InCRS.from_crs(CRS.from_mask(wts, ms),
                              section=section, block=block)
         inc_t = InCRS.from_crs(
-            _crs_from_mask(np.ascontiguousarray(wts.T),
-                           np.ascontiguousarray(ms.T)),
+            CRS.from_mask(np.ascontiguousarray(wts.T),
+                          np.ascontiguousarray(ms.T)),
             section=section, block=block)
         fi, fv = ops.prep_sections(inc, pad_rows_to=128)
         bi, _ = ops.prep_sections(inc_t, pad_rows_to=128)
@@ -637,7 +696,8 @@ def incrs_linear_from_dense_sharded(
     put = lambda a: jax.device_put(jnp.asarray(a), sharding)
     meta = ShardedInCRSLinearMeta(
         put(fis), put(bis), put(tgs), d_in, d_out, section,
-        sum(p[3] for p in per), mesh, axes, sw)
+        sum(p[3] for p in per), mesh, axes, sw, block=block, pattern=pat)
+    pat.packed["incrs_sharded"] = meta
     return ShardedInCRSLinearParams(put(fvs), meta)
 
 
@@ -652,17 +712,14 @@ def incrs_linear_shard(p: InCRSLinearParams, *, mesh: Mesh | None = None,
                        axis=None) -> ShardedInCRSLinearParams:
     """Re-shard a trained single-device ``InCRSLinearParams`` across a mesh
     (values and pattern preserved — e.g. train on one device, deploy the
-    SAME weights into multi-device serving). The live-slot mask rides along
-    explicitly, so a trained value that happens to be exactly 0.0 stays a
-    trainable slot instead of silently leaving the pattern."""
-    idx = np.asarray(p.meta.fwd_idx)
-    maskt = np.zeros((idx.shape[0], idx.shape[1] * p.meta.section), bool)
-    r, s, k = np.nonzero(idx >= 0)
-    maskt[r, idx[r, s, k] + s * p.meta.section] = True
-    mask = maskt[:p.meta.d_out, :p.meta.d_in].T
+    SAME weights into multi-device serving). The layer's
+    ``SparsityPattern`` rides along unchanged (same lineage uid and
+    version — the sharded pack registers as a SECOND packed form of the
+    same snapshot), so a trained value that happens to be exactly 0.0
+    stays a trainable slot instead of silently leaving the pattern."""
     return incrs_linear_from_dense_sharded(
-        incrs_to_dense_weight(p), mask=mask, mesh=mesh, axis=axis,
-        section=p.meta.section)
+        incrs_to_dense_weight(p), mesh=mesh, axis=axis,
+        section=p.meta.section, block=p.meta.block, _pattern=p.pattern)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
@@ -750,3 +807,78 @@ def to_dense(p: SparseLinearParams) -> jnp.ndarray:
         out = out.at[r * blk:(r + 1) * blk, c * blk:(c + 1) * blk].set(
             p.values[q])
     return out.T
+
+
+# ----------------------------------------------------------------------
+# Lifecycle family registrations: every params class above plugs into the
+# shared ``sparse.pattern`` lifecycle through the same four operations —
+# repack / magnitude_repack / repack_onto never branch on the family.
+
+
+def _bsr_pack_values(meta: SparseLinearMeta, w: np.ndarray) -> jnp.ndarray:
+    """Dense W -> (nnz, block, block) W^T tiles of meta's REAL blocks."""
+    blk = meta.block
+    wt = np.ascontiguousarray(np.asarray(w, np.float32).T)
+    tiles = wt.reshape(meta.n_block_rows, blk, meta.d_in // blk,
+                       blk).transpose(0, 2, 1, 3)
+    rows, cols = real_blocks(meta)
+    return jnp.asarray(tiles[rows, cols])
+
+
+def _incrs_pack_values(meta: InCRSLinearMeta, w: np.ndarray) -> jnp.ndarray:
+    """Dense W -> (Op, Si, smax) stripe values of meta's live slots."""
+    idx = np.asarray(meta.fwd_idx)
+    wt = np.asarray(w, np.float32).T
+    kp = idx.shape[1] * meta.section
+    wtp = np.zeros((idx.shape[0], kp), np.float32)
+    wtp[:wt.shape[0], :wt.shape[1]] = wt
+    vals = np.zeros(idx.shape, np.float32)
+    r, s, k = np.nonzero(idx >= 0)
+    vals[r, s, k] = wtp[r, idx[r, s, k] + s * meta.section]
+    return jnp.asarray(vals)
+
+
+def _sharded_pack_values(meta: ShardedInCRSLinearMeta,
+                         w: np.ndarray) -> jnp.ndarray:
+    """Dense W -> (S, Rp, Si, smax) per-shard stripe values, placed with
+    the meta's NamedSharding like the packer's values leaf."""
+    idx = np.asarray(meta.fwd_idx)
+    wt = np.asarray(w, np.float32).T
+    sw, section = meta.shard_width, meta.section
+    kp = idx.shape[2] * section
+    vals = np.zeros(idx.shape, np.float32)
+    for s in range(idx.shape[0]):
+        panel = np.zeros((idx.shape[1], kp), np.float32)
+        rows = wt[s * sw:(s + 1) * sw]
+        panel[:rows.shape[0], :rows.shape[1]] = rows
+        r, ss, k = np.nonzero(idx[s] >= 0)
+        vals[s][r, ss, k] = panel[r, idx[s][r, ss, k] + ss * section]
+    return jax.device_put(jnp.asarray(vals),
+                          NamedSharding(meta.mesh, P(meta.axes)))
+
+
+register_family(SparseLinearParams, FamilyOps(
+    "bsr",
+    to_dense=lambda n: np.asarray(to_dense(n), np.float32),
+    pack=lambda w, pat, like: sparse_linear_from_mask(
+        w, pat.block_mask(like.meta.block), like.meta.block,
+        dtype=like.values.dtype, _pattern=pat),
+    pack_values=_bsr_pack_values,
+    default_mask=lambda w, d, n: magnitude_mask(w, d, block=n.meta.block)))
+
+register_family(InCRSLinearParams, FamilyOps(
+    "incrs",
+    to_dense=incrs_to_dense_weight,
+    pack=lambda w, pat, like: _pack_incrs(
+        w, pat, like.meta.section, like.meta.block),
+    pack_values=_incrs_pack_values,
+    default_mask=lambda w, d, n: magnitude_mask(w, d)))
+
+register_family(ShardedInCRSLinearParams, FamilyOps(
+    "incrs_sharded",
+    to_dense=incrs_sharded_to_dense_weight,
+    pack=lambda w, pat, like: incrs_linear_from_dense_sharded(
+        w, mesh=like.meta.mesh, axis=like.meta.axes,
+        section=like.meta.section, block=like.meta.block, _pattern=pat),
+    pack_values=_sharded_pack_values,
+    default_mask=lambda w, d, n: magnitude_mask(w, d)))

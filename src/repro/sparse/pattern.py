@@ -1,0 +1,330 @@
+"""The sparsity lifecycle: one evolving pattern, many packed forms.
+
+Every sparse-linear family in this repo (BSR ``SparseLinear``, fused-kernel
+``InCRSLinear``, row-sharded ``ShardedInCRSLinearParams``) stores its weight
+under a *sparsity pattern* — which elements of W are live. Until this module
+existed, the pattern was frozen at construction: three divergent
+from-dense/from-mask/re-shard packers, none of which could change the
+pattern of a layer that already held trained values.
+
+``SparsityPattern`` makes the pattern a first-class object:
+
+  * ``mask``     — element-level occupancy of W (d_in, d_out), the single
+                   format-agnostic source of truth;
+  * ``version``  — bumped on every ``repack``; device-side caches
+                   (``kernels.ops.prepare_versioned``) and serving engines
+                   key on it to invalidate stale ``PreparedOperand``s;
+  * ``packed``   — the format-specific packed metadata built for THIS
+                   version, one entry per family (a re-shard of a trained
+                   layer registers a second packed form on the SAME
+                   pattern instead of forking a new lineage).
+
+``PruneSchedule`` generalizes ``prune.sparsity_schedule`` (same cubic
+Zhu–Gupta curve, now validated) and adds the WHEN: ``due(step)`` gates the
+re-prune cadence a train loop's prune callback follows.
+
+``repack(node, new_mask)`` is the one lifecycle operation all families
+share: densify the node's current values, evolve the pattern, pack under
+the new mask. Values surviving the pattern change carry over; slots new to
+the pattern start at 0. ``repack_onto`` repacks an auxiliary per-slot tree
+(optimizer moments) onto an already-repacked node so the moment trees keep
+*aux-data identity* with the params tree — ``jax.tree`` structure
+comparisons on custom nodes compare metadata by identity.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable, Dict, Optional
+
+import numpy as np
+
+from ..core.bsr import magnitude_block_mask
+
+_uids = itertools.count(1)
+
+
+@dataclasses.dataclass(eq=False)
+class SparsityPattern:
+    """Element occupancy of one weight W (d_in, d_out) + version counter.
+
+    ``eq=False`` -> identity hash/eq: patterns ride inside jit-static layer
+    metadata, where identity semantics keep trace caches stable. ``uid``
+    names the lineage (stable across ``evolve``); ``(uid, version)`` names
+    one immutable snapshot — never mutate ``mask`` in place, evolve instead.
+    """
+    mask: np.ndarray                  # (d_in, d_out) bool
+    version: int = 0
+    uid: int = dataclasses.field(default_factory=lambda: next(_uids))
+    # family name -> packed metadata built for THIS (uid, version); filled
+    # by the family packers in ``sparse.linear``.
+    packed: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        self.mask = np.ascontiguousarray(np.asarray(self.mask, bool))
+        if self.mask.ndim != 2:
+            raise ValueError(f"pattern mask must be 2-D (d_in, d_out), "
+                             f"got shape {self.mask.shape}")
+
+    # ------------------------------------------------------------------
+    @property
+    def shape(self):
+        return self.mask.shape
+
+    @property
+    def d_in(self) -> int:
+        return self.mask.shape[0]
+
+    @property
+    def d_out(self) -> int:
+        return self.mask.shape[1]
+
+    @property
+    def nnz(self) -> int:
+        return int(self.mask.sum())
+
+    @property
+    def density(self) -> float:
+        return self.nnz / float(self.mask.size) if self.mask.size else 0.0
+
+    # ------------------------------------------------------------------
+    def evolve(self, new_mask: np.ndarray,
+               version: Optional[int] = None) -> "SparsityPattern":
+        """Next snapshot of this lineage: same ``uid``, ``version + 1``
+        (or an explicit ``version`` — checkpoint restore re-creates a
+        mid-schedule snapshot), fresh empty ``packed`` registry."""
+        new_mask = np.asarray(new_mask, bool)
+        if new_mask.shape != self.mask.shape:
+            raise ValueError(f"evolved mask shape {new_mask.shape} != "
+                             f"pattern shape {self.mask.shape}")
+        return SparsityPattern(new_mask,
+                               self.version + 1 if version is None
+                               else version, uid=self.uid)
+
+    def block_mask(self, block: int) -> np.ndarray:
+        """Out-major block occupancy of W^T, shape (d_out//block,
+        d_in//block) — the mask ``SparseLinear``'s BSR packer consumes. A
+        block is live iff any of its elements is."""
+        d_in, d_out = self.mask.shape
+        if d_in % block or d_out % block:
+            raise ValueError(f"block={block} must divide the pattern "
+                             f"shape {self.mask.shape}")
+        mt = self.mask.T.reshape(d_out // block, block, d_in // block, block)
+        return mt.any(axis=(1, 3))
+
+
+def expand_block_mask(block_mask: np.ndarray, block: int) -> np.ndarray:
+    """Inverse of ``SparsityPattern.block_mask``: out-major block occupancy
+    of W^T -> element mask of W (every element of a live block is live —
+    BSR stores, and trains, whole tiles)."""
+    elem_t = np.kron(np.asarray(block_mask, bool),
+                     np.ones((block, block), bool))
+    return np.ascontiguousarray(elem_t.T)
+
+
+# ----------------------------------------------------------------------
+def magnitude_mask(w: np.ndarray, density: Optional[float],
+                   block: Optional[int] = None) -> np.ndarray:
+    """Element mask of W keeping the top-``density`` fraction by magnitude
+    with ONE global threshold — the same selection as the packers'
+    historical ``_prune_magnitude``, so from-dense construction through the
+    lifecycle is bit-identical to the pre-lifecycle constructors.
+
+    ``density`` of None (or >= 1) keeps exactly the non-zeros, matching
+    what ``CRS.from_dense`` on the unpruned weight would store. Exact
+    zeros never survive a magnitude selection (they cannot outrank a live
+    value), which is what makes a repeated magnitude re-prune monotone:
+    slots pruned to 0.0 stay dead. ``block`` switches to block granularity
+    over W^T (``core.bsr.magnitude_block_mask`` semantics, expanded back to
+    elements) — the BSR family's selection rule.
+    """
+    w = np.asarray(w, np.float32)
+    if block is not None:
+        wt = np.ascontiguousarray(w.T)
+        bm = magnitude_block_mask(wt, (block, block),
+                                  1.0 if density is None else density)
+        # All-zero blocks must stay dead regardless of how generous the
+        # density is (magnitude_block_mask's threshold hits 0.0 once
+        # n_keep exceeds the live-block count and would mark them live) —
+        # the block-granularity analogue of the "& (w != 0)" guard below.
+        nbr, nbc = wt.shape[0] // block, wt.shape[1] // block
+        live = (wt != 0.0).reshape(nbr, block, nbc, block).any(axis=(1, 3))
+        return expand_block_mask(bm & live, block)
+    if density is None or density >= 1.0:
+        return w != 0.0
+    keep = max(1, int(round(w.size * density)))
+    thresh = np.partition(np.abs(w).ravel(), -keep)[-keep]
+    return (np.abs(w) >= thresh) & (w != 0.0)
+
+
+# ----------------------------------------------------------------------
+def validate_schedule(total_steps: int, final_density: float,
+                      warmup_frac: float) -> None:
+    """Shared input validation for the cubic schedule (``PruneSchedule``
+    and the functional ``prune.sparsity_schedule``)."""
+    if not 0.0 < final_density <= 1.0:
+        raise ValueError(f"final_density must be in (0, 1], "
+                         f"got {final_density}")
+    if total_steps <= 0:
+        raise ValueError(f"total_steps must be positive, got {total_steps}")
+    if not 0.0 <= warmup_frac < 1.0:
+        raise ValueError(f"warmup_frac must be in [0, 1), got {warmup_frac}")
+
+
+@dataclasses.dataclass(frozen=True)
+class PruneSchedule:
+    """WHEN to re-prune and to WHAT density.
+
+    ``density_at`` is the cubic Zhu & Gupta curve (dense through
+    ``warmup_frac`` of training, then decaying to ``final_density`` at
+    ``total_steps``); ``every`` sets the re-prune cadence in steps —
+    between due steps the pattern stays fixed so jit caches stay warm.
+    """
+    final_density: float
+    total_steps: int
+    warmup_frac: float = 0.1
+    every: int = 1
+
+    def __post_init__(self):
+        validate_schedule(self.total_steps, self.final_density,
+                          self.warmup_frac)
+        if self.every <= 0:
+            raise ValueError(f"every must be positive, got {self.every}")
+
+    def density_at(self, step: int) -> float:
+        t0 = self.warmup_frac * self.total_steps
+        if step <= t0:
+            return 1.0
+        f = min(1.0, (step - t0) / max(self.total_steps - t0, 1))
+        return self.final_density + \
+            (1.0 - self.final_density) * (1 - f) ** 3
+
+    def due(self, step: int) -> bool:
+        """True when a train loop should re-prune AT this step: on the
+        ``every`` cadence, once the schedule has left the dense warmup."""
+        return step % self.every == 0 and self.density_at(step) < 1.0
+
+
+# ----------------------------------------------------------------------
+# Family registry: ``sparse.linear`` registers each params class with the
+# four operations the shared lifecycle needs. Everything below dispatches
+# on type(node) — callers never branch on the family.
+@dataclasses.dataclass(frozen=True)
+class FamilyOps:
+    name: str
+    # node -> dense W (d_in, d_out) of the node's CURRENT values array
+    to_dense: Callable[[Any], np.ndarray]
+    # (dense W, pattern, like_node) -> new node packed under pattern,
+    # reusing like_node's family kwargs (section/block/mesh/...)
+    pack: Callable[[np.ndarray, SparsityPattern, Any], Any]
+    # (meta, dense W) -> values array packed into an EXISTING meta
+    pack_values: Callable[[Any, np.ndarray], Any]
+    # (dense W, density, like_node) -> element mask at the family's
+    # granularity (elementwise for InCRS, whole blocks for BSR)
+    default_mask: Callable[[np.ndarray, float, Any], np.ndarray]
+
+
+_FAMILIES: Dict[type, FamilyOps] = {}
+
+
+def register_family(cls: type, ops: FamilyOps) -> None:
+    _FAMILIES[cls] = ops
+
+
+def is_lifecycle_node(x: Any) -> bool:
+    """True for a sparse-linear params object the lifecycle can repack.
+
+    Stacked values (pipeline stages sharing one pattern carry a leading
+    stage axis) are excluded: their per-stage values disagree on what to
+    prune, and the shared static meta cannot hold per-stage patterns.
+    """
+    if type(x) not in _FAMILIES or get_pattern(x) is None:
+        return False
+    idx = getattr(x.meta, "fwd_idx", None)
+    if idx is not None and np.ndim(x.values) != np.ndim(idx):
+        return False                      # stacked per-stage values
+    return True
+
+
+def get_pattern(node: Any) -> Optional[SparsityPattern]:
+    return getattr(node.meta, "pattern", None)
+
+
+def _family(node: Any) -> FamilyOps:
+    fam = _FAMILIES.get(type(node))
+    if fam is None:
+        raise TypeError(f"{type(node).__name__} is not a registered "
+                        f"sparse-linear family")
+    return fam
+
+
+def node_to_dense(node: Any) -> np.ndarray:
+    """Dense W (d_in, d_out) of a node's current values — the
+    format-agnostic intermediate every lifecycle move goes through."""
+    return _family(node).to_dense(node)
+
+
+# ----------------------------------------------------------------------
+def repack(node: Any, new_mask: np.ndarray, *,
+           version: Optional[int] = None) -> Any:
+    """THE lifecycle operation: re-pack ``node`` under ``new_mask``.
+
+    Values surviving the pattern change carry over exactly; slots new to
+    the pattern start at 0.0. The returned node carries an evolved pattern
+    (same lineage ``uid``, version bumped — or pinned to ``version`` when a
+    checkpoint restore re-creates a known snapshot) and freshly built
+    packed metadata; forward/backward through it is the same kernel path
+    as a from-scratch construction at that mask.
+    """
+    fam = _family(node)
+    return _repack_dense(node, fam.to_dense(node), new_mask, version=version)
+
+
+def _repack_dense(node: Any, w: np.ndarray, new_mask: np.ndarray, *,
+                  version: Optional[int] = None) -> Any:
+    fam = _family(node)
+    pat = get_pattern(node)
+    if pat is None:
+        raise ValueError(f"{type(node).__name__} carries no SparsityPattern"
+                         f" — rebuild it through a lifecycle constructor")
+    return fam.pack(w, pat.evolve(new_mask, version=version), node)
+
+
+def magnitude_repack(node: Any, density: float) -> Any:
+    """Re-prune ``node`` to ``density`` by magnitude of its CURRENT values
+    (the family's granularity: elementwise for InCRS, whole blocks for
+    BSR). Returns ``node`` unchanged — same object, no version bump — when
+    the selection does not move the mask, so a schedule that plateaus
+    stops invalidating caches."""
+    fam = _family(node)
+    w = fam.to_dense(node)
+    new_mask = fam.default_mask(w, density, node)
+    pat = get_pattern(node)
+    if pat is not None and np.array_equal(new_mask, pat.mask):
+        return node
+    return _repack_dense(node, w, new_mask)
+
+
+def repack_onto(node: Any, like: Any) -> Any:
+    """Repack ``node``'s values onto ``like``'s already-packed metadata.
+
+    Used for optimizer moments after a params repack: the moment node must
+    share the params node's NEW meta object (jax pytree structure checks
+    compare custom-node metadata by identity), and per-slot moments follow
+    the same carry-over rule as values — surviving slots keep their
+    moments, slots new to the pattern reset to 0.
+    """
+    fam = _family(node)
+    if type(like) is not type(node):
+        raise TypeError(f"repack_onto: {type(node).__name__} vs "
+                        f"{type(like).__name__}")
+    vals = fam.pack_values(like.meta, fam.to_dense(node))
+    return dataclasses.replace(like, values=vals.astype(node.values.dtype))
+
+
+__all__ = [
+    "SparsityPattern", "PruneSchedule", "FamilyOps",
+    "magnitude_mask", "expand_block_mask", "validate_schedule",
+    "register_family", "is_lifecycle_node", "get_pattern", "node_to_dense",
+    "repack", "magnitude_repack", "repack_onto",
+]

@@ -20,9 +20,13 @@ def prune_to_bsr(w: np.ndarray, block: int, density: float) -> BSR:
 def sparsity_schedule(step: int, total_steps: int, final_density: float,
                       warmup_frac: float = 0.1) -> float:
     """Cubic density schedule (dense -> final_density), Zhu & Gupta style.
-    Used by train loops that prune gradually."""
-    t0 = warmup_frac * total_steps
-    if step <= t0:
-        return 1.0
-    f = min(1.0, (step - t0) / max(total_steps - t0, 1))
-    return final_density + (1.0 - final_density) * (1 - f) ** 3
+    Used by train loops that prune gradually.
+
+    Functional view of ``pattern.PruneSchedule.density_at`` (the
+    schedule object additionally decides WHEN a train loop re-prunes);
+    invalid inputs raise ``ValueError`` instead of silently returning
+    densities outside (0, 1].
+    """
+    from .pattern import PruneSchedule
+    return PruneSchedule(final_density, total_steps,
+                         warmup_frac).density_at(step)

@@ -8,6 +8,12 @@
   * AdamW (optionally int8 moments) with clipping + warmup/cosine LR;
   * in/out shardings derived from the logical-axes trees, params and
     optimizer state donated (no double-buffering of the big tensors).
+
+``make_prune_callback`` is the sparsity-lifecycle hook: a host-side
+function a train loop calls between jitted steps to re-prune every
+sparse-linear layer in the params tree on a ``sparse.PruneSchedule``
+(values surviving the pattern change carry over; optimizer moments ride
+the same repack, so moments of pruned slots reset to zero).
 """
 from __future__ import annotations
 
@@ -20,6 +26,7 @@ import jax.numpy as jnp
 from ..models import model as M
 from ..models import sharding as sh
 from ..models.config import ModelConfig
+from ..sparse import pattern as spat
 from .optimizer import AdamWConfig, adamw_init, adamw_update, opt_state_axes
 from .zero import zero1_axes
 
@@ -102,3 +109,70 @@ def init_train_state(cfg: ModelConfig, opt_cfg: AdamWConfig, key):
     params, axes = M.init(cfg, key)
     opt_state = adamw_init(opt_cfg, params)
     return params, opt_state, axes
+
+
+# ----------------------------------------------------------------------
+# Sparsity-lifecycle hook. Pattern changes re-shape the packed values
+# arrays, so this CANNOT live inside the jitted step — the loop calls it
+# on the host between steps; jit re-traces at the new shapes on its own.
+def make_prune_callback(schedule: "spat.PruneSchedule"):
+    """Build a ``(step, params, opt_state) -> (params, opt_state, info)``
+    hook that magnitude-re-prunes every sparse-linear layer in ``params``
+    to ``schedule.density_at(step)`` whenever ``schedule.due(step)``.
+
+    For each repacked layer: values surviving the pattern change carry
+    over (slots new to the pattern start at 0), and the AdamW moment
+    entries are repacked onto the SAME new metadata — surviving slots keep
+    their moments, pruned slots' moments are dropped, new slots' moments
+    reset to 0. Layers whose magnitude selection does not move (or whose
+    values are stacked per pipeline stage) pass through untouched, so the
+    returned trees alias the inputs on a no-op step. ``info`` is None when
+    nothing changed, else ``{"step", "density", "layers", "nnz"}``.
+
+    Int8-quantized moments are not repackable (their per-block scales do
+    not survive a slot remap) — use ``quantize=False`` with a prune
+    schedule.
+
+    Cost note: every EFFECTIVE re-prune mints new identity-hashed static
+    metadata, so the jitted step re-traces at the new shapes and the
+    superseded executable stays in jax's compilation cache. Pick the
+    schedule's ``every`` so re-prunes are rare relative to steps (they
+    amortize the retrace), and for very long runs consider
+    ``jax.clear_caches()`` after a repack to release superseded
+    executables and their pattern buffers.
+    """
+    def callback(step: int, params, opt_state):
+        if not schedule.due(step):
+            return params, opt_state, None
+        density = schedule.density_at(step)
+        leaves, treedef = jax.tree_util.tree_flatten(
+            params, is_leaf=spat.is_lifecycle_node)
+        m_leaves = treedef.flatten_up_to(opt_state["m"])
+        v_leaves = treedef.flatten_up_to(opt_state["v"])
+        changed, nnz = 0, 0
+        for i, node in enumerate(leaves):
+            if not spat.is_lifecycle_node(node):
+                continue
+            new_node = spat.magnitude_repack(node, density)
+            if new_node is node:
+                continue
+            if not (isinstance(m_leaves[i], type(node))
+                    and hasattr(m_leaves[i].values, "dtype")):
+                raise ValueError(
+                    "prune callback needs plain (unquantized) moment "
+                    f"trees; got {type(m_leaves[i]).__name__} for "
+                    f"{type(node).__name__} moments")
+            m_leaves[i] = spat.repack_onto(m_leaves[i], new_node)
+            v_leaves[i] = spat.repack_onto(v_leaves[i], new_node)
+            leaves[i] = new_node
+            changed += 1
+            nnz += spat.get_pattern(new_node).nnz
+        if not changed:
+            return params, opt_state, None
+        opt_state = dict(opt_state,
+                         m=treedef.unflatten(m_leaves),
+                         v=treedef.unflatten(v_leaves))
+        info = {"step": step, "density": density, "layers": changed,
+                "nnz": nnz}
+        return treedef.unflatten(leaves), opt_state, info
+    return callback

@@ -71,6 +71,50 @@ def test_corrupt_manifest_recovers(tmp_path):
     assert ck.latest_step() == 2
 
 
+def test_custom_pytree_node_roundtrip(tmp_path):
+    """A registered custom pytree node (InCRSLinearParams) must flatten by
+    key-path and round-trip — the old dict/list-only flattener hit the
+    np.asarray(tree) leaf branch and could not."""
+    from repro.sparse import linear as slin
+    ck = CheckpointManager(str(tmp_path), async_write=False)
+    p = slin.incrs_linear_init(jax.random.PRNGKey(0), 32, 64, 0.3,
+                               section=16, block=4)
+    tree = {"params": {"l1": p},
+            "m": {"l1": jax.tree.map(lambda v: v * 0 + 2.0, p)}}
+    ck.save(1, tree)
+    tpl_p = slin.incrs_linear_init(jax.random.PRNGKey(0), 32, 64, 0.3,
+                                   section=16, block=4)
+    got = ck.restore(1, {"params": {"l1": tpl_p},
+                         "m": {"l1": jax.tree.map(lambda v: v * 0, tpl_p)}})
+    np.testing.assert_array_equal(np.asarray(got["params"]["l1"].values),
+                                  np.asarray(p.values))
+    assert float(np.asarray(got["m"]["l1"].values)[0, 0, 0]) == 2.0
+    # structure checks (adamw flatten_up_to) need meta IDENTITY m <-> params
+    assert got["m"]["l1"].meta is got["params"]["l1"].meta
+
+
+def test_pattern_restores_mid_schedule(tmp_path):
+    """A repacked (re-pruned) layer restores into a FRESH dense template:
+    the saved pattern re-targets the template's shapes and version."""
+    from repro.sparse import linear as slin
+    from repro.sparse import pattern as spat
+    ck = CheckpointManager(str(tmp_path), async_write=False)
+    p0 = slin.incrs_linear_init(jax.random.PRNGKey(1), 32, 64, 1.0,
+                                section=16, block=4)
+    p1 = spat.magnitude_repack(spat.magnitude_repack(p0, 0.5), 0.2)
+    assert spat.get_pattern(p1).version == 2
+    ck.save(7, {"params": {"l1": p1}})
+    tpl = slin.incrs_linear_init(jax.random.PRNGKey(1), 32, 64, 1.0,
+                                 section=16, block=4)
+    assert tpl.values.shape != p1.values.shape       # really re-shaped
+    got = ck.restore(7, {"params": {"l1": tpl}})["params"]["l1"]
+    assert spat.get_pattern(got).version == 2
+    np.testing.assert_array_equal(spat.get_pattern(got).mask,
+                                  spat.get_pattern(p1).mask)
+    np.testing.assert_array_equal(slin.incrs_to_dense_weight(got),
+                                  slin.incrs_to_dense_weight(p1))
+
+
 def test_elastic_restore_new_sharding(tmp_path):
     """Arrays restore onto explicitly-given (different) shardings."""
     ck = CheckpointManager(str(tmp_path), async_write=False)

@@ -202,6 +202,52 @@ def test_spmm_engine_sharded_wave_roundtrip():
     """))
 
 
+def test_spmm_engine_sharded_swap_pattern():
+    """Lifecycle hot-swap on a MULTI-DEVICE engine: a magnitude-repacked
+    row-sharded layer deploys into the running engine between waves; the
+    new pattern's panels stay one-shard-per-device and results match the
+    repacked dense oracle."""
+    print(_run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh
+        from repro.serve.engine import SpMMEngine, SpMMRequest
+        from repro.sparse import pattern as spat
+        from repro.sparse.linear import (incrs_linear_sharded_init,
+                                         incrs_sharded_to_dense_weight)
+        rng = np.random.default_rng(0)
+        mesh = Mesh(np.array(jax.devices()).reshape(8), ("data",))
+        p = incrs_linear_sharded_init(jax.random.PRNGKey(1), 600, 96,
+                                      density=0.5, mesh=mesh,
+                                      section=64, block=8)
+        eng = SpMMEngine(p, max_wave_cols=128)
+        assert eng.sharded and eng.pattern_version == 0
+        def serve(rid):
+            b = rng.normal(size=(600, 32)).astype(np.float32)
+            eng.submit(SpMMRequest(rid, b))
+            return b, [r for r in eng.run() if r.rid == rid][0].out
+        b, out = serve(0)
+        np.testing.assert_allclose(
+            out, incrs_sharded_to_dense_weight(p).T @ b,
+            rtol=1e-4, atol=1e-4)
+        p2 = spat.magnitude_repack(p, 0.1)
+        assert spat.get_pattern(p2).version == 1
+        eng.swap_pattern(p2)
+        assert eng.pattern_version == 1
+        assert eng.stats["pattern_swaps"] == 1
+        shards = eng.prep.idx.addressable_shards
+        assert len({s.device for s in shards}) == 8
+        assert all(s.data.shape[0] == 1 for s in shards)
+        b, out = serve(1)
+        w2 = incrs_sharded_to_dense_weight(p2)
+        np.testing.assert_allclose(out, w2.T @ b, rtol=1e-4, atol=1e-4)
+        # repack carried surviving values over
+        w1 = incrs_sharded_to_dense_weight(p)
+        live = w2 != 0
+        np.testing.assert_array_equal(w2[live], w1[live])
+        print("SPMM_ENGINE_SHARDED_SWAP_OK")
+    """))
+
+
 def test_compressed_psum_error_feedback():
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np

@@ -1,0 +1,333 @@
+"""Sparsity lifecycle: pattern repack correctness across families, prune
+schedule + trainer callback, ops pattern-version cache invalidation, and
+SpMMEngine hot pattern swap (the sharded swap lives in test_distributed)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.crs import CRS
+from repro.core.incrs import InCRS
+from repro.kernels import ops
+from repro.serve.engine import SpMMEngine, SpMMRequest
+from repro.sparse import linear as slin
+from repro.sparse import pattern as spat
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.train.trainer import make_prune_callback
+
+KW = dict(section=32, block=8)
+
+
+def _mlp(key, d_in=64, d_hidden=96, d_out=32, density=1.0):
+    k1, k2 = jax.random.split(key)
+    return {
+        "l1": slin.incrs_linear_init(k1, d_in, d_hidden, density,
+                                     scale=0.2, **KW),
+        "l2": slin.incrs_linear_init(k2, d_hidden, d_out, density,
+                                     scale=0.2, **KW),
+    }
+
+
+# ----------------------------------------------------------------------
+# Pattern + repack semantics
+def test_pattern_attached_and_versioned(rng):
+    p = slin.incrs_linear_init(jax.random.PRNGKey(0), 64, 96, 0.3, **KW)
+    pat = spat.get_pattern(p)
+    assert pat is not None and pat.version == 0
+    assert pat.nnz == p.meta.nnz
+    assert pat.packed["incrs"] is p.meta
+    p2 = spat.magnitude_repack(p, 0.1)
+    pat2 = spat.get_pattern(p2)
+    assert pat2.uid == pat.uid and pat2.version == 1
+    assert spat.get_pattern(p) is pat          # old node untouched
+
+
+def test_repack_carries_surviving_values(rng):
+    p = slin.incrs_linear_init(jax.random.PRNGKey(1), 64, 96, 0.4, **KW)
+    w = slin.incrs_to_dense_weight(p)
+    p2 = spat.magnitude_repack(p, 0.15)
+    w2 = slin.incrs_to_dense_weight(p2)
+    live = w2 != 0
+    np.testing.assert_array_equal(w2[live], w[live])
+    assert not np.array_equal(w2, w)           # something WAS pruned
+    assert p2.density == pytest.approx(0.15, abs=0.01)
+
+
+def test_repack_explicit_mask_keeps_zero_slots(rng):
+    """A slot the new mask keeps stays live even at value exactly 0."""
+    w = np.zeros((32, 32), np.float32)
+    w[0, 0] = 1.0
+    mask = np.zeros((32, 32), bool)
+    mask[0, 0] = mask[3, 5] = True             # (3, 5) is live at 0.0
+    p = slin.incrs_linear_from_dense(w, mask=mask, **KW)
+    assert p.meta.nnz == 2
+    g = jax.grad(lambda v: slin.incrs_linear_apply(
+        dataclasses.replace(p, values=v),
+        jnp.ones((4, 32))).sum())(p.values)
+    gd = slin.incrs_to_dense_weight(dataclasses.replace(p, values=g))
+    assert gd[3, 5] != 0.0                     # zero-valued slot gets grad
+
+
+def test_repack_noop_returns_same_object(rng):
+    p = slin.incrs_linear_init(jax.random.PRNGKey(2), 64, 64, 0.2, **KW)
+    p2 = spat.magnitude_repack(p, 0.2)
+    assert p2 is p
+
+
+def test_fixed_pattern_apply_bitwise_stable(rng):
+    """The lifecycle refactor must not move the numerics of a FIXED
+    pattern: from-dense then repack-to-same-mask produce bit-identical
+    forward results."""
+    w = np.where(rng.random((64, 96)) < 0.2,
+                 rng.normal(size=(64, 96)), 0.0).astype(np.float32)
+    p = slin.incrs_linear_from_dense(w, **KW)
+    x = jnp.asarray(rng.normal(size=(8, 64)).astype(np.float32))
+    y1 = np.asarray(slin.incrs_linear_apply(p, x))
+    p2 = spat.repack(p, spat.get_pattern(p).mask)   # forced version bump
+    assert spat.get_pattern(p2).version == 1
+    y2 = np.asarray(slin.incrs_linear_apply(p2, x))
+    np.testing.assert_array_equal(y1, y2)
+
+
+def test_bsr_repack_block_granularity(rng):
+    p = slin.sparse_linear_init(jax.random.PRNGKey(3), 64, 64, 16, 0.75)
+    p2 = spat.magnitude_repack(p, 0.25)
+    pat2 = spat.get_pattern(p2)
+    bm = pat2.block_mask(16)
+    # block-structured: element mask == its own block expansion
+    np.testing.assert_array_equal(pat2.mask,
+                                  spat.expand_block_mask(bm, 16))
+    # surviving blocks carry exact values
+    w, w2 = (np.asarray(slin.to_dense(q)) for q in (p, p2))
+    live = w2 != 0
+    np.testing.assert_array_equal(w2[live], w[live])
+    x = jnp.asarray(rng.normal(size=(4, 64)).astype(np.float32))
+    ref = np.asarray(x) @ w2
+    np.testing.assert_allclose(np.asarray(slin.sparse_linear_apply(p2, x)),
+                               ref, rtol=1e-4, atol=1e-5)
+
+
+def test_bsr_magnitude_mask_keeps_dead_blocks_dead(rng):
+    """A generous target density must not resurrect all-zero blocks: the
+    block threshold degenerates to 0.0 once n_keep exceeds the live-block
+    count, and score >= 0 would otherwise mark every dead block live."""
+    p = slin.sparse_linear_init(jax.random.PRNGKey(10), 64, 64, 16, 0.25)
+    assert spat.magnitude_repack(p, 0.99) is p     # no-op: nothing to add
+    w = np.asarray(slin.to_dense(p), np.float32)
+    m = spat.magnitude_mask(w, 0.99, block=16)
+    np.testing.assert_array_equal(m, spat.get_pattern(p).mask)
+
+
+def test_reshard_shares_pattern_lineage(rng):
+    p = slin.incrs_linear_init(jax.random.PRNGKey(4), 32, 64, 0.3, **KW)
+    mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    ps = slin.incrs_linear_shard(p, mesh=mesh)
+    assert spat.get_pattern(ps) is spat.get_pattern(p)
+    assert spat.get_pattern(p).packed["incrs_sharded"] is ps.meta
+    np.testing.assert_array_equal(slin.incrs_sharded_to_dense_weight(ps),
+                                  slin.incrs_to_dense_weight(p))
+
+
+# ----------------------------------------------------------------------
+# Schedule + trainer callback
+def test_prune_schedule_validation():
+    with pytest.raises(ValueError):
+        spat.PruneSchedule(0.0, 100)
+    with pytest.raises(ValueError):
+        spat.PruneSchedule(1.5, 100)
+    with pytest.raises(ValueError):
+        spat.PruneSchedule(0.5, 0)
+    with pytest.raises(ValueError):
+        spat.PruneSchedule(0.5, 100, warmup_frac=1.0)
+    with pytest.raises(ValueError):
+        spat.PruneSchedule(0.5, 100, every=0)
+    s = spat.PruneSchedule(0.25, 100, warmup_frac=0.1, every=10)
+    assert s.density_at(0) == 1.0
+    assert s.density_at(100) == pytest.approx(0.25)
+    assert not s.due(0) and not s.due(10)      # warmup: still dense
+    assert s.due(20) and not s.due(25)
+
+
+def test_grad_matches_dense_oracle_after_pattern_swap(rng):
+    """THE mid-training correctness property: after a re-prune swaps the
+    pattern, the fused-kernel gradients still match the dense oracle
+    restricted to the new live set."""
+    params = _mlp(jax.random.PRNGKey(5))
+    x = jnp.asarray(rng.normal(size=(16, 64)).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=(16, 32)).astype(np.float32))
+
+    def loss_fn(p):
+        h = jnp.tanh(slin.incrs_linear_apply(p["l1"], x))
+        return jnp.mean((slin.incrs_linear_apply(p["l2"], h) - y) ** 2)
+
+    opt = AdamWConfig(lr=5e-3, weight_decay=0.0, warmup_steps=1,
+                      total_steps=10)
+    st = adamw_init(opt, params)
+    cb = make_prune_callback(spat.PruneSchedule(0.2, 10, warmup_frac=0.1,
+                                                every=2))
+    for step in range(6):                      # re-prunes at steps 2, 4
+        params, st, _ = cb(step, params, st)
+        g = jax.grad(loss_fn)(params)
+        params, st, _ = adamw_update(opt, g, st, params)
+    assert spat.get_pattern(params["l1"]).version >= 2
+
+    g = jax.grad(loss_fn)(params)
+    wd = {k: jnp.asarray(slin.incrs_to_dense_weight(v))
+          for k, v in params.items()}
+
+    def dense_loss(ws):
+        h = jnp.tanh(x @ ws["l1"])
+        return jnp.mean((h @ ws["l2"] - y) ** 2)
+
+    gref = jax.grad(dense_loss)(wd)
+    for nm in ("l1", "l2"):
+        gd = slin.incrs_to_dense_weight(
+            dataclasses.replace(params[nm], values=g[nm].values))
+        live = np.asarray(wd[nm]) != 0
+        np.testing.assert_allclose(gd[live], np.asarray(gref[nm])[live],
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_prune_callback_resets_pruned_moments(rng):
+    params = {"l1": slin.incrs_linear_init(jax.random.PRNGKey(6), 64, 64,
+                                           1.0, scale=0.2, **KW)}
+    opt = AdamWConfig(lr=1e-2, weight_decay=0.0, warmup_steps=1,
+                      total_steps=10)
+    st = adamw_init(opt, params)
+    # give every live slot a non-zero moment
+    ones = jax.tree.map(lambda v: jnp.ones_like(v), params)
+    st = dict(st, m=ones, v=ones)
+    cb = make_prune_callback(spat.PruneSchedule(0.25, 10, warmup_frac=0.1,
+                                                every=2))
+    params2, st2, info = cb(2, params, st)
+    assert info is not None and info["layers"] == 1
+    # moments share the params' NEW meta object (pytree aux identity)
+    assert st2["m"]["l1"].meta is params2["l1"].meta
+    md = slin.incrs_to_dense_weight(st2["m"]["l1"])
+    wd2 = slin.incrs_to_dense_weight(params2["l1"])
+    live_idx = np.asarray(params2["l1"].meta.fwd_idx) >= 0
+    # surviving slots keep their moments (=1), and the packed moment array
+    # holds nothing outside the new live set
+    assert np.all(np.asarray(st2["m"]["l1"].values)[live_idx] == 1.0)
+    assert md.size - np.count_nonzero(md) >= wd2.size - live_idx.sum()
+    # the step function still runs after the swap (treedefs line up)
+    g = jax.tree.map(lambda v: jnp.zeros_like(v), params2)
+    adamw_update(opt, g, st2, params2)
+
+
+def test_prune_callback_skips_stacked_stages(rng):
+    stack = slin.incrs_linear_stack_init(jax.random.PRNGKey(7), 2, 64, 64,
+                                         0.3, **KW)
+    assert not spat.is_lifecycle_node(stack)
+    opt = AdamWConfig(lr=1e-2, warmup_steps=1, total_steps=10)
+    st = adamw_init(opt, {"s": stack})
+    cb = make_prune_callback(spat.PruneSchedule(0.1, 10, every=2))
+    p2, st2, info = cb(4, {"s": stack}, st)
+    assert info is None and p2["s"] is stack
+
+
+# ----------------------------------------------------------------------
+# ops: pattern-version-keyed prep cache
+def test_ops_versioned_prep_invalidation(rng):
+    d = np.where(rng.random((64, 128)) < 0.1,
+                 rng.normal(size=(64, 128)), 0.0).astype(np.float32)
+    pat = spat.SparsityPattern(d != 0)
+    inc = InCRS.from_crs(CRS.from_mask(d, pat.mask))
+    p1 = ops.prepare_incrs(inc, pattern=pat)
+    assert ops.prepare_incrs(inc, pattern=pat) is p1      # version hit
+    # same lineage, new version -> stale entry replaced, new prep built
+    pat2 = pat.evolve(spat.magnitude_mask(d, 0.05))
+    d2 = np.where(pat2.mask, d, 0.0)
+    inc2 = InCRS.from_crs(CRS.from_mask(d2, pat2.mask))
+    p2 = ops.prepare_incrs(inc2, pattern=pat2)
+    assert p2 is not p1
+    assert ops.prepare_incrs(inc2, pattern=pat2) is p2
+    np.testing.assert_allclose(
+        np.asarray(ops.incrs_spmm(p2, jnp.eye(128, dtype=jnp.float32))),
+        d2, rtol=1e-5, atol=1e-6)
+    ops.invalidate_pattern(pat2)
+    assert ops.prepare_incrs(inc2, pattern=pat2) is not p2
+
+
+def test_ops_versioned_prep_guards_source_identity(rng):
+    """Values can change WITHOUT a version bump (training on a fixed
+    pattern): an InCRS rebuilt from updated weights must MISS the
+    versioned cache, never serve the pre-update values."""
+    d = np.where(rng.random((32, 64)) < 0.2,
+                 rng.normal(size=(32, 64)), 0.0).astype(np.float32)
+    pat = spat.SparsityPattern(d != 0)
+    inc = InCRS.from_crs(CRS.from_mask(d, pat.mask))
+    p1 = ops.prepare_incrs(inc, pattern=pat)
+    d2 = d * 2.0                                   # same mask, new values
+    inc2 = InCRS.from_crs(CRS.from_mask(d2, pat.mask))
+    p2 = ops.prepare_incrs(inc2, pattern=pat)
+    assert p2 is not p1
+    np.testing.assert_array_equal(np.asarray(p2.val),
+                                  2.0 * np.asarray(p1.val))
+
+
+# ----------------------------------------------------------------------
+# serving: hot pattern swap
+def test_spmm_engine_swap_pattern_roundtrip(rng):
+    p = slin.incrs_linear_init(jax.random.PRNGKey(8), 96, 64, 0.5,
+                               scale=0.3, **KW)
+    eng = SpMMEngine(p, max_wave_cols=128)
+    assert eng.pattern_version == 0
+
+    def serve(rid):
+        b = rng.normal(size=(96, 16)).astype(np.float32)
+        eng.submit(SpMMRequest(rid, b))
+        out = [r for r in eng.run() if r.rid == rid][0].out
+        return b, out
+
+    b, out = serve(0)
+    np.testing.assert_allclose(out, slin.incrs_to_dense_weight(p).T @ b,
+                               rtol=1e-4, atol=1e-5)
+    p2 = spat.magnitude_repack(p, 0.2)
+    eng.swap_pattern(p2)
+    assert eng.pattern_version == 1 and eng.stats["pattern_swaps"] == 1
+    b, out = serve(1)
+    np.testing.assert_allclose(out, slin.incrs_to_dense_weight(p2).T @ b,
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_spmm_engine_swap_shape_mismatch_rejected(rng):
+    p = slin.incrs_linear_init(jax.random.PRNGKey(9), 96, 64, 0.5, **KW)
+    other = slin.incrs_linear_init(jax.random.PRNGKey(9), 64, 64, 0.5, **KW)
+    eng = SpMMEngine(p)
+    old_a, old_prep = eng.a, eng.prep
+    with pytest.raises(ValueError, match="serving shape"):
+        eng.swap_pattern(other)
+    assert eng.a is old_a and eng.prep is old_prep  # no torn state
+    # a swap rejected INSIDE operand resolution must also leave no trace
+    with pytest.raises(ValueError, match="re-shard"):
+        eng.swap_pattern(eng.prep, mesh=object())
+    assert eng.a is old_a and eng.prep is old_prep
+    # engine still serves on the OLD operand after the rejected swap
+    b = rng.normal(size=(96, 8)).astype(np.float32)
+    eng.submit(SpMMRequest(0, b))
+    out = eng.run()[0].out
+    np.testing.assert_allclose(out, slin.incrs_to_dense_weight(p).T @ b,
+                               rtol=1e-4, atol=1e-5)
+    assert eng.stats["pattern_swaps"] == 0
+
+
+# ----------------------------------------------------------------------
+def test_sparsity_schedule_function_validates():
+    from repro.sparse.prune import sparsity_schedule
+    with pytest.raises(ValueError):
+        sparsity_schedule(0, 1000, 0.0)
+    with pytest.raises(ValueError):
+        sparsity_schedule(0, 1000, -0.5)
+    with pytest.raises(ValueError):
+        sparsity_schedule(0, 1000, 1.2)
+    with pytest.raises(ValueError):
+        sparsity_schedule(0, 0, 0.5)
+    with pytest.raises(ValueError):
+        sparsity_schedule(0, -10, 0.5)
+    with pytest.raises(ValueError):
+        sparsity_schedule(0, 1000, 0.5, warmup_frac=-0.1)
+    assert sparsity_schedule(0, 1000, 0.25) == 1.0
+    assert sparsity_schedule(1000, 1000, 0.25) == pytest.approx(0.25)
