@@ -60,7 +60,7 @@ def run(seed: int = 0):
     for density in (0.25, 0.5):
         mask = magnitude_block_mask(d, (128, 128), density)
         bsr = BSR.from_mask(d, mask, (128, 128))
-        us = _time(lambda x: ops.bsr_matmul(bsr, x), b512)
+        us = _time(lambda x: ops.spmm(bsr, x), b512)
         useful = 2 * bsr.nnz_blocks * 128 * 128 * n
         rows.append((f"bsr_spmm_d{density}", us,
                      f"useful_flops={useful:.3g};"
@@ -68,7 +68,7 @@ def run(seed: int = 0):
 
     spec = DatasetSpec("kb", 128, 1024, 0.03)
     a_sp = synthesize(spec, seed)
-    us = _time(lambda: ops.index_match_matmul(a_sp, a_sp, rounds=128))
+    us = _time(lambda: ops.spmm(a_sp, a_sp, rounds=128))
     rows.append(("index_match_spmm", us, f"nnz={a_sp.nnz}"))
 
     from repro.core.incrs import InCRS
@@ -82,7 +82,7 @@ def run(seed: int = 0):
     # Fused single-pass SpMM vs the incrs_to_dense -> dense_mm two-pass
     # pipeline on the SAME workload (acceptance: fused must win).
     bk = jnp.asarray(rng.normal(size=(spec.n, 256)).astype(np.float32))
-    fused_us = _time(lambda x: ops.incrs_spmm(inc, x), bk)
+    fused_us = _time(lambda x: ops.spmm(inc, x), bk)
     rows.append(("incrs_spmm_fused", fused_us,
                  f"nnz={a_sp.nnz};sections={inc.n_sections}"))
     twopass_us = _time(lambda x: ops.dense_mm(ops.incrs_to_dense(inc), x), bk)
@@ -96,13 +96,14 @@ def run(seed: int = 0):
     }
 
     # Sparsity-lifecycle repack: one full magnitude re-prune of a trainable
-    # InCRSLinear on the SAME workload (densify -> new mask -> rebuild
+    # InCRS Linear on the SAME workload (densify -> new mask -> rebuild
     # counters/stripes/t_gather), against the fused SpMM it amortizes over.
     # The ratio is the "how many multiplies must a pattern survive" number
     # a re-pruning schedule's cadence should beat.
-    from repro.sparse import linear as slin, pattern as spat
-    lp = slin.incrs_linear_from_dense(a_sp.to_dense().T,
-                                      section=inc.section, block=inc.block)
+    from repro.sparse import Linear, SparseSpec, api, pattern as spat
+    lp = Linear.from_dense(
+        a_sp.to_dense().T,
+        SparseSpec("incrs", section=inc.section, block=inc.block)).inner
     dens = [0.02, 0.015, 0.01]
 
     def _repack_cycle():
@@ -125,18 +126,44 @@ def run(seed: int = 0):
                     f"re-prune, amortized over 256-col fused SpMM",
     }
 
+    # Plan-once vs per-call prep: the plan–execute API (sparse.api) builds
+    # the stripe metadata ONCE and streams right-hand sides against it;
+    # the ad-hoc path re-preps the operand on every call (cache evicted
+    # between calls). The ratio is what a caller saves by planning — the
+    # steady-state serving contract SpMMEngine/PreparedOperand always
+    # implemented, now visible at the API boundary.
+    planned = api.plan_for_operand(a_sp, SparseSpec("incrs"))
+    plan_us = _time(lambda x: planned(x), bk)
+    rows.append(("spmm_planned", plan_us,
+                 "plan-once (sparse.api.plan_for_operand), prep amortized"))
+
+    def _adhoc(x):
+        ops.invalidate_prepared(inc)           # forget the cached prep
+        return ops.spmm(inc, x)
+
+    adhoc_us = _time(_adhoc, bk)
+    rows.append(("spmm_adhoc_prep", adhoc_us,
+                 "per-call prep (cache evicted each call)"))
+    comparisons["spmm_plan_vs_adhoc"] = {
+        "planned_us": plan_us,
+        "adhoc_us": adhoc_us,
+        "prep_overhead_x": adhoc_us / plan_us,
+        "workload": f"{spec.m}x{spec.n} d={spec.density} @ 256 cols, "
+                    f"plan-once vs re-prep per call",
+    }
+
     # Stripe-reuse vs per-col-tile re-expansion on the same operand, at a
     # fixed 128-wide col tiling over a 1024-col RHS (8 col tiles): the
     # baseline order expands every section stripe once PER TILE, the reuse
     # order once per (row tile, section).
     bw = jnp.asarray(rng.normal(size=(spec.n, 1024)).astype(np.float32))
     expand_us = _time(
-        lambda x: ops.incrs_spmm(inc, x, bn=128, variant="expand"),
+        lambda x: ops.spmm(inc, x, bn=128, variant="expand"),
         bw, reps=9)
     rows.append(("incrs_spmm_expand_percoltile", expand_us,
                  "variant=expand;bn=128;cols=1024"))
     reuse_us = _time(
-        lambda x: ops.incrs_spmm(inc, x, bn=128, variant="reuse"),
+        lambda x: ops.spmm(inc, x, bn=128, variant="reuse"),
         bw, reps=9)
     rows.append(("incrs_spmm_reuse", reuse_us,
                  "variant=reuse;bn=128;cols=1024"))
@@ -153,11 +180,11 @@ def run(seed: int = 0):
     # justifies the cutover (the bn=128 pair above isolates the reuse
     # effect at a narrow tiling).
     ba = jnp.asarray(rng.normal(size=(spec.n, 2048)).astype(np.float32))
-    exp_a = _time(lambda x: ops.incrs_spmm(inc, x, variant="expand"),
+    exp_a = _time(lambda x: ops.spmm(inc, x, variant="expand"),
                   ba, reps=9)
     rows.append(("incrs_spmm_expand_autopoint", exp_a,
                  "variant=expand;bn=default(512);cols=2048"))
-    reu_a = _time(lambda x: ops.incrs_spmm(inc, x, variant="reuse"),
+    reu_a = _time(lambda x: ops.spmm(inc, x, variant="reuse"),
                   ba, reps=9)
     rows.append(("incrs_spmm_reuse_autopoint", reu_a,
                  "variant=reuse;bn=default(512);cols=2048"))
@@ -205,12 +232,12 @@ rng = np.random.default_rng({seed})
 b = jnp.asarray(rng.normal(size=(spec.n, 256)).astype(np.float32))
 mesh = Mesh(np.asarray(jax.devices()).reshape({n_dev}), ("data",))
 prep = ops.prepare_incrs_sharded(inc, mesh, pad_rows_to=32)
-out = ops.incrs_spmm_sharded(prep, b)
+out = ops.spmm(prep, b)
 jax.block_until_ready(out)
 best = float("inf")
 for _ in range(5):
     t0 = time.perf_counter()
-    jax.block_until_ready(ops.incrs_spmm_sharded(prep, b))
+    jax.block_until_ready(ops.spmm(prep, b))
     best = min(best, time.perf_counter() - t0)
 print("US", best * 1e6)
 """

@@ -3,11 +3,15 @@
 1. InCRS — random access into a row-stored sparse matrix at ~b/2+1 memory
    accesses instead of CRS's ~N*D/2.
 2. The synchronized-mesh SpMM — Algorithm 2 exactness + the TPU-native
-   round-densified kernel (index_match_spmm) and the block-sparse kernel
-   steered by prefix counters (bsr_spmm).
+   kernels, all behind ONE front door: ``ops.spmm`` dispatches every
+   kernel family on the operand format, and ``sparse.SparseSpec`` /
+   ``sparse.Linear`` move a layer from dense to fused-InCRS to row-sharded
+   InCRS by changing ONLY the spec.
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
+import dataclasses
+
 import numpy as np
 
 from repro.core.crs import CRS
@@ -16,6 +20,7 @@ from repro.core.mesh_sim import (conventional_mm_latency, fpic_latency,
                                  node_alg2, sync_mesh_latency)
 from repro.data.datasets import DatasetSpec, synthesize
 from repro.kernels import ops
+from repro.sparse import Linear, SparseSpec
 
 
 def main():
@@ -52,20 +57,49 @@ def main():
     print(f"[mesh] A@A^T latency: sync {sync}  fpic(sameBW) {fpic}  "
           f"conventional {conv} cycles")
 
-    # ---- 4. TPU kernels (interpret mode on CPU) ---------------------
-    out = np.asarray(ops.index_match_matmul(crs, crs, rounds=128))
+    # ---- 4. TPU kernels: ops.spmm dispatches every family -----------
+    out = np.asarray(ops.spmm(crs, crs, rounds=128))   # CRS x CRS^T
     ref = dense.astype(np.float32) @ dense.astype(np.float32).T
     err = np.abs(out - ref).max() / max(np.abs(ref).max(), 1)
-    print(f"[pallas] index_match_spmm matches dense: rel err {err:.2e}")
+    print(f"[pallas] spmm(crs, crs) (index-matching) rel err {err:.2e}")
 
     from repro.core.bsr import BSR
     w = rng.normal(size=(256, 256)).astype(np.float32)
     bsr = BSR.from_dense(np.where(rng.random((256, 256)) < 0.5, w, 0),
                          (128, 128))
     x = rng.normal(size=(256, 64)).astype(np.float32)
-    y = np.asarray(ops.bsr_matmul(bsr, x))
+    y = np.asarray(ops.spmm(bsr, x))                   # BSR x dense
     err = np.abs(y - bsr.to_dense() @ x).max()
-    print(f"[pallas] bsr_spmm (prefix-counter steered) abs err {err:.2e}")
+    print(f"[pallas] spmm(bsr, b) (prefix-counter steered) abs err "
+          f"{err:.2e}")
+
+    # ---- 5. One layer, three data paths — change ONLY the SparseSpec.
+    # The same pruned weight runs dense, fused-InCRS, and row-sharded
+    # InCRS; nothing else about the call site moves.
+    import jax
+
+    d_in, d_out = 128, 256
+    wl = rng.normal(size=(d_in, d_out)).astype(np.float32)
+    mask = np.abs(wl) >= np.quantile(np.abs(wl), 0.9)   # keep top 10%
+    wl = np.where(mask, wl, 0.0)
+    xb = rng.normal(size=(8, d_in)).astype(np.float32)
+    mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:1]), ("shard",))
+    base = SparseSpec("incrs", mask=mask)
+    specs = {
+        "dense": SparseSpec("dense", mask=mask),
+        "incrs (fused kernel)": base,
+        "incrs (row-sharded)": dataclasses.replace(base, mesh=mesh),
+    }
+    ys = {}
+    for name, spec in specs.items():
+        lin = Linear.from_dense(wl, spec)               # ONE constructor
+        ys[name] = np.asarray(lin(xb))                  # ONE apply
+    ref_y = xb @ wl
+    for name, yv in ys.items():
+        print(f"[spec]  {name:22s} max |err| vs x@W: "
+              f"{np.abs(yv - ref_y).max():.2e}")
+    assert np.array_equal(ys["incrs (fused kernel)"],
+                          ys["incrs (row-sharded)"])
     print("quickstart OK")
 
 

@@ -55,7 +55,7 @@ def main(argv=None):
     eng = SpMMEngine(inc, max_wave_cols=max(512, total_cols))
     t_prep = time.perf_counter() - t0
     b_all = jnp.asarray(np.concatenate([r.b for r in reqs], axis=1))
-    ops.incrs_spmm(inc, b_all).block_until_ready()            # warm fused
+    ops.spmm(inc, b_all).block_until_ready()                  # warm fused
     ops.dense_mm(ops.incrs_to_dense(inc), b_all).block_until_ready()
     t0 = time.perf_counter()
     for r in reqs:

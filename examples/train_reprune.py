@@ -27,8 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
-from repro.sparse.linear import (incrs_linear_apply, incrs_linear_init,
-                                 incrs_to_dense_weight)
+from repro.sparse import Linear, SparseSpec, apply
 from repro.sparse.pattern import PruneSchedule, get_pattern
 from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
 from repro.train.trainer import make_prune_callback
@@ -57,17 +56,18 @@ def main(argv=None):
                     .astype(np.float32))
     y = jnp.tanh(x @ jnp.asarray(w1)) @ jnp.asarray(w2)
 
-    kw = dict(section=args.section, block=args.block)
+    spec = SparseSpec("incrs", density=1.0, section=args.section,
+                      block=args.block)
 
     def init_params():
         # density=1.0 -> an all-live pattern: the layers START dense and
         # the schedule prunes them down.
         k1, k2 = jax.random.split(jax.random.PRNGKey(1))
         return {
-            "l1": incrs_linear_init(k1, args.d_in, args.d_hidden, 1.0,
-                                    scale=0.2, **kw),
-            "l2": incrs_linear_init(k2, args.d_hidden, args.d_out, 1.0,
-                                    scale=0.2, **kw),
+            "l1": Linear.init(k1, args.d_in, args.d_hidden, spec,
+                              scale=0.2),
+            "l2": Linear.init(k2, args.d_hidden, args.d_out, spec,
+                              scale=0.2),
         }
 
     params = init_params()
@@ -75,8 +75,8 @@ def main(argv=None):
           f"{params['l1'].density:.2f}, target {args.density}")
 
     def loss_fn(p):
-        h = jnp.tanh(incrs_linear_apply(p["l1"], x))
-        return jnp.mean((incrs_linear_apply(p["l2"], h) - y) ** 2)
+        h = jnp.tanh(apply(p["l1"], x))
+        return jnp.mean((apply(p["l2"], h) - y) ** 2)
 
     opt = AdamWConfig(lr=3e-3, weight_decay=0.0,
                       warmup_steps=max(2, args.steps // 10),
@@ -157,7 +157,7 @@ def main(argv=None):
     for r in reqs:
         eng.submit(r)
     done = [r for r in eng.run() if r.rid > 0]
-    w1_trained = incrs_to_dense_weight(params["l1"])
+    w1_trained = params["l1"].to_dense()
     for r in done:
         np.testing.assert_allclose(r.out, w1_trained.T @ r.b,
                                    rtol=1e-3, atol=1e-3)

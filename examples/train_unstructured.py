@@ -1,35 +1,39 @@
-"""End-to-end UNSTRUCTURED-sparsity training on the fused InCRS kernel.
+"""End-to-end SPARSE training behind one spec: ``sparse.Linear``.
 
-A 2-layer MLP student with element-level sparse weights (``InCRSLinear``)
-regresses a dense teacher. Every matmul in both the forward AND backward
-pass runs on the paper's data path: the forward is the fused
-``incrs_spmm`` (section stripes decompressed in VMEM, contracted on the
-MXU), ``dx`` is a second fused SpMM over the precomputed transposed
-stripes, and ``dW`` is a gather over the stripe ``idx`` — T MACs per
-stored non-zero, never a dense outer product. The weights are ordinary
-optimizer-visible pytree leaves (AdamW below).
+A 2-layer MLP student with sparse weights regresses a dense teacher. The
+kernel family is a ``--format`` flag, not a code path: ``incrs`` trains
+element-level (unstructured) sparsity on the paper's fused data path —
+forward is the fused ``spmm`` (section stripes decompressed in VMEM,
+contracted on the MXU), ``dx`` is a second fused SpMM over precomputed
+transposed stripes, ``dW`` is a gather over the stripe ``idx`` (T MACs per
+stored non-zero, never a dense outer product) — while ``bsr`` trains
+block-structured sparsity on the prefix-counter-steered block kernel. The
+weights are ordinary optimizer-visible pytree leaves (AdamW below) either
+way; nothing at the call site changes but the ``SparseSpec``.
 
 After training, the first layer is deployed UNCHANGED into
-``serve.SpMMEngine`` — trained values flow straight into the serving
-operand, no repacking.
+``serve.SpMMEngine`` — the engine accepts the ``sparse.Linear`` directly
+(trained values flow straight into the serving operand, no repacking).
 
 Run: PYTHONPATH=src python examples/train_unstructured.py --steps 40
+     PYTHONPATH=src python examples/train_unstructured.py --format bsr
 """
 import argparse
-import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.sparse.linear import (incrs_linear_apply, incrs_linear_init,
-                                 incrs_to_dense_weight)
+from repro.sparse import Linear, SparseSpec, apply
 from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
+    ap.add_argument("--format", default="incrs", choices=("incrs", "bsr"),
+                    help="kernel family — a SparseSpec field, same "
+                         "training loop either way")
     ap.add_argument("--d-in", type=int, default=128)
     ap.add_argument("--d-hidden", type=int, default=256)
     ap.add_argument("--d-out", type=int, default=64)
@@ -37,7 +41,10 @@ def main(argv=None):
     ap.add_argument("--steps", type=int, default=40)
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--section", type=int, default=64)
-    ap.add_argument("--block", type=int, default=8)
+    ap.add_argument("--block", type=int, default=8,
+                    help="InCRS counter block (incrs) / tile side (bsr "
+                         "uses --bsr-block)")
+    ap.add_argument("--bsr-block", type=int, default=32)
     args = ap.parse_args(argv)
 
     rng = np.random.default_rng(0)
@@ -47,32 +54,33 @@ def main(argv=None):
                     .astype(np.float32))
     y = jnp.tanh(x @ jnp.asarray(w1)) @ jnp.asarray(w2)
 
-    kw = dict(section=args.section, block=args.block)
+    if args.format == "incrs":
+        spec = SparseSpec("incrs", density=args.density,
+                          section=args.section, block=args.block)
+    else:
+        spec = SparseSpec("bsr", density=args.density, block=args.bsr_block)
     k1, k2 = jax.random.split(jax.random.PRNGKey(1))
     params = {
-        "l1": incrs_linear_init(k1, args.d_in, args.d_hidden,
-                                args.density, scale=0.2, **kw),
-        "l2": incrs_linear_init(k2, args.d_hidden, args.d_out,
-                                args.density, scale=0.2, **kw),
+        "l1": Linear.init(k1, args.d_in, args.d_hidden, spec, scale=0.2),
+        "l2": Linear.init(k2, args.d_hidden, args.d_out, spec, scale=0.2),
     }
     nnz = sum(p.nnz for p in params.values())
     dense_n = args.d_in * args.d_hidden + args.d_hidden * args.d_out
-    print(f"student: {nnz} trainable non-zeros "
+    print(f"student ({args.format}): {nnz} trainable non-zeros "
           f"({nnz / dense_n:.1%} of the dense parameter count)")
 
     def loss_fn(p):
-        h = jnp.tanh(incrs_linear_apply(p["l1"], x))
-        return jnp.mean((incrs_linear_apply(p["l2"], h) - y) ** 2)
+        h = jnp.tanh(apply(p["l1"], x))
+        return jnp.mean((apply(p["l2"], h) - y) ** 2)
 
     # grad sanity vs the dense oracle, once at init
     g = jax.grad(loss_fn)(params)
     for nm in ("l1", "l2"):
-        wd = jnp.asarray(incrs_to_dense_weight(params[nm]))
-        gd = incrs_to_dense_weight(
-            dataclasses.replace(params[nm], values=g[nm].values))
+        wd = jnp.asarray(params[nm].to_dense())
+        gd = np.asarray(g[nm].to_dense())   # grads share the layer's node
+
         def dense_loss(w, nm=nm):
-            ps = {k: jnp.asarray(incrs_to_dense_weight(v))
-                  for k, v in params.items()}
+            ps = {k: jnp.asarray(v.to_dense()) for k, v in params.items()}
             ps[nm] = w
             h = jnp.tanh(x @ ps["l1"])
             return jnp.mean((h @ ps["l2"] - y) ** 2)
@@ -103,16 +111,17 @@ def main(argv=None):
           f"loss {first:.4f} -> {last:.4f}")
     assert last < first, "training must reduce the loss"
 
-    # Deploy the trained first layer into the serving engine: the params'
-    # ``prep`` view IS the serving operand (same values, zero repacking).
+    # Deploy the trained first layer into the serving engine: the engine
+    # takes the Linear itself (same values, zero repacking — for incrs the
+    # packed stripes ARE the serving operand; bsr serves through its plan).
     from repro.serve.engine import SpMMEngine, SpMMRequest
-    eng = SpMMEngine(params["l1"].prep, max_wave_cols=256)
+    eng = SpMMEngine(params["l1"], max_wave_cols=256)
     reqs = [SpMMRequest(i, rng.normal(size=(args.d_in, 32))
                         .astype(np.float32)) for i in range(3)]
     for r in reqs:
         eng.submit(r)
     done = eng.run()
-    w1_trained = incrs_to_dense_weight(params["l1"])
+    w1_trained = params["l1"].to_dense()
     for r in done:
         np.testing.assert_allclose(r.out, w1_trained.T @ r.b,
                                    rtol=1e-3, atol=1e-3)

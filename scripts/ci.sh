@@ -6,7 +6,11 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-python -m pytest -x -q
+# DeprecationWarnings are ERRORS: src/, examples/ and benchmarks/ are
+# migrated off the legacy pre-SparseSpec names; only the shims themselves
+# and the parity suite (tests/test_api.py, which catches the warnings with
+# pytest.warns) may touch them.
+python -m pytest -x -q -W error::DeprecationWarning
 # Multi-device substrate (sharded InCRS data path, pipeline, psum) on 8
 # fake CPU devices so every shard_map path is exercised without TPUs. The
 # test file also re-fakes devices in its own subprocesses; the env var here
@@ -14,8 +18,10 @@ python -m pytest -x -q
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     python -m pytest -x -q tests/test_distributed.py
 python benchmarks/kernel_bench.py --json BENCH_kernels.json
-# trainable-InCRS end-to-end smoke (fused-kernel fwd/bwd + serve round trip)
+# trainable-sparse end-to-end smoke (fused-kernel fwd/bwd + serve round
+# trip) — the kernel family is a SparseSpec --format flag, both paths run
 python examples/train_unstructured.py --steps 8
+python examples/train_unstructured.py --steps 8 --format bsr
 # sparsity-lifecycle smoke: scheduled re-pruning -> mid-schedule
 # checkpoint/resume -> hot-swap into a running SpMMEngine
 python examples/train_reprune.py --steps 8

@@ -1,0 +1,32 @@
+"""Deprecation shims for the pre-``SparseSpec`` public surface.
+
+The unified plan–execute API (``sparse.api.SparseSpec`` / ``MatmulPlan`` /
+``sparse.Linear`` and the ``kernels.ops.spmm`` dispatcher) replaces the four
+per-format kernel entry points and the three parallel layer-constructor
+families. The old names keep working for one release as thin shims built by
+``deprecated`` below: every call emits exactly ONE ``DeprecationWarning``
+naming the replacement, then delegates to the same implementation the new
+surface uses — outputs are bit-identical by construction (and pinned by the
+parity suite in ``tests/test_api.py``).
+"""
+from __future__ import annotations
+
+import functools
+import warnings
+
+
+def deprecated(name: str, fn, instead: str):
+    """Wrap ``fn`` as the legacy entry point ``name``: warn (exactly once
+    per call, category ``DeprecationWarning``) that ``instead`` replaces
+    it, then delegate unchanged."""
+    @functools.wraps(fn)
+    def shim(*args, **kwargs):
+        warnings.warn(
+            f"{name} is deprecated and will be removed next release; "
+            f"use {instead} instead",
+            DeprecationWarning, stacklevel=2)
+        return fn(*args, **kwargs)
+    shim.__name__ = name.rsplit(".", 1)[-1]
+    shim.__qualname__ = shim.__name__
+    shim.__deprecated__ = instead
+    return shim

@@ -14,10 +14,14 @@
                  (N -> M reshape is just a different device_put).
   * AUTO-RESUME — ``latest_step`` + ``restore`` pick up after preemption;
                  partial writes are ignored (no manifest entry).
-  * PATTERNS   — sparsity-lifecycle layers (``sparse.pattern``) save their
-                 pattern (mask + version) alongside the values; ``restore``
-                 repacks the template to the saved pattern first, so a job
-                 auto-resumes MID-SCHEDULE with the exact pruned shapes.
+  * PATTERNS   — sparsity-lifecycle layers save their pattern (mask +
+                 version) alongside the values; ``restore`` repacks the
+                 template to the saved pattern first, so a job auto-resumes
+                 MID-SCHEDULE with the exact pruned shapes. Layers are
+                 discovered through the ``sparse.pattern`` family registry
+                 (NOT per-family isinstance chains), so every registered
+                 format — including nodes wrapped in ``sparse.Linear`` —
+                 rides along automatically.
 
 Pytrees are flattened to ``path -> array`` with '/'-joined keys via
 ``jax.tree_util`` key-paths, so REGISTERED custom pytree nodes (e.g. an
@@ -85,7 +89,11 @@ def _unflatten_like(template, flat: Dict[str, np.ndarray]):
 # ----------------------------------------------------------------------
 def _pattern_nodes(tree) -> Dict[str, Any]:
     """path -> sparsity-lifecycle node, for every pattern-carrying sparse
-    layer in the tree (empty when the sparse package is absent)."""
+    layer in the tree (empty when the sparse package is absent). Registry
+    lookup, not isinstance chains: any family registered with
+    ``sparse.pattern.register_family`` is found, and ``sparse.Linear``
+    wrappers are traversed like any pytree node (their inner family node
+    is what lands here, under an ``inner/`` path segment)."""
     try:
         from ..sparse import pattern as spat
     except ImportError:                               # pragma: no cover

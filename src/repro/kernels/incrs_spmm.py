@@ -18,7 +18,7 @@ row/col tiles are parallel. This is the same fusion that streaming SpMM
 accelerators (Sextans, SpArch) perform between their decompression front-end
 and their accumulation array.
 
-Two grid orders are provided (``ops.incrs_spmm`` picks by shape):
+Two grid orders are provided (``ops.spmm`` picks by shape):
 
 * ``incrs_spmm``        — grid (row-tile, col-tile, section), accumulator
   per output tile; every col tile re-expands the section stripe.
@@ -124,7 +124,7 @@ def incrs_spmm(idx: jnp.ndarray, val: jnp.ndarray, b: jnp.ndarray, *,
 # (the out block is revisited once per section, non-consecutively, so the
 # running sum must live in scratch): SpArch/Sextans-style output-stationary
 # accumulation. VMEM bound: bm*N*4B panel + bm*section*4B stripe — callers
-# (ops.incrs_spmm variant="auto") fall back to the baseline order when the
+# (ops.spmm variant="auto") fall back to the baseline order when the
 # panel would not fit.
 
 

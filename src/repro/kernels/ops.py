@@ -1,4 +1,13 @@
-"""Public kernel API: format preparation + jit'd wrappers.
+"""Public kernel API: format preparation + the ``spmm`` dispatcher.
+
+``ops.spmm(a, b)`` is THE kernel front door: it dispatches on the type of
+the (sparse) left operand — ``PreparedOperand`` / ``InCRS`` to the fused
+InCRS kernel, ``ShardedPreparedOperand`` (or ``mesh=``) to the row-sharded
+path, ``BSR`` to the block-sparse kernel, ``CRS`` to the round-synchronized
+index-matching kernel, and a plain dense array to the tiled dense matmul.
+The historical per-format entry points (``incrs_spmm``, ``bsr_matmul``,
+``index_match_matmul``, ``incrs_spmm_sharded``) remain as one-release
+deprecation shims over the same implementations.
 
 On CPU (this container) the kernels run in Pallas ``interpret`` mode; on a
 real TPU backend they compile to Mosaic. ``INTERPRET`` is resolved once from
@@ -17,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from .._deprecation import deprecated
 from ..core.bsr import BSR
 from ..core.crs import CRS
 from ..core.incrs import InCRS
@@ -89,7 +99,7 @@ def prep_bsr(bsr: BSR) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     return (jnp.asarray(row_of), jnp.asarray(col_of), jnp.asarray(values))
 
 
-def bsr_matmul(bsr: BSR, b, *, bn: int = 128, interpret: bool | None = None):
+def _spmm_bsr(bsr: BSR, b, *, bn: int = 128, interpret: bool | None = None):
     """C = BSR(A) @ B through the prefix-counter-steered Pallas kernel."""
     interpret = INTERPRET if interpret is None else interpret
     row_of, col_of, values = prep_bsr(bsr)
@@ -174,15 +184,15 @@ def prep_rounds(crs: CRS, rounds: int, rmax: int | None = None,
     return jnp.asarray(idx), jnp.asarray(val)
 
 
-def index_match_matmul(a: CRS, bt: CRS, *, rounds: int = 128,
-                       bm: int = 128, bn: int = 128,
-                       interpret: bool | None = None):
-    """C = A @ Bt.T via the round-synchronized index-matching kernel
-    (paper Alg. 2 on the MXU). Returns C[:M, :N] unpadded."""
+def index_match_prepped(ai, av, bi, bv, *, rounds: int = 128,
+                        bm: int = 128, bn: int = 128,
+                        interpret: bool | None = None):
+    """Round-synchronized index-matching SpMM from PRE-PREPPED per-round
+    (idx, val) operand arrays (``prep_rounds`` output): pads both sides to
+    a common rmax and runs the kernel. Returns the PADDED output — callers
+    trim to the real (M, N). The plan–execute API uses this to prep the
+    fixed sparse operand once and stream right-hand sides."""
     interpret = INTERPRET if interpret is None else interpret
-    assert a.shape[1] == bt.shape[1]
-    ai, av = prep_rounds(a, rounds, pad_rows_to=bm)
-    bi, bv = prep_rounds(bt, rounds, pad_rows_to=bn)
     rmax = max(ai.shape[2], bi.shape[2])
     ai = jnp.pad(ai, ((0, 0), (0, 0), (0, rmax - ai.shape[2])),
                  constant_values=-1)
@@ -190,7 +200,19 @@ def index_match_matmul(a: CRS, bt: CRS, *, rounds: int = 128,
     bi = jnp.pad(bi, ((0, 0), (0, 0), (0, rmax - bi.shape[2])),
                  constant_values=-1)
     bv = jnp.pad(bv, ((0, 0), (0, 0), (0, rmax - bv.shape[2])))
-    out = _index_match_kernel(ai, av, bi, bv, rounds=rounds, bm=bm, bn=bn,
+    return _index_match_kernel(ai, av, bi, bv, rounds=rounds, bm=bm, bn=bn,
+                               interpret=interpret)
+
+
+def _spmm_index_match(a: CRS, bt: CRS, *, rounds: int = 128,
+                      bm: int = 128, bn: int = 128,
+                      interpret: bool | None = None):
+    """C = A @ Bt.T via the round-synchronized index-matching kernel
+    (paper Alg. 2 on the MXU). Returns C[:M, :N] unpadded."""
+    assert a.shape[1] == bt.shape[1]
+    ai, av = prep_rounds(a, rounds, pad_rows_to=bm)
+    bi, bv = prep_rounds(bt, rounds, pad_rows_to=bn)
+    out = index_match_prepped(ai, av, bi, bv, rounds=rounds, bm=bm, bn=bn,
                               interpret=interpret)
     return out[:a.shape[0], :bt.shape[0]]
 
@@ -458,11 +480,11 @@ def prepare_incrs_sharded(incrs: InCRS, mesh: Mesh, *, axis=None,
         incrs.shape, incrs.section, rows_per_shard, mesh, axes)
 
 
-def incrs_spmm_sharded(a: InCRS | ShardedPreparedOperand, b, *,
-                       mesh: Mesh | None = None, axis=None,
-                       pad_rows_to: int = 128, bn: int | None = None,
-                       variant: str = "auto",
-                       interpret: bool | None = None):
+def _spmm_incrs_sharded(a: InCRS | ShardedPreparedOperand, b, *,
+                        mesh: Mesh | None = None, axis=None,
+                        pad_rows_to: int = 128, bn: int | None = None,
+                        variant: str = "auto",
+                        interpret: bool | None = None):
     """C = A @ B with A row-sharded across the mesh.
 
     Each device runs the fused kernel over its own stripe panel under
@@ -478,7 +500,7 @@ def incrs_spmm_sharded(a: InCRS | ShardedPreparedOperand, b, *,
         prep = a
     else:
         if mesh is None:
-            raise ValueError("incrs_spmm_sharded needs mesh= when given a "
+            raise ValueError("row-sharded spmm needs mesh= when given a "
                              "raw InCRS (or pass a ShardedPreparedOperand)")
         prep = prepare_incrs_sharded(a, mesh, axis=axis,
                                      pad_rows_to=pad_rows_to)
@@ -489,8 +511,8 @@ def incrs_spmm_sharded(a: InCRS | ShardedPreparedOperand, b, *,
 
     def local(idx, val, bl):
         p1 = PreparedOperand(idx[0], val[0], (rps, k), section)
-        return incrs_spmm(p1, bl, bn=bn, variant=variant,
-                          interpret=interpret)
+        return _spmm_incrs(p1, bl, bn=bn, variant=variant,
+                           interpret=interpret)
 
     spec0 = P(prep.axes)
     y = shard_map(local, mesh=prep.mesh, in_specs=(spec0, spec0, P()),
@@ -506,9 +528,9 @@ def incrs_spmm_sharded(a: InCRS | ShardedPreparedOperand, b, *,
 _REUSE_PANEL_BYTES = 2 * 1024 * 1024
 
 
-def incrs_spmm(a: InCRS | PreparedOperand, b, *, bm: int = 128,
-               bn: int | None = None, variant: str = "auto",
-               interpret: bool | None = None):
+def _spmm_incrs(a: InCRS | PreparedOperand, b, *, bm: int = 128,
+                bn: int | None = None, variant: str = "auto",
+                interpret: bool | None = None):
     """C = A @ B fused: InCRS section stripes are one-hot-expanded in VMEM
     and contracted on the MXU in the same grid step — the dense (M, K)
     intermediate of ``incrs_to_dense -> dense_mm`` never touches HBM.
@@ -576,6 +598,78 @@ def incrs_to_dense(incrs: InCRS, *, bm: int = 8,
 
 
 # ----------------------------------------------------------------------
+def spmm(a, b, *, mesh: Mesh | None = None, axis=None, rounds: int = 128,
+         bm: int = 128, bn: int | None = None, variant: str = "auto",
+         pad_rows_to: int = 128, interpret: bool | None = None):
+    """C = A @ B — THE kernel front door, dispatched on the format of A.
+
+    One call covers every kernel family (the paper's claim — one
+    representation and one locate–compute architecture for every access
+    order — stated as API):
+
+      * ``PreparedOperand`` / ``InCRS``      -> fused InCRS SpMM
+        (``variant`` picks the grid order, "auto" by shape);
+      * ``ShardedPreparedOperand`` (or a raw ``InCRS`` with ``mesh=``)
+        -> row-sharded fused SpMM under ``shard_map``;
+      * ``BSR``                              -> block-sparse kernel
+        steered by prefix counters;
+      * ``CRS`` (B must be the CRS of B^T)   -> round-synchronized
+        index-matching kernel (paper Alg. 2), window = ``rounds``;
+      * a plain dense 2-D array              -> tiled dense matmul.
+
+    Returns C[:M, :N] unpadded, f32 accumulation everywhere. The
+    spec-level face of the same dispatch is ``sparse.api.plan`` /
+    ``sparse.Linear``, which add pattern resolution, packing, and the
+    sparsity lifecycle on top.
+    """
+    if isinstance(a, ShardedPreparedOperand):
+        return _spmm_incrs_sharded(a, b, bn=bn, variant=variant,
+                                   interpret=interpret)
+    if isinstance(a, (PreparedOperand, InCRS)):
+        if mesh is not None:
+            if not isinstance(a, InCRS):
+                raise ValueError(
+                    "cannot re-shard an already-built single-device "
+                    "PreparedOperand — pass the raw InCRS with mesh=, or "
+                    "a ShardedPreparedOperand")
+            return _spmm_incrs_sharded(a, b, mesh=mesh, axis=axis,
+                                       pad_rows_to=pad_rows_to, bn=bn,
+                                       variant=variant, interpret=interpret)
+        return _spmm_incrs(a, b, bm=bm, bn=bn, variant=variant,
+                           interpret=interpret)
+    if isinstance(a, BSR):
+        return _spmm_bsr(a, b, bn=128 if bn is None else bn,
+                         interpret=interpret)
+    if isinstance(a, CRS):
+        if not isinstance(b, CRS):
+            raise TypeError(
+                "spmm with a CRS left operand runs the index-matching "
+                "kernel C = A @ B^T and needs B^T as a CRS too; densify "
+                "one side or use the InCRS path for sparse-times-dense")
+        return _spmm_index_match(a, b, rounds=rounds, bm=bm,
+                                 bn=128 if bn is None else bn,
+                                 interpret=interpret)
+    if hasattr(a, "ndim") and np.ndim(a) == 2:
+        return dense_mm(jnp.asarray(a), b, interpret=interpret)
+    raise TypeError(f"spmm does not know the operand format "
+                    f"{type(a).__name__}; expected PreparedOperand, "
+                    f"ShardedPreparedOperand, InCRS, BSR, CRS or a dense "
+                    f"2-D array")
+
+
+# One-release deprecation shims over the per-format entry points — same
+# implementations as the dispatcher, so outputs are bit-identical (pinned
+# by tests/test_api.py).
+incrs_spmm = deprecated("ops.incrs_spmm", _spmm_incrs, "ops.spmm(a, b)")
+incrs_spmm_sharded = deprecated("ops.incrs_spmm_sharded",
+                                _spmm_incrs_sharded,
+                                "ops.spmm(a, b, mesh=...)")
+bsr_matmul = deprecated("ops.bsr_matmul", _spmm_bsr, "ops.spmm(bsr, b)")
+index_match_matmul = deprecated("ops.index_match_matmul", _spmm_index_match,
+                                "ops.spmm(a_crs, bt_crs, rounds=...)")
+
+
+# ----------------------------------------------------------------------
 def flash_mha(q, k, v, *, window=None, soft_cap=None, bq: int = 128,
               bk: int = 128, interpret: bool | None = None):
     """Grouped-query flash attention through the Pallas kernel.
@@ -602,12 +696,14 @@ def flash_mha(q, k, v, *, window=None, soft_cap=None, bq: int = 128,
 
 
 __all__ = [
-    "INTERPRET", "dense_mm", "bsr_kernel_meta", "prep_bsr", "bsr_matmul",
+    "INTERPRET", "spmm", "dense_mm", "bsr_kernel_meta", "prep_bsr",
     "bsr_matmul_arrays",
-    "prep_rounds", "index_match_matmul", "prep_sections", "PreparedOperand",
-    "prepare_incrs", "invalidate_prepared", "incrs_spmm", "incrs_to_dense",
+    "prep_rounds", "index_match_prepped", "prep_sections", "PreparedOperand",
+    "prepare_incrs", "invalidate_prepared", "incrs_to_dense",
     "prepare_versioned", "invalidate_pattern",
-    "ShardedPreparedOperand", "prepare_incrs_sharded", "incrs_spmm_sharded",
+    "ShardedPreparedOperand", "prepare_incrs_sharded",
     "shard_axes",
+    # one-release deprecation shims (use ops.spmm)
+    "incrs_spmm", "incrs_spmm_sharded", "bsr_matmul", "index_match_matmul",
     "flash_mha", "ref",
 ]

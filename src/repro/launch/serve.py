@@ -4,12 +4,15 @@
       --n-requests 8 --max-new 16
 
 SpMM mode serves the paper's own workload (one fixed sparse operand, a
-queue of dense RHSs) through ``serve.SpMMEngine``; ``--spmm-shards N``
-row-shards the operand across the first N local devices (use
-``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to fake a mesh on
-CPU):
+queue of dense RHSs) through ``serve.SpMMEngine`` behind the plan–execute
+API: ``--format {incrs,bsr,dense}`` picks the kernel family purely by
+``SparseSpec`` — the engine code path is identical — and
+``--spmm-shards N`` row-shards the InCRS operand across the first N local
+devices (use ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to
+fake a mesh on CPU):
 
   python -m repro.launch.serve --spmm --spmm-shards 8 --n-requests 8
+  python -m repro.launch.serve --spmm --format bsr --spmm-swap
 """
 from __future__ import annotations
 
@@ -18,20 +21,28 @@ import time
 
 
 def _main_spmm(args):
-    """The paper's SpMM workload through a (possibly row-sharded) engine."""
+    """The paper's SpMM workload through the plan–execute engine: ONE code
+    path for every ``--format`` — the spec decides the kernel family, the
+    mesh on the spec decides the sharding."""
+    import dataclasses
+
     import jax
     import numpy as np
 
-    from ..core.incrs import InCRS
     from ..data.datasets import DatasetSpec, synthesize
     from ..serve.engine import SpMMEngine, SpMMRequest
+    from ..sparse import api
+    from ..sparse.pattern import magnitude_mask
 
     spec = DatasetSpec("serve", args.spmm_rows, args.spmm_cols,
                        args.spmm_density)
     a = synthesize(spec, seed=args.seed)
-    inc = InCRS.from_crs(a)
     mesh = None
     if args.spmm_shards > 1:
+        if args.format != "incrs":
+            raise SystemExit(f"--spmm-shards is the row-sharded InCRS "
+                             f"data path; --format {args.format} does "
+                             f"not shard")
         devs = jax.devices()
         if len(devs) < args.spmm_shards:
             raise SystemExit(
@@ -40,7 +51,10 @@ def _main_spmm(args):
                 f"--xla_force_host_platform_device_count={args.spmm_shards})")
         mesh = jax.sharding.Mesh(
             np.asarray(devs[:args.spmm_shards]), ("data",))
-    eng = SpMMEngine(inc, mesh=mesh)
+    sspec = api.SparseSpec(args.format, mesh=mesh,
+                           block=(args.spmm_block
+                                  if args.format == "bsr" else None))
+    eng = SpMMEngine(api.plan_for_operand(a, sspec))
     rng = np.random.default_rng(args.seed)
     reqs = [SpMMRequest(i, rng.normal(
         size=(spec.n, args.spmm_batch_cols)).astype(np.float32))
@@ -52,30 +66,30 @@ def _main_spmm(args):
     dt = time.time() - t0
     where = f"{args.spmm_shards}-way row-sharded" if mesh else "single-device"
     print(f"spmm A={spec.m}x{spec.n} d={spec.density} nnz={a.nnz} "
-          f"({where}): served {len(done)} requests / "
+          f"format={args.format} ({where}): served {len(done)} requests / "
           f"{eng.stats['cols']} cols in {dt:.2f}s, "
           f"waves={eng.stats['waves']}")
     ref = a.to_dense()
     err = max(float(np.abs(r.out - ref @ r.b).max()) for r in done)
     print(f"  max |err| vs dense oracle: {err:.2e}")
     if args.spmm_swap:
-        # Live pattern swap: magnitude-re-prune the operand to half its
-        # density and deploy it into the RUNNING engine between waves.
-        from ..core.crs import CRS
-        from ..sparse.pattern import SparsityPattern, magnitude_mask
-        dense = ref
-        pat = SparsityPattern(magnitude_mask(dense, spec.density / 2))
-        inc2 = InCRS.from_crs(CRS.from_mask(dense, pat.mask))
-        eng.swap_pattern(inc2, mesh=mesh)
+        # Live pattern swap = plan rebuild: magnitude-re-prune the operand
+        # to half its density under the SAME spec and deploy the rebuilt
+        # plan into the RUNNING engine between waves.
+        mask_a = magnitude_mask(ref, spec.density / 2)
+        swap_spec = dataclasses.replace(
+            sspec, mask=np.ascontiguousarray(mask_a.T))
+        bound2 = api.plan_for_operand(np.where(mask_a, ref, 0.0), swap_spec)
+        eng.swap_pattern(bound2)
         reqs2 = [SpMMRequest(100 + i, rng.normal(
             size=(spec.n, args.spmm_batch_cols)).astype(np.float32))
             for i in range(args.n_requests)]
         for r in reqs2:
             eng.submit(r)
         done2 = [r for r in eng.run() if r.rid >= 100]
-        ref2 = np.where(pat.mask, dense, 0.0)
+        ref2 = np.where(mask_a, ref, 0.0)
         err2 = max(float(np.abs(r.out - ref2 @ r.b).max()) for r in done2)
-        print(f"  swapped to d={pat.density:.3f} "
+        print(f"  swapped to d={mask_a.mean():.3f} "
               f"(swaps={eng.stats['pattern_swaps']}): served "
               f"{len(done2)} more, max |err|: {err2:.2e}")
     return len(done)
@@ -93,6 +107,13 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--spmm", action="store_true",
                     help="serve the paper's SpMM workload instead of an LM")
+    ap.add_argument("--format", default="incrs",
+                    choices=("incrs", "bsr", "dense"),
+                    help="kernel family for the served operand (a "
+                         "SparseSpec field — one engine code path for "
+                         "all of them)")
+    ap.add_argument("--spmm-block", type=int, default=64,
+                    help="BSR tile side for --format bsr")
     ap.add_argument("--spmm-shards", type=int, default=1,
                     help="row-shard the sparse operand across this many "
                          "devices (1 = single-device)")

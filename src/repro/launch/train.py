@@ -34,6 +34,11 @@ def main(argv=None):
                     help="magnitude-re-prune every sparse-linear layer on "
                          "the cubic schedule down to this density (no-op "
                          "for configs without sparse layers)")
+    ap.add_argument("--prune-nm", default=None, metavar="N:M",
+                    help="structured N:M re-pruning (e.g. 2:4): exactly N "
+                         "survivors per M-group along d_in; the schedule "
+                         "gates WHEN, the density is fixed at N/M "
+                         "(mutually exclusive with --prune-final-density)")
     ap.add_argument("--prune-every", type=int, default=10,
                     help="re-prune cadence in steps")
     ap.add_argument("--prune-warmup-frac", type=float, default=0.1)
@@ -82,16 +87,34 @@ def main(argv=None):
                       fallback=lambda n: src.batch_at(10**9 + n))
 
     prune_cb = None
-    if args.prune_final_density is not None:
+    if args.prune_final_density is not None and args.prune_nm is not None:
+        raise SystemExit("flag conflict: pass --prune-final-density OR "
+                         "--prune-nm, not both — an N:M policy fixes the "
+                         "final density at N/M")
+    if args.prune_final_density is not None or args.prune_nm is not None:
+        prune_flag = ("--prune-nm" if args.prune_nm is not None
+                      else "--prune-final-density")
         if args.int8_opt:
             # fail NOW, not at the first due step after the dense warmup:
             # quantized moments cannot ride a slot remap.
-            raise SystemExit("--prune-final-density requires plain f32 "
-                             "moments; drop --int8-opt")
-        from ..sparse.pattern import PruneSchedule
+            raise SystemExit(
+                f"flag conflict: {prune_flag} cannot be combined with "
+                f"--int8-opt. A pattern repack remaps value slots, and "
+                f"int8-quantized AdamW moments cannot follow (their "
+                f"per-block quantization scales do not survive the "
+                f"remap). Drop --int8-opt so the optimizer runs with "
+                f"plain f32 moments (AdamWConfig(quantize=False)) — the "
+                f"sparsity lifecycle requires it.")
+        from ..sparse.pattern import PruneSchedule, parse_nm
+        if args.prune_nm is not None:
+            n, m = parse_nm(args.prune_nm)
+            final_density, policy = n / m, args.prune_nm
+        else:
+            final_density, policy = args.prune_final_density, "magnitude"
         prune_cb = trainer.make_prune_callback(PruneSchedule(
-            args.prune_final_density, args.steps,
-            warmup_frac=args.prune_warmup_frac, every=args.prune_every))
+            final_density, args.steps,
+            warmup_frac=args.prune_warmup_frac, every=args.prune_every),
+            policy=policy)
 
     t0 = time.time()
     tokens_done = 0

@@ -172,13 +172,15 @@ class SpMMEngine:
                  variant: str = "auto", interpret: Optional[bool] = None,
                  mesh=None, shard_axis=None):
         """``a``: an ``InCRS`` (prepped here, once, via the memo cache), an
-        already-built ``ops.PreparedOperand``, or — for multi-device
-        serving — an ``ops.ShardedPreparedOperand`` (e.g. the ``.prep`` of
-        a trained ``sparse.ShardedInCRSLinearParams``). Passing ``mesh``
+        already-built ``ops.PreparedOperand`` /
+        ``ops.ShardedPreparedOperand``, a ``sparse.Linear`` (its packed
+        values serve zero-copy; any format), or a bound plan from the
+        spec surface (``sparse.plan_for_operand(a, spec)`` /
+        ``linear.bound()`` / ``plan.bind(values)``). Passing ``mesh``
         (with optional ``shard_axis``) row-shards a raw InCRS across that
         mesh at construction. ``variant`` selects the kernel grid order
-        ("expand" | "reuse" | "auto" — see ``ops.incrs_spmm``); "auto"
-        switches to the stripe-reuse kernel when a wave is wide enough that
+        ("expand" | "reuse" | "auto" — see ``ops.spmm``); "auto" switches
+        to the stripe-reuse kernel when a wave is wide enough that
         per-col-tile re-expansion would dominate."""
         from ..kernels import ops
         if variant not in ("auto", "expand", "reuse"):
@@ -199,9 +201,27 @@ class SpMMEngine:
         touching engine state — every validation error leaves the engine
         exactly as it was (swap_pattern relies on this)."""
         ops = self._ops
+        from ..sparse import api
+        if isinstance(a, api.SparseSpec):
+            raise ValueError(
+                "a SparseSpec alone carries no values to serve — build an "
+                "operand with sparse.plan_for_operand(a, spec) or pass a "
+                "sparse.Linear")
+        if isinstance(a, api.MatmulPlan):
+            raise ValueError(
+                "bind values to the plan first: plan.bind(values) (or "
+                "pass a sparse.Linear / its .bound())")
         pattern = getattr(a, "pattern", None)       # lifecycle layer params
         if pattern is not None and hasattr(a, "prep"):
             a = a.prep                              # device-ready view
+        if isinstance(a, api.Linear):
+            a = a.bound()       # non-InCRS formats serve through the plan
+        if isinstance(a, api.BoundPlan):
+            if mesh is not None:
+                raise ValueError(
+                    "a bound plan is already committed to its layout — "
+                    "rebuild it with a mesh on the spec instead of mesh=")
+            return a, a, getattr(a.pattern, "version", None)
         if isinstance(a, ops.ShardedPreparedOperand):
             if mesh is not None and mesh is not a.mesh:
                 raise ValueError(
@@ -221,28 +241,38 @@ class SpMMEngine:
             prep = ops.prepare_incrs(a)
         return a, prep, getattr(pattern, "version", None)
 
+    def _is_sharded(self, prep):
+        from ..sparse import api
+        if isinstance(prep, api.BoundPlan):
+            return getattr(prep.plan.spec, "mesh", None) is not None
+        return isinstance(prep, self._ops.ShardedPreparedOperand)
+
     def _set_operand(self, a, mesh, shard_axis):
+        from ..sparse import api
         self.a, self.prep, self.pattern_version = \
             self._build_operand(a, mesh, shard_axis)
-        self.sharded = isinstance(self.prep,
-                                  self._ops.ShardedPreparedOperand)
+        self._bound = self.prep if isinstance(self.prep, api.BoundPlan) \
+            else None
+        self.sharded = self._is_sharded(self.prep)
 
     # ------------------------------------------------------------------
     def swap_pattern(self, a, *, mesh=None, shard_axis=None) -> None:
         """Hot-swap the serving operand between waves — deploy a freshly
         re-pruned (or re-trained) pattern into the RUNNING engine without
-        a restart.
+        a restart. In plan–execute terms a swap IS a plan rebuild: the new
+        operand arrives with its own static metadata, and the engine
+        atomically starts executing against it.
 
-        ``a`` accepts everything the constructor does, plus any
-        pattern-carrying sparse layer params (``InCRSLinearParams`` /
-        ``ShardedInCRSLinearParams`` — their ``.prep`` view is used and
-        ``pattern_version`` is recorded). The operand's global shape must
-        match the current one: queued requests were validated against it,
-        and a re-pruned layer keeps its logical shape by construction.
+        ``a`` accepts everything the constructor does — including a
+        ``sparse.Linear`` of any format or a bound plan (their pattern
+        version is recorded). The operand's global shape must match the
+        current one: queued requests were validated against it, and a
+        re-pruned layer keeps its logical shape by construction.
         Single-device and sharded operands can replace each other freely —
         waves after the swap simply take the other kernel path. A rejected
         swap (any ValueError) leaves the engine serving the OLD operand.
         """
+        from ..sparse import api
         new_a, new_prep, new_version = self._build_operand(a, mesh,
                                                            shard_axis)
         if tuple(new_prep.shape) != tuple(self.prep.shape):
@@ -252,8 +282,9 @@ class SpMMEngine:
                 f"serves one logical A; start a new engine for a new shape")
         self.a, self.prep, self.pattern_version = new_a, new_prep, \
             new_version
-        self.sharded = isinstance(new_prep,
-                                  self._ops.ShardedPreparedOperand)
+        self._bound = new_prep if isinstance(new_prep, api.BoundPlan) \
+            else None
+        self.sharded = self._is_sharded(new_prep)
         self.stats["pattern_swaps"] += 1
 
     def submit(self, req: SpMMRequest):
@@ -293,13 +324,12 @@ class SpMMEngine:
                 f"request dtype but f32 precision", stacklevel=3)
         b = jnp.asarray(np.concatenate(
             [np.asarray(r.b, dtype=wave_dt) for r in wave], axis=1))
-        if self.sharded:
-            c = self._ops.incrs_spmm_sharded(self.prep, b,
-                                             variant=self.variant,
-                                             interpret=self.interpret)
+        if self._bound is not None:
+            c = self._bound(b, variant=self.variant,
+                            interpret=self.interpret)
         else:
-            c = self._ops.incrs_spmm(self.prep, b, variant=self.variant,
-                                     interpret=self.interpret)
+            c = self._ops.spmm(self.prep, b, variant=self.variant,
+                               interpret=self.interpret)
         c = np.asarray(c)
         off = 0
         for r in wave:

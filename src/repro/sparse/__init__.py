@@ -1,16 +1,31 @@
-from .linear import (SparseLinearParams, sparse_linear_init,  # noqa: F401
-                     sparse_linear_from_mask, sparse_linear_apply,
+"""Sparse layers behind ONE front door.
+
+New code uses the plan–execute surface: ``SparseSpec`` (what the operand
+looks like), ``plan``/``MatmulPlan`` (prep once, execute many),
+``Linear``/``apply`` (one layer constructor / one apply for every format),
+and the sparsity lifecycle (``SparsityPattern`` & co).
+
+The historical per-family names (``sparse_linear_*``, ``incrs_linear_*``,
+``incrs_linear_sharded_*``) remain importable for one release as
+deprecation shims that delegate to the same implementations.
+"""
+from .api import (FORMATS, SparseSpec, MatmulPlan, BoundPlan,  # noqa: F401
+                  Linear, DenseLinearParams, DenseLinearMeta,
+                  plan, plan_for_operand, apply, stack_init)
+from .linear import (SparseLinearParams, SparseLinearMeta,  # noqa: F401
                      InCRSLinearParams, InCRSLinearMeta,
+                     ShardedInCRSLinearParams, ShardedInCRSLinearMeta,
+                     incrs_to_dense_weight, incrs_sharded_to_dense_weight,
+                     # one-release deprecation shims (use Linear/apply):
+                     sparse_linear_init, sparse_linear_from_mask,
+                     sparse_linear_apply,
                      incrs_linear_init, incrs_linear_from_dense,
                      incrs_linear_stack_init, incrs_linear_apply,
-                     incrs_to_dense_weight,
-                     ShardedInCRSLinearParams, ShardedInCRSLinearMeta,
                      incrs_linear_from_dense_sharded,
                      incrs_linear_sharded_init, incrs_linear_shard,
-                     incrs_linear_sharded_apply,
-                     incrs_sharded_to_dense_weight)
+                     incrs_linear_sharded_apply)
 from .prune import prune_to_bsr, sparsity_schedule  # noqa: F401
 from .pattern import (SparsityPattern, PruneSchedule,  # noqa: F401
-                      magnitude_mask, expand_block_mask,
-                      is_lifecycle_node, get_pattern, node_to_dense,
-                      repack, magnitude_repack, repack_onto)
+                      magnitude_mask, nm_mask, parse_nm, expand_block_mask,
+                      is_lifecycle_node, is_stacked_node, get_pattern,
+                      node_to_dense, repack, magnitude_repack, repack_onto)

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from .._deprecation import deprecated
 from ..core.bsr import BSR, magnitude_block_mask
 from ..core.crs import CRS
 from ..kernels import ops
@@ -114,20 +115,20 @@ def real_blocks(meta: SparseLinearMeta) -> Tuple[np.ndarray, np.ndarray]:
             np.asarray(meta.col_of, np.int32)[vpos])
 
 
-def sparse_linear_init(key, d_in: int, d_out: int, block: int,
-                       density: float, scale: float = 0.02,
-                       dtype=jnp.float32) -> SparseLinearParams:
+def _bsr_init(key, d_in: int, d_out: int, block: int,
+              density: float, scale: float = 0.02,
+              dtype=jnp.float32) -> SparseLinearParams:
     """Initialize a dense weight, magnitude-prune to block density, pack."""
     w = np.asarray(jax.random.normal(key, (d_in, d_out))) * scale
     wt = np.ascontiguousarray(w.T)                     # (out, in)
     mask = magnitude_block_mask(wt, (block, block), density)
-    return sparse_linear_from_mask(w, mask, block, dtype=dtype)
+    return _bsr_from_mask(w, mask, block, dtype=dtype)
 
 
-def sparse_linear_from_mask(w: np.ndarray, mask: np.ndarray, block: int,
-                            dtype=jnp.float32, *,
-                            _pattern: "SparsityPattern | None" = None
-                            ) -> SparseLinearParams:
+def _bsr_from_mask(w: np.ndarray, mask: np.ndarray, block: int,
+                   dtype=jnp.float32, *,
+                   _pattern: "SparsityPattern | None" = None
+                   ) -> SparseLinearParams:
     """Pack a dense W (d_in, d_out) under an explicit block-occupancy mask
     of W^T (out-major, shape (d_out//block, d_in//block)).
 
@@ -230,7 +231,7 @@ def _sparse_mm_bwd(meta, res, dy):
 _sparse_mm.defvjp(_sparse_mm_fwd, _sparse_mm_bwd)
 
 
-def sparse_linear_apply(p: SparseLinearParams, x: jnp.ndarray) -> jnp.ndarray:
+def _bsr_apply(p: SparseLinearParams, x: jnp.ndarray) -> jnp.ndarray:
     """x: (..., d_in) -> (..., d_out); differentiable wrt values and x."""
     lead = x.shape[:-1]
     x2 = x.reshape(-1, p.meta.d_in)
@@ -398,12 +399,12 @@ def _pack_incrs(w: np.ndarray, pat: SparsityPattern, section: int,
     return InCRSLinearParams(fwd_val, meta)
 
 
-def incrs_linear_from_dense(w: np.ndarray, density: float | None = None,
-                            section: int | None = None,
-                            block: int | None = None, *,
-                            mask: np.ndarray | None = None,
-                            _pattern: SparsityPattern | None = None
-                            ) -> InCRSLinearParams:
+def _incrs_from_dense(w: np.ndarray, density: float | None = None,
+                      section: int | None = None,
+                      block: int | None = None, *,
+                      mask: np.ndarray | None = None,
+                      _pattern: SparsityPattern | None = None
+                      ) -> InCRSLinearParams:
     """Pack a dense W (d_in, d_out) — optionally magnitude-pruned to
     element ``density``, or under an explicit element ``mask`` of W whose
     slots stay live even at value 0.0 — into the trainable fused-kernel
@@ -417,21 +418,21 @@ def incrs_linear_from_dense(w: np.ndarray, density: float | None = None,
                        section, block)
 
 
-def incrs_linear_init(key, d_in: int, d_out: int, density: float,
-                      scale: float = 0.02, **kw) -> InCRSLinearParams:
+def _incrs_init(key, d_in: int, d_out: int, density: float,
+                scale: float = 0.02, **kw) -> InCRSLinearParams:
     w = np.asarray(jax.random.normal(key, (d_in, d_out))) * scale
-    return incrs_linear_from_dense(w, density, **kw)
+    return _incrs_from_dense(w, density, **kw)
 
 
-def incrs_linear_stack_init(key, n_stages: int, d_in: int, d_out: int,
-                            density: float, scale: float = 0.02,
-                            **kw) -> InCRSLinearParams:
+def _incrs_stack_init(key, n_stages: int, d_in: int, d_out: int,
+                      density: float, scale: float = 0.02,
+                      **kw) -> InCRSLinearParams:
     """Shared-pattern parameter stack for pipeline-parallel stages: ONE
     InCRS sparsity pattern (so a single static meta serves every stage and
     the values leaf stacks along the stage axis, as ``train.pipeline``
     requires), independent per-stage values on that pattern."""
     k0, kv = jax.random.split(key)
-    p0 = incrs_linear_init(k0, d_in, d_out, density, scale, **kw)
+    p0 = _incrs_init(k0, d_in, d_out, density, scale, **kw)
     live = np.asarray(p0.meta.fwd_idx) >= 0
     noise = np.asarray(jax.random.normal(
         kv, (n_stages - 1,) + p0.values.shape)) * scale
@@ -445,7 +446,7 @@ def _incrs_mm(values, x, meta: InCRSLinearMeta):
     """y[T, d_out] = x[T, d_in] @ W, with W^T stored as section stripes."""
     prep = ops.PreparedOperand(meta.fwd_idx, values,
                                (meta.d_out, meta.d_in), meta.section)
-    return ops.incrs_spmm(prep, x.T).T
+    return ops.spmm(prep, x.T).T
 
 
 def _incrs_mm_fwd(values, x, meta):
@@ -493,7 +494,7 @@ def _incrs_mm_bwd(meta, res, dy):
     tvals = flat[meta.t_gather].reshape(meta.bwd_idx.shape)
     tprep = ops.PreparedOperand(meta.bwd_idx, tvals,
                                 (meta.d_in, meta.d_out), meta.section)
-    dx = ops.incrs_spmm(tprep, dy.T).T
+    dx = ops.spmm(tprep, dy.T).T
     dvals = _stripe_dw(meta.fwd_idx, meta.section, x, dy)
     return dvals.astype(values.dtype), dx.astype(x.dtype)
 
@@ -501,7 +502,7 @@ def _incrs_mm_bwd(meta, res, dy):
 _incrs_mm.defvjp(_incrs_mm_fwd, _incrs_mm_bwd)
 
 
-def incrs_linear_apply(p: InCRSLinearParams, x: jnp.ndarray) -> jnp.ndarray:
+def _incrs_apply(p: InCRSLinearParams, x: jnp.ndarray) -> jnp.ndarray:
     """x: (..., d_in) -> (..., d_out) through the fused InCRS SpMM;
     differentiable wrt ``p.values`` and ``x``."""
     lead = x.shape[:-1]
@@ -628,7 +629,7 @@ def _resolve_shard_axes(mesh: Mesh | None, axis):
     return mesh, axis
 
 
-def incrs_linear_from_dense_sharded(
+def _incrs_sharded_from_dense(
         w: np.ndarray, density: float | None = None, *,
         mask: np.ndarray | None = None, mesh: Mesh | None = None,
         axis=None, section: int | None = None,
@@ -701,15 +702,15 @@ def incrs_linear_from_dense_sharded(
     return ShardedInCRSLinearParams(put(fvs), meta)
 
 
-def incrs_linear_sharded_init(key, d_in: int, d_out: int, density: float,
-                              scale: float = 0.02,
-                              **kw) -> ShardedInCRSLinearParams:
+def _incrs_sharded_init(key, d_in: int, d_out: int, density: float,
+                        scale: float = 0.02,
+                        **kw) -> ShardedInCRSLinearParams:
     w = np.asarray(jax.random.normal(key, (d_in, d_out))) * scale
-    return incrs_linear_from_dense_sharded(w, density, **kw)
+    return _incrs_sharded_from_dense(w, density, **kw)
 
 
-def incrs_linear_shard(p: InCRSLinearParams, *, mesh: Mesh | None = None,
-                       axis=None) -> ShardedInCRSLinearParams:
+def _incrs_shard(p: InCRSLinearParams, *, mesh: Mesh | None = None,
+                 axis=None) -> ShardedInCRSLinearParams:
     """Re-shard a trained single-device ``InCRSLinearParams`` across a mesh
     (values and pattern preserved — e.g. train on one device, deploy the
     SAME weights into multi-device serving). The layer's
@@ -717,7 +718,7 @@ def incrs_linear_shard(p: InCRSLinearParams, *, mesh: Mesh | None = None,
     version — the sharded pack registers as a SECOND packed form of the
     same snapshot), so a trained value that happens to be exactly 0.0
     stays a trainable slot instead of silently leaving the pattern."""
-    return incrs_linear_from_dense_sharded(
+    return _incrs_sharded_from_dense(
         incrs_to_dense_weight(p), mesh=mesh, axis=axis,
         section=p.meta.section, block=p.meta.block, _pattern=p.pattern)
 
@@ -732,7 +733,7 @@ def _incrs_mm_sharded(values, x, meta: ShardedInCRSLinearMeta):
         prep1 = ops.PreparedOperand(fidx[0], v[0],
                                     (meta.shard_width, meta.d_in),
                                     meta.section)
-        return ops.incrs_spmm(prep1, xl.T).T          # (T, shard_width)
+        return ops.spmm(prep1, xl.T).T                # (T, shard_width)
 
     return shard_map(local, mesh=meta.mesh,
                      in_specs=(P(ax), P(ax), P()),
@@ -758,7 +759,7 @@ def _incrs_mm_sharded_bwd(meta, res, dy):
         tprep = ops.PreparedOperand(bidx1, tvals,
                                     (meta.d_in, meta.shard_width),
                                     meta.section)
-        dx = jax.lax.psum(ops.incrs_spmm(tprep, dyl.T).T, ax)
+        dx = jax.lax.psum(ops.spmm(tprep, dyl.T).T, ax)
         # dW: shard-local — this shard's weight rows only ever meet its
         # own dy panel; no collective.
         dvals = _stripe_dw(fidx1, meta.section, xl, dyl)
@@ -775,8 +776,8 @@ def _incrs_mm_sharded_bwd(meta, res, dy):
 _incrs_mm_sharded.defvjp(_incrs_mm_sharded_fwd, _incrs_mm_sharded_bwd)
 
 
-def incrs_linear_sharded_apply(p: ShardedInCRSLinearParams,
-                               x: jnp.ndarray) -> jnp.ndarray:
+def _incrs_sharded_apply(p: ShardedInCRSLinearParams,
+                         x: jnp.ndarray) -> jnp.ndarray:
     """x: (..., d_in) -> (..., d_out) through per-shard fused SpMMs;
     differentiable wrt ``p.values`` and ``x``."""
     lead = x.shape[:-1]
@@ -860,11 +861,12 @@ def _sharded_pack_values(meta: ShardedInCRSLinearMeta,
 register_family(SparseLinearParams, FamilyOps(
     "bsr",
     to_dense=lambda n: np.asarray(to_dense(n), np.float32),
-    pack=lambda w, pat, like: sparse_linear_from_mask(
+    pack=lambda w, pat, like: _bsr_from_mask(
         w, pat.block_mask(like.meta.block), like.meta.block,
         dtype=like.values.dtype, _pattern=pat),
     pack_values=_bsr_pack_values,
-    default_mask=lambda w, d, n: magnitude_mask(w, d, block=n.meta.block)))
+    default_mask=lambda w, d, n: magnitude_mask(w, d, block=n.meta.block),
+    granularity="block"))
 
 register_family(InCRSLinearParams, FamilyOps(
     "incrs",
@@ -877,8 +879,44 @@ register_family(InCRSLinearParams, FamilyOps(
 register_family(ShardedInCRSLinearParams, FamilyOps(
     "incrs_sharded",
     to_dense=incrs_sharded_to_dense_weight,
-    pack=lambda w, pat, like: incrs_linear_from_dense_sharded(
+    pack=lambda w, pat, like: _incrs_sharded_from_dense(
         w, mesh=like.meta.mesh, axis=like.meta.axes,
         section=like.meta.section, block=like.meta.block, _pattern=pat),
     pack_values=_sharded_pack_values,
     default_mask=lambda w, d, n: magnitude_mask(w, d)))
+
+
+# ----------------------------------------------------------------------
+# One-release deprecation shims: the historical per-family constructor and
+# apply names delegate to the implementations above (bit-identical outputs
+# — the parity suite in tests/test_api.py pins this). New code goes through
+# ``sparse.SparseSpec`` / ``sparse.Linear`` / ``sparse.apply``.
+sparse_linear_init = deprecated(
+    "sparse_linear_init", _bsr_init,
+    "sparse.Linear.init(key, d_in, d_out, SparseSpec('bsr', block=...))")
+sparse_linear_from_mask = deprecated(
+    "sparse_linear_from_mask", _bsr_from_mask,
+    "sparse.Linear.from_dense(w, SparseSpec('bsr', mask=..., block=...))")
+sparse_linear_apply = deprecated(
+    "sparse_linear_apply", _bsr_apply, "sparse.apply(p, x)")
+incrs_linear_from_dense = deprecated(
+    "incrs_linear_from_dense", _incrs_from_dense,
+    "sparse.Linear.from_dense(w, SparseSpec('incrs', ...))")
+incrs_linear_init = deprecated(
+    "incrs_linear_init", _incrs_init,
+    "sparse.Linear.init(key, d_in, d_out, SparseSpec('incrs', ...))")
+incrs_linear_stack_init = deprecated(
+    "incrs_linear_stack_init", _incrs_stack_init,
+    "sparse.stack_init(key, n_stages, d_in, d_out, spec)")
+incrs_linear_apply = deprecated(
+    "incrs_linear_apply", _incrs_apply, "sparse.apply(p, x)")
+incrs_linear_from_dense_sharded = deprecated(
+    "incrs_linear_from_dense_sharded", _incrs_sharded_from_dense,
+    "sparse.Linear.from_dense(w, SparseSpec('incrs', mesh=...))")
+incrs_linear_sharded_init = deprecated(
+    "incrs_linear_sharded_init", _incrs_sharded_init,
+    "sparse.Linear.init(key, d_in, d_out, SparseSpec('incrs', mesh=...))")
+incrs_linear_shard = deprecated(
+    "incrs_linear_shard", _incrs_shard, "sparse.Linear.shard(mesh=...)")
+incrs_linear_sharded_apply = deprecated(
+    "incrs_linear_sharded_apply", _incrs_sharded_apply, "sparse.apply(p, x)")

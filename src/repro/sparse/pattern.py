@@ -123,8 +123,45 @@ def expand_block_mask(block_mask: np.ndarray, block: int) -> np.ndarray:
 
 
 # ----------------------------------------------------------------------
+def parse_nm(policy: str) -> tuple:
+    """``"n:m"`` -> ``(n, m)`` with 0 < n <= m; anything else raises."""
+    try:
+        n, m = (int(x) for x in str(policy).split(":"))
+    except ValueError:
+        raise ValueError(
+            f"structured selection policy must look like 'n:m' (e.g. "
+            f"'2:4'), got {policy!r}") from None
+    if not 0 < n <= m:
+        raise ValueError(f"n:m policy needs 0 < n <= m, got {n}:{m}")
+    return n, m
+
+
+def nm_mask(w: np.ndarray, n: int, m: int) -> np.ndarray:
+    """Structured N:M mask of W (d_in, d_out): within every group of ``m``
+    consecutive elements along d_in (the contraction dimension of
+    ``y = x @ W`` — the axis N:M hardware groups), keep EXACTLY the ``n``
+    largest by magnitude. Every group keeps exactly ``n`` survivors — ties
+    (including all-zero groups) break by position, because the structured
+    format reserves n slots per group unconditionally.
+    """
+    w = np.asarray(w, np.float32)
+    if w.ndim != 2:
+        raise ValueError(f"nm_mask needs a 2-D weight, got shape {w.shape}")
+    if not 0 < n <= m:
+        raise ValueError(f"n:m needs 0 < n <= m, got {n}:{m}")
+    d_in, d_out = w.shape
+    if d_in % m:
+        raise ValueError(f"d_in={d_in} must divide into groups of m={m}")
+    groups = np.abs(w).reshape(d_in // m, m, d_out)
+    top = np.argpartition(-groups, n - 1, axis=1)[:, :n]
+    mask = np.zeros(groups.shape, bool)
+    np.put_along_axis(mask, top, True, axis=1)
+    return np.ascontiguousarray(mask.reshape(d_in, d_out))
+
+
 def magnitude_mask(w: np.ndarray, density: Optional[float],
-                   block: Optional[int] = None) -> np.ndarray:
+                   block: Optional[int] = None, *,
+                   policy: str = "magnitude") -> np.ndarray:
     """Element mask of W keeping the top-``density`` fraction by magnitude
     with ONE global threshold — the same selection as the packers'
     historical ``_prune_magnitude``, so from-dense construction through the
@@ -137,7 +174,21 @@ def magnitude_mask(w: np.ndarray, density: Optional[float],
     slots pruned to 0.0 stay dead. ``block`` switches to block granularity
     over W^T (``core.bsr.magnitude_block_mask`` semantics, expanded back to
     elements) — the BSR family's selection rule.
+
+    ``policy`` selects the rule: ``"magnitude"`` (default, the global
+    threshold above) or a structured ``"n:m"`` string like ``"2:4"``
+    (``nm_mask`` — exactly n survivors per m-group along d_in; ``density``
+    and ``block`` do not apply and must be left unset).
     """
+    if policy != "magnitude":
+        n, m = parse_nm(policy)
+        if block is not None:
+            raise ValueError("n:m selection is element-level; it cannot be "
+                             "combined with block granularity")
+        if density is not None and abs(density - n / m) > 1e-9:
+            raise ValueError(f"policy {policy!r} fixes density at "
+                             f"{n}/{m}; drop density= or pass {n / m}")
+        return nm_mask(w, n, m)
     w = np.asarray(w, np.float32)
     if block is not None:
         wt = np.ascontiguousarray(w.T)
@@ -222,6 +273,9 @@ class FamilyOps:
     # (dense W, density, like_node) -> element mask at the family's
     # granularity (elementwise for InCRS, whole blocks for BSR)
     default_mask: Callable[[np.ndarray, float, Any], np.ndarray]
+    # selection granularity: "element" families accept element-level
+    # policies (n:m); "block" families prune whole tiles only
+    granularity: str = "element"
 
 
 _FAMILIES: Dict[type, FamilyOps] = {}
@@ -237,13 +291,24 @@ def is_lifecycle_node(x: Any) -> bool:
     Stacked values (pipeline stages sharing one pattern carry a leading
     stage axis) are excluded: their per-stage values disagree on what to
     prune, and the shared static meta cannot hold per-stage patterns.
+    ``is_stacked_node`` identifies exactly those, so consumers (the prune
+    callback) can say so instead of silently skipping.
     """
     if type(x) not in _FAMILIES or get_pattern(x) is None:
         return False
+    return not is_stacked_node(x)
+
+
+def is_stacked_node(x: Any) -> bool:
+    """True for a registered sparse-linear params object whose values carry
+    a leading per-stage axis (``api.stack_init`` / the pipeline stacks):
+    one shared pattern, many per-stage value sets — NOT repackable, because
+    the stages disagree on what to prune and the shared static meta cannot
+    hold per-stage patterns."""
+    if type(x) not in _FAMILIES or get_pattern(x) is None:
+        return False
     idx = getattr(x.meta, "fwd_idx", None)
-    if idx is not None and np.ndim(x.values) != np.ndim(idx):
-        return False                      # stacked per-stage values
-    return True
+    return idx is not None and np.ndim(x.values) != np.ndim(idx)
 
 
 def get_pattern(node: Any) -> Optional[SparsityPattern]:
@@ -290,15 +355,29 @@ def _repack_dense(node: Any, w: np.ndarray, new_mask: np.ndarray, *,
     return fam.pack(w, pat.evolve(new_mask, version=version), node)
 
 
-def magnitude_repack(node: Any, density: float) -> Any:
+def magnitude_repack(node: Any, density: float, *,
+                     policy: str = "magnitude") -> Any:
     """Re-prune ``node`` to ``density`` by magnitude of its CURRENT values
     (the family's granularity: elementwise for InCRS, whole blocks for
     BSR). Returns ``node`` unchanged — same object, no version bump — when
     the selection does not move the mask, so a schedule that plateaus
-    stops invalidating caches."""
+    stops invalidating caches.
+
+    ``policy="n:m"`` (e.g. ``"2:4"``) switches to the structured selection
+    of ``nm_mask`` — exactly n survivors per m-group along d_in; the
+    effective density is then n/m regardless of ``density`` (the schedule
+    still gates WHEN the repack happens). Element-level families only."""
     fam = _family(node)
     w = fam.to_dense(node)
-    new_mask = fam.default_mask(w, density, node)
+    if policy != "magnitude":
+        n, m = parse_nm(policy)
+        if fam.granularity != "element":
+            raise ValueError(
+                f"n:m selection is element-level; the {fam.name!r} family "
+                f"prunes whole blocks — use policy='magnitude'")
+        new_mask = nm_mask(w, n, m)
+    else:
+        new_mask = fam.default_mask(w, density, node)
     pat = get_pattern(node)
     if pat is not None and np.array_equal(new_mask, pat.mask):
         return node
@@ -324,7 +403,9 @@ def repack_onto(node: Any, like: Any) -> Any:
 
 __all__ = [
     "SparsityPattern", "PruneSchedule", "FamilyOps",
-    "magnitude_mask", "expand_block_mask", "validate_schedule",
-    "register_family", "is_lifecycle_node", "get_pattern", "node_to_dense",
+    "magnitude_mask", "nm_mask", "parse_nm", "expand_block_mask",
+    "validate_schedule",
+    "register_family", "is_lifecycle_node", "is_stacked_node",
+    "get_pattern", "node_to_dense",
     "repack", "magnitude_repack", "repack_onto",
 ]

@@ -76,11 +76,13 @@ def split_stages(stacked_params, n_stages: int):
 
 
 def incrs_stage_fn(act: Callable = jnp.tanh) -> Callable:
-    """Stage function over a shared-pattern ``sparse.InCRSLinearParams``
-    stack (``incrs_linear_stack_init``): each stage applies the fused InCRS
-    SpMM (custom VJP, so ``jax.grad`` through ``pipeline_apply`` yields the
-    reverse-schedule backward on the same sparse kernels) followed by
-    ``act``.
+    """Stage function over a shared-pattern stack (``sparse.stack_init`` —
+    a ``sparse.Linear`` whose values leaf carries a leading stage axis):
+    each stage applies the fused InCRS SpMM (custom VJP, so ``jax.grad``
+    through ``pipeline_apply`` yields the reverse-schedule backward on the
+    same sparse kernels) followed by ``act``. Works with raw
+    ``InCRSLinearParams`` stacks too — ``sparse.apply`` dispatches both
+    through the format registry.
 
     Only the ``values`` leaf carries a stage axis; the stripe metadata is
     pytree aux data shared by every stage, which is exactly what the
@@ -88,8 +90,8 @@ def incrs_stage_fn(act: Callable = jnp.tanh) -> Callable:
     require — per-stage patterns would need per-stage static metadata and
     cannot ride one ``shard_map``.
     """
-    from ..sparse.linear import incrs_linear_apply
+    from ..sparse import api
 
     def stage(params_one_stage, h):
-        return act(incrs_linear_apply(params_one_stage, h))
+        return act(api.apply(params_one_stage, h))
     return stage

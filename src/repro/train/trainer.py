@@ -18,6 +18,7 @@ the same repack, so moments of pruned slots reset to zero).
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Any, Dict, Optional
 
 import jax
@@ -115,19 +116,32 @@ def init_train_state(cfg: ModelConfig, opt_cfg: AdamWConfig, key):
 # Sparsity-lifecycle hook. Pattern changes re-shape the packed values
 # arrays, so this CANNOT live inside the jitted step — the loop calls it
 # on the host between steps; jit re-traces at the new shapes on its own.
-def make_prune_callback(schedule: "spat.PruneSchedule"):
+def make_prune_callback(schedule: "spat.PruneSchedule", *,
+                        policy: str = "magnitude"):
     """Build a ``(step, params, opt_state) -> (params, opt_state, info)``
-    hook that magnitude-re-prunes every sparse-linear layer in ``params``
-    to ``schedule.density_at(step)`` whenever ``schedule.due(step)``.
+    hook that re-prunes every sparse-linear layer in ``params`` to
+    ``schedule.density_at(step)`` whenever ``schedule.due(step)``.
+
+    Layers are discovered through the sparsity-lifecycle registry
+    (``sparse.pattern``), so every registered family — including layers
+    wrapped in ``sparse.Linear`` — rides the same hook; no per-family
+    branching. ``policy`` selects the mask rule: ``"magnitude"`` (default)
+    or a structured ``"n:m"`` string like ``"2:4"`` (exactly n survivors
+    per m-group along d_in; the schedule then only gates WHEN, the
+    effective density is n/m).
 
     For each repacked layer: values surviving the pattern change carry
     over (slots new to the pattern start at 0), and the AdamW moment
     entries are repacked onto the SAME new metadata — surviving slots keep
     their moments, pruned slots' moments are dropped, new slots' moments
-    reset to 0. Layers whose magnitude selection does not move (or whose
-    values are stacked per pipeline stage) pass through untouched, so the
-    returned trees alias the inputs on a no-op step. ``info`` is None when
-    nothing changed, else ``{"step", "density", "layers", "nnz"}``.
+    reset to 0. Layers whose magnitude selection does not move pass
+    through untouched, so the returned trees alias the inputs on a no-op
+    step. Stacked pipeline values (``sparse.stack_init`` — one shared
+    pattern, per-stage values) are SKIPPED with a one-time warning: the
+    stages disagree on what to prune and the shared static meta cannot
+    hold per-stage patterns (the open per-stage-patterns item in
+    ROADMAP.md). ``info`` is None when nothing changed, else
+    ``{"step", "density", "layers", "nnz"}``.
 
     Int8-quantized moments are not repackable (their per-block scales do
     not survive a slot remap) — use ``quantize=False`` with a prune
@@ -141,19 +155,35 @@ def make_prune_callback(schedule: "spat.PruneSchedule"):
     ``jax.clear_caches()`` after a repack to release superseded
     executables and their pattern buffers.
     """
+    if policy != "magnitude":
+        spat.parse_nm(policy)                   # fail at build, not step N
+    warned_stacked = [False]
+
     def callback(step: int, params, opt_state):
         if not schedule.due(step):
             return params, opt_state, None
         density = schedule.density_at(step)
         leaves, treedef = jax.tree_util.tree_flatten(
-            params, is_leaf=spat.is_lifecycle_node)
+            params, is_leaf=lambda x: (spat.is_lifecycle_node(x)
+                                       or spat.is_stacked_node(x)))
         m_leaves = treedef.flatten_up_to(opt_state["m"])
         v_leaves = treedef.flatten_up_to(opt_state["v"])
         changed, nnz = 0, 0
         for i, node in enumerate(leaves):
+            if spat.is_stacked_node(node):
+                if not warned_stacked[0]:
+                    warned_stacked[0] = True
+                    warnings.warn(
+                        f"prune callback: skipping stacked per-stage "
+                        f"values of {type(node).__name__} — pipeline "
+                        f"stacks share ONE pattern and cannot be "
+                        f"re-pruned in place; re-prune the stages "
+                        f"individually before stacking, or keep stacked "
+                        f"layers off the schedule", stacklevel=2)
+                continue
             if not spat.is_lifecycle_node(node):
                 continue
-            new_node = spat.magnitude_repack(node, density)
+            new_node = spat.magnitude_repack(node, density, policy=policy)
             if new_node is node:
                 continue
             if not (isinstance(m_leaves[i], type(node))

@@ -1,0 +1,469 @@
+"""Parity suite for the unified plan–execute front door.
+
+Pins the api_redesign contract:
+
+  * every legacy entry point (``ops.incrs_spmm`` / ``ops.bsr_matmul`` /
+    ``ops.index_match_matmul`` / ``ops.incrs_spmm_sharded`` and the three
+    layer-constructor families) still works as a deprecation shim with
+    BITWISE-identical outputs, and emits exactly ONE DeprecationWarning
+    per call;
+  * the new surface (``ops.spmm``, ``SparseSpec``/``plan``/``Linear``)
+    is bitwise-equal to the legacy path it replaces, across formats,
+    densities and sharded/unsharded layouts;
+  * the satellite features: structured N:M selection, the stacked-stage
+    prune warning, engines consuming specs'/plans' faces directly.
+
+This file (and only this file plus the shims themselves) is allowed to
+touch the legacy names — everything else in the repo is migrated, and CI
+runs the suite with ``-W error::DeprecationWarning`` to keep it that way.
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.core.bsr import BSR
+from repro.core.crs import CRS
+from repro.core.incrs import InCRS
+from repro.kernels import ops
+from repro.serve.engine import SpMMEngine, SpMMRequest
+from repro.sparse import (BoundPlan, Linear, SparseSpec, api,
+                          apply as sp_apply, pattern as spat, plan,
+                          plan_for_operand, stack_init)
+from repro.sparse import linear as slin
+
+DENSITIES = (0.0, 0.03, 0.5)
+
+
+def _sparse(rng, m, n, d):
+    return np.where(rng.random((m, n)) < d,
+                    rng.normal(size=(m, n)), 0.0).astype(np.float32)
+
+
+def _shim_call(fn, *args, **kw):
+    """Call a deprecation shim: assert it warns EXACTLY once (category
+    DeprecationWarning, message naming the replacement), return result."""
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        out = fn(*args, **kw)
+    dws = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(dws) == 1, \
+        f"{getattr(fn, '__name__', fn)}: {len(dws)} DeprecationWarnings"
+    assert "deprecated" in str(dws[0].message)
+    assert "use " in str(dws[0].message)       # points at the replacement
+    return out
+
+
+def _mesh1():
+    return Mesh(np.asarray(jax.devices()[:1]), ("data",))
+
+
+# ----------------------------------------------------------------------
+# ops.spmm dispatcher vs the four legacy kernel entry points.
+@pytest.mark.parametrize("density", DENSITIES)
+def test_spmm_vs_incrs_spmm_shim(rng, density):
+    a = _sparse(rng, 64, 512, density)
+    inc = InCRS.from_dense(a)
+    b = jnp.asarray(rng.normal(size=(512, 96)).astype(np.float32))
+    want = _shim_call(ops.incrs_spmm, inc, b)
+    np.testing.assert_array_equal(np.asarray(ops.spmm(inc, b)),
+                                  np.asarray(want))
+
+
+@pytest.mark.parametrize("density", DENSITIES)
+def test_spmm_vs_bsr_matmul_shim(rng, density):
+    d = rng.normal(size=(256, 256)).astype(np.float32)
+    mask = rng.random((4, 4)) < max(density, 0.25)
+    bsr = BSR.from_mask(d, mask, (64, 64))
+    b = jnp.asarray(rng.normal(size=(256, 64)).astype(np.float32))
+    want = _shim_call(ops.bsr_matmul, bsr, b)
+    np.testing.assert_array_equal(np.asarray(ops.spmm(bsr, b)),
+                                  np.asarray(want))
+
+
+@pytest.mark.parametrize("density", (0.03, 0.5))
+def test_spmm_vs_index_match_shim(rng, density):
+    a = CRS.from_dense(_sparse(rng, 48, 500, density))
+    bt = CRS.from_dense(_sparse(rng, 40, 500, density))
+    want = _shim_call(ops.index_match_matmul, a, bt, rounds=128)
+    np.testing.assert_array_equal(
+        np.asarray(ops.spmm(a, bt, rounds=128)), np.asarray(want))
+
+
+def test_spmm_vs_incrs_spmm_sharded_shim(rng):
+    a = _sparse(rng, 64, 512, 0.05)
+    inc = InCRS.from_dense(a)
+    b = jnp.asarray(rng.normal(size=(512, 32)).astype(np.float32))
+    mesh = _mesh1()
+    want = _shim_call(ops.incrs_spmm_sharded, inc, b, mesh=mesh)
+    np.testing.assert_array_equal(
+        np.asarray(ops.spmm(inc, b, mesh=mesh)), np.asarray(want))
+
+
+def test_spmm_dense_and_unknown_operand(rng):
+    a = rng.normal(size=(40, 60)).astype(np.float32)
+    b = jnp.asarray(rng.normal(size=(60, 30)).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(ops.spmm(a, b)),
+        np.asarray(ops.dense_mm(jnp.asarray(a), b)))
+    with pytest.raises(TypeError, match="operand format"):
+        ops.spmm({"not": "a matrix"}, b)
+    with pytest.raises(TypeError, match="CRS"):
+        ops.spmm(CRS.from_dense(a), b)     # crs needs a CRS rhs
+
+
+# ----------------------------------------------------------------------
+# Layer-family shims vs sparse.Linear — bitwise across the constructor
+# surface (values AND applied outputs).
+@pytest.mark.parametrize("density", (0.05, 0.5))
+def test_linear_incrs_vs_legacy_family(rng, density):
+    key = jax.random.PRNGKey(0)
+    spec = SparseSpec("incrs", density=density, section=32, block=8)
+    legacy = _shim_call(slin.incrs_linear_init, key, 64, 96, density,
+                        section=32, block=8)
+    new = Linear.init(key, 64, 96, spec)
+    np.testing.assert_array_equal(np.asarray(legacy.values),
+                                  np.asarray(new.values))
+    x = jnp.asarray(rng.normal(size=(8, 64)).astype(np.float32))
+    want = _shim_call(slin.incrs_linear_apply, legacy, x)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(new(x)))
+    np.testing.assert_array_equal(np.asarray(want),
+                                  np.asarray(sp_apply(legacy, x)))
+
+
+def test_linear_incrs_from_dense_vs_legacy(rng):
+    w = _sparse(rng, 64, 96, 0.1)
+    legacy = _shim_call(slin.incrs_linear_from_dense, w,
+                        section=32, block=8)
+    new = Linear.from_dense(w, SparseSpec("incrs", section=32, block=8))
+    np.testing.assert_array_equal(np.asarray(legacy.values),
+                                  np.asarray(new.values))
+    np.testing.assert_array_equal(legacy.meta.fwd_idx, new.meta.fwd_idx)
+
+
+def test_linear_bsr_vs_legacy_family(rng):
+    key = jax.random.PRNGKey(1)
+    legacy = _shim_call(slin.sparse_linear_init, key, 128, 128, 64, 0.5)
+    new = Linear.init(key, 128, 128, SparseSpec("bsr", density=0.5,
+                                                block=64))
+    np.testing.assert_array_equal(np.asarray(legacy.values),
+                                  np.asarray(new.values))
+    x = jnp.asarray(rng.normal(size=(8, 128)).astype(np.float32))
+    want = _shim_call(slin.sparse_linear_apply, legacy, x)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(new(x)))
+    # from_mask face: block mask in, same packing out
+    w = rng.normal(size=(128, 128)).astype(np.float32)
+    mask = rng.random((2, 2)) < 0.75
+    lg = _shim_call(slin.sparse_linear_from_mask, w, mask, 64)
+    nw = Linear.from_dense(w, SparseSpec(
+        "bsr", mask=spat.expand_block_mask(mask, 64), block=64))
+    np.testing.assert_array_equal(np.asarray(lg.values),
+                                  np.asarray(nw.values))
+
+
+def test_linear_sharded_vs_legacy_family(rng):
+    key = jax.random.PRNGKey(2)
+    mesh = _mesh1()
+    legacy = _shim_call(slin.incrs_linear_sharded_init, key, 64, 96, 0.1,
+                        mesh=mesh, section=32, block=8)
+    new = Linear.init(key, 64, 96, SparseSpec("incrs", density=0.1,
+                                              section=32, block=8,
+                                              mesh=mesh))
+    np.testing.assert_array_equal(np.asarray(legacy.values),
+                                  np.asarray(new.values))
+    x = jnp.asarray(rng.normal(size=(8, 64)).astype(np.float32))
+    want = _shim_call(slin.incrs_linear_sharded_apply, legacy, x)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(new(x)))
+    # re-shard of a trained single-device layer
+    p1 = Linear.init(key, 64, 96, SparseSpec("incrs", density=0.1,
+                                             section=32, block=8))
+    lg = _shim_call(slin.incrs_linear_shard, p1.inner, mesh=mesh)
+    nw = p1.shard(mesh=mesh)
+    np.testing.assert_array_equal(np.asarray(lg.values),
+                                  np.asarray(nw.values))
+    lgd = _shim_call(slin.incrs_linear_from_dense_sharded,
+                     _sparse(rng, 64, 96, 0.2), mesh=mesh,
+                     section=32, block=8)
+    assert lgd.meta.n_shards == 1
+
+
+def test_stack_init_vs_legacy(rng):
+    key = jax.random.PRNGKey(3)
+    legacy = _shim_call(slin.incrs_linear_stack_init, key, 3, 64, 64, 0.2,
+                        section=32, block=8)
+    new = stack_init(key, 3, 64, 64, SparseSpec("incrs", density=0.2,
+                                                section=32, block=8))
+    np.testing.assert_array_equal(np.asarray(legacy.values),
+                                  np.asarray(new.values))
+    assert spat.is_stacked_node(new.inner)
+
+
+# ----------------------------------------------------------------------
+# Dispatcher parity grid: (format x density x layout) — the new spec path
+# against the legacy entry point it shims, bitwise.
+@pytest.mark.parametrize("density", DENSITIES)
+@pytest.mark.parametrize("layout", ("single", "sharded"))
+def test_plan_grid_incrs(rng, density, layout):
+    a = _sparse(rng, 64, 512, density)
+    mesh = _mesh1() if layout == "sharded" else None
+    bound = plan_for_operand(a, SparseSpec("incrs", mesh=mesh))
+    b = jnp.asarray(rng.normal(size=(512, 48)).astype(np.float32))
+    inc = InCRS.from_dense(a)
+    if layout == "sharded":
+        want = _shim_call(ops.incrs_spmm_sharded, inc, b, mesh=_mesh1())
+    else:
+        want = _shim_call(ops.incrs_spmm, inc, b)
+    np.testing.assert_array_equal(np.asarray(bound(b)), np.asarray(want))
+
+
+@pytest.mark.parametrize("density", DENSITIES)
+def test_plan_grid_bsr(rng, density):
+    a = _sparse(rng, 128, 256, density)
+    bound = plan_for_operand(a, SparseSpec("bsr", block=64))
+    b = jnp.asarray(rng.normal(size=(256, 40)).astype(np.float32))
+    got = np.asarray(bound(b))
+    np.testing.assert_allclose(got, a @ np.asarray(b), rtol=1e-4,
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("density", DENSITIES)
+def test_plan_grid_dense_and_crs(rng, density):
+    a = _sparse(rng, 64, 256, density)
+    b = jnp.asarray(rng.normal(size=(256, 32)).astype(np.float32))
+    bound = plan_for_operand(a, SparseSpec("dense"))
+    np.testing.assert_array_equal(np.asarray(bound(b)),
+                                  np.asarray(ops.spmm(a, b)))
+    bt = CRS.from_dense(_sparse(rng, 24, 256, max(density, 0.02)))
+    bound_crs = plan_for_operand(a, SparseSpec("crs"))
+    want = _shim_call(ops.index_match_matmul, CRS.from_dense(a), bt)
+    np.testing.assert_array_equal(np.asarray(bound_crs(bt)),
+                                  np.asarray(want))
+
+
+def test_plan_requires_concrete_pattern():
+    with pytest.raises(ValueError, match="concrete pattern"):
+        plan(SparseSpec("incrs", density=0.1))
+    pat = spat.SparsityPattern(np.ones((32, 64), bool))
+    pl = plan(SparseSpec("incrs", pattern=pat), rhs_shape=(32, 8))
+    assert pl.shape == (64, 32)
+    with pytest.raises(ValueError, match="contract"):
+        plan(SparseSpec("incrs", pattern=pat), rhs_shape=(31, 8))
+
+
+def test_quickstart_contract_spec_only_change(rng):
+    """dense -> InCRS -> sharded InCRS by changing ONLY the SparseSpec."""
+    w = _sparse(rng, 64, 128, 0.1)
+    x = jnp.asarray(rng.normal(size=(8, 64)).astype(np.float32))
+    base = SparseSpec("incrs", mask=w != 0)
+    specs = [SparseSpec("dense", mask=w != 0), base,
+             dataclasses.replace(base, mesh=_mesh1())]
+    ys = [np.asarray(Linear.from_dense(w, s)(x)) for s in specs]
+    np.testing.assert_array_equal(ys[1], ys[2])    # fused == sharded
+    np.testing.assert_allclose(ys[0], ys[1], rtol=1e-4, atol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# Satellites: N:M policy, stacked-stage warning, engine faces.
+def test_nm_mask_keeps_exactly_n_per_group(rng):
+    w = rng.normal(size=(64, 48)).astype(np.float32)
+    w[:8] = 0.0                                    # all-zero groups too
+    mask = spat.nm_mask(w, 2, 4)
+    per_group = mask.reshape(16, 4, 48).sum(axis=1)
+    np.testing.assert_array_equal(per_group, 2)
+    with pytest.raises(ValueError, match="n:m"):
+        spat.parse_nm("banana")
+    with pytest.raises(ValueError, match="groups of m"):
+        spat.nm_mask(w[:62], 2, 4)
+
+
+def test_nm_repack_keeps_exactly_n_per_group(rng):
+    p = Linear.init(jax.random.PRNGKey(0), 64, 96,
+                    SparseSpec("incrs", density=1.0, section=32, block=8))
+    p2 = spat.magnitude_repack(p.inner, None, policy="2:4")
+    mask = spat.get_pattern(p2).mask
+    np.testing.assert_array_equal(mask.reshape(16, 4, 96).sum(axis=1), 2)
+    assert spat.get_pattern(p2).version == 1
+    # spec-level: policy IS the selection
+    p3 = Linear.init(jax.random.PRNGKey(0), 64, 96,
+                     SparseSpec("incrs", policy="2:4", section=32, block=8))
+    np.testing.assert_array_equal(
+        p3.pattern.mask.reshape(16, 4, 96).sum(axis=1), 2)
+    # BSR is block-granular — n:m must be rejected, not silently wrong
+    pb = Linear.init(jax.random.PRNGKey(1), 64, 64,
+                     SparseSpec("bsr", density=1.0, block=32))
+    with pytest.raises(ValueError, match="element-level"):
+        spat.magnitude_repack(pb.inner, None, policy="2:4")
+
+
+def test_nm_prune_callback_policy(rng):
+    from repro.train.optimizer import AdamWConfig, adamw_init
+    from repro.train.trainer import make_prune_callback
+    params = {"l": Linear.init(jax.random.PRNGKey(0), 32, 48,
+                               SparseSpec("incrs", density=1.0,
+                                          section=16, block=4))}
+    opt = AdamWConfig(lr=1e-2, warmup_steps=1, total_steps=10)
+    st = adamw_init(opt, params)
+    cb = make_prune_callback(spat.PruneSchedule(0.5, 10, warmup_frac=0.0,
+                                                every=1), policy="2:4")
+    p2, st2, info = cb(4, params, st)
+    assert info is not None and info["layers"] == 1
+    mask = spat.get_pattern(p2["l"].inner).mask
+    np.testing.assert_array_equal(mask.reshape(8, 4, 48).sum(axis=1), 2)
+    with pytest.raises(ValueError, match="n:m"):
+        make_prune_callback(spat.PruneSchedule(0.5, 10), policy="nope")
+
+
+def test_prune_callback_warns_once_on_stacked(rng):
+    from repro.train.optimizer import AdamWConfig, adamw_init
+    from repro.train.trainer import make_prune_callback
+    params = {
+        "stack": stack_init(jax.random.PRNGKey(0), 2, 64, 64,
+                            SparseSpec("incrs", density=0.5,
+                                       section=32, block=8)),
+        "flat": Linear.init(jax.random.PRNGKey(1), 64, 64,
+                            SparseSpec("incrs", density=1.0,
+                                       section=32, block=8)),
+    }
+    opt = AdamWConfig(lr=1e-2, warmup_steps=1, total_steps=10)
+    st = adamw_init(opt, params)
+    cb = make_prune_callback(spat.PruneSchedule(0.2, 10, warmup_frac=0.0,
+                                                every=1))
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        p2, st2, info = cb(5, params, st)
+        cb(6, p2, st2)                     # second due step: NO new warning
+    stacked_warns = [w for w in rec if "stacked" in str(w.message)]
+    assert len(stacked_warns) == 1
+    # the stacked layer is untouched, the flat one repacked
+    assert p2["stack"].inner is params["stack"].inner
+    assert p2["flat"].inner is not params["flat"].inner
+
+
+def test_engine_accepts_linear_and_bound_plan(rng):
+    w = _sparse(rng, 300, 64, 0.1)             # W (d_in=300, d_out=64)
+    lin = Linear.from_dense(w, SparseSpec("incrs"))
+    eng = SpMMEngine(lin)                       # Linear directly
+    assert eng.pattern_version == 0
+    req = SpMMRequest(0, rng.normal(size=(300, 16)).astype(np.float32))
+    eng.submit(req)
+    eng.run()
+    np.testing.assert_allclose(req.out, w.T @ req.b, rtol=1e-4, atol=1e-4)
+    # bsr Linear serves through its bound plan; swap IS a plan rebuild
+    linb = Linear.from_dense(w, SparseSpec("bsr", block=4))
+    eng.swap_pattern(linb)
+    assert eng.stats["pattern_swaps"] == 1
+    req2 = SpMMRequest(1, rng.normal(size=(300, 8)).astype(np.float32))
+    eng.submit(req2)
+    eng.run()
+    np.testing.assert_allclose(req2.out, linb.to_dense().T @ req2.b,
+                               rtol=1e-4, atol=1e-4)
+    # spec/plan without values are rejected with guidance
+    with pytest.raises(ValueError, match="no values"):
+        SpMMEngine(SparseSpec("incrs"))
+    with pytest.raises(ValueError, match="bind"):
+        SpMMEngine(lin.plan)
+    # a bound dense plan serves too
+    eng2 = SpMMEngine(plan_for_operand(w.T, SparseSpec("dense")))
+    req3 = SpMMRequest(2, rng.normal(size=(300, 4)).astype(np.float32))
+    eng2.submit(req3)
+    eng2.run()
+    np.testing.assert_allclose(req3.out, w.T @ req3.b, rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_linear_survives_optimizer_and_checkpoint(rng, tmp_path):
+    """The ONE pytree node claim: Linear rides AdamW, the prune lifecycle
+    and checkpoint save/restore without unwrapping."""
+    from repro.checkpoint import CheckpointManager
+    from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+    spec = SparseSpec("incrs", density=0.3, section=16, block=4)
+    params = {"l": Linear.init(jax.random.PRNGKey(0), 32, 64, spec)}
+    x = jnp.asarray(rng.normal(size=(8, 32)).astype(np.float32))
+    opt = AdamWConfig(lr=1e-2, weight_decay=0.0, warmup_steps=0,
+                      total_steps=4)
+    st = adamw_init(opt, params)
+    g = jax.grad(lambda q: (sp_apply(q["l"], x) ** 2).sum())(params)
+    assert isinstance(g["l"], Linear)
+    p2, st, _ = adamw_update(opt, g, st, params)
+    assert isinstance(p2["l"], Linear)
+    ck = CheckpointManager(str(tmp_path), async_write=False)
+    ck.save(1, {"params": p2})
+    tpl = {"params": {"l": Linear.init(jax.random.PRNGKey(0), 32, 64,
+                                       spec)}}
+    got = ck.restore(1, tpl)["params"]["l"]
+    assert isinstance(got, Linear)
+    np.testing.assert_array_equal(np.asarray(got.values),
+                                  np.asarray(p2["l"].values))
+
+
+def test_bsr_element_mask_widens_to_block_pattern(rng):
+    """BSR keeps whole tiles: an element mask widens to the blocks it
+    touches and the minted pattern SAYS so — nnz/to_dense/pattern agree
+    with what the kernel computes (no silently-served pruned weights)."""
+    w = rng.normal(size=(16, 16)).astype(np.float32)
+    mask = np.abs(w) > 0.8
+    lin = Linear.from_dense(w, SparseSpec("bsr", mask=mask, block=8))
+    blocks = mask.T.reshape(2, 8, 2, 8).any(axis=(1, 3))
+    want_mask = spat.expand_block_mask(blocks, 8)
+    np.testing.assert_array_equal(lin.pattern.mask, want_mask)
+    assert lin.nnz == int(want_mask.sum())
+    np.testing.assert_array_equal(np.asarray(lin.to_dense()) != 0,
+                                  (np.where(want_mask, w, 0.0)) != 0)
+    # an explicit lifecycle pattern must already be block-aligned
+    with pytest.raises(ValueError, match="block-aligned"):
+        Linear.from_dense(w, SparseSpec(
+            "bsr", pattern=spat.SparsityPattern(mask), block=8))
+
+
+def test_nm_repack_works_on_masked_dense_family(rng):
+    """The dense family is element-level — n:m repack must work on it
+    (only block-granular BSR rejects the policy)."""
+    p = Linear.from_dense(rng.normal(size=(16, 8)).astype(np.float32),
+                          SparseSpec("dense", density=0.9))
+    p2 = spat.magnitude_repack(p.inner, None, policy="2:4")
+    np.testing.assert_array_equal(
+        spat.get_pattern(p2).mask.reshape(4, 4, 8).sum(axis=1), 2)
+
+
+def test_engine_sharded_flag_tracks_bound_plan_layout(rng):
+    a = _sparse(rng, 64, 256, 0.05)
+    eng = SpMMEngine(plan_for_operand(a, SparseSpec("incrs",
+                                                    mesh=_mesh1())))
+    assert eng.sharded
+    eng.swap_pattern(plan_for_operand(a, SparseSpec("incrs")))
+    assert not eng.sharded
+
+
+def test_dense_adapter_pack_matches_plan_orientation(rng):
+    """The registry contract is uniform: adapter.pack returns A = W^T for
+    every format, dense included."""
+    w = _sparse(rng, 32, 48, 0.3)
+    pl = plan(SparseSpec("dense", mask=w != 0))
+    vals = api._adapter(pl.spec).pack(pl.meta, w)
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(pl.pack(w)))
+    np.testing.assert_array_equal(np.asarray(vals), w.T)
+
+
+def test_incrs_rejects_non_f32_dtype(rng):
+    with pytest.raises(ValueError, match="f32 stripe values"):
+        Linear.from_dense(np.zeros((8, 8), np.float32),
+                          SparseSpec("incrs"), dtype=jnp.bfloat16)
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="format"):
+        SparseSpec("cbs")
+    with pytest.raises(ValueError, match="at most one"):
+        SparseSpec("incrs", density=0.1, mask=np.ones((4, 4), bool))
+    with pytest.raises(ValueError, match="selection"):
+        SparseSpec("incrs", policy="2:4", density=0.5)
+    with pytest.raises(ValueError, match="shard"):
+        SparseSpec("bsr", mesh=_mesh1())
+    with pytest.raises(ValueError, match="plan–execute only"):
+        Linear.from_dense(np.zeros((8, 8), np.float32), SparseSpec("crs"))
+    with pytest.raises(ValueError, match="block="):
+        Linear.from_dense(np.zeros((8, 8), np.float32), SparseSpec("bsr"))

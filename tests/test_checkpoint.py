@@ -75,15 +75,14 @@ def test_custom_pytree_node_roundtrip(tmp_path):
     """A registered custom pytree node (InCRSLinearParams) must flatten by
     key-path and round-trip — the old dict/list-only flattener hit the
     np.asarray(tree) leaf branch and could not."""
-    from repro.sparse import linear as slin
+    from repro.sparse import Linear, SparseSpec
+    spec = SparseSpec("incrs", density=0.3, section=16, block=4)
     ck = CheckpointManager(str(tmp_path), async_write=False)
-    p = slin.incrs_linear_init(jax.random.PRNGKey(0), 32, 64, 0.3,
-                               section=16, block=4)
+    p = Linear.init(jax.random.PRNGKey(0), 32, 64, spec).inner
     tree = {"params": {"l1": p},
             "m": {"l1": jax.tree.map(lambda v: v * 0 + 2.0, p)}}
     ck.save(1, tree)
-    tpl_p = slin.incrs_linear_init(jax.random.PRNGKey(0), 32, 64, 0.3,
-                                   section=16, block=4)
+    tpl_p = Linear.init(jax.random.PRNGKey(0), 32, 64, spec).inner
     got = ck.restore(1, {"params": {"l1": tpl_p},
                          "m": {"l1": jax.tree.map(lambda v: v * 0, tpl_p)}})
     np.testing.assert_array_equal(np.asarray(got["params"]["l1"].values),
@@ -96,16 +95,16 @@ def test_custom_pytree_node_roundtrip(tmp_path):
 def test_pattern_restores_mid_schedule(tmp_path):
     """A repacked (re-pruned) layer restores into a FRESH dense template:
     the saved pattern re-targets the template's shapes and version."""
+    from repro.sparse import Linear, SparseSpec
     from repro.sparse import linear as slin
     from repro.sparse import pattern as spat
+    spec = SparseSpec("incrs", density=1.0, section=16, block=4)
     ck = CheckpointManager(str(tmp_path), async_write=False)
-    p0 = slin.incrs_linear_init(jax.random.PRNGKey(1), 32, 64, 1.0,
-                                section=16, block=4)
+    p0 = Linear.init(jax.random.PRNGKey(1), 32, 64, spec).inner
     p1 = spat.magnitude_repack(spat.magnitude_repack(p0, 0.5), 0.2)
     assert spat.get_pattern(p1).version == 2
     ck.save(7, {"params": {"l1": p1}})
-    tpl = slin.incrs_linear_init(jax.random.PRNGKey(1), 32, 64, 1.0,
-                                 section=16, block=4)
+    tpl = Linear.init(jax.random.PRNGKey(1), 32, 64, spec).inner
     assert tpl.values.shape != p1.values.shape       # really re-shaped
     got = ck.restore(7, {"params": {"l1": tpl}})["params"]["l1"]
     assert spat.get_pattern(got).version == 2

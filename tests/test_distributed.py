@@ -58,12 +58,12 @@ def test_pipeline_incrs_stages_forward_backward():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import Mesh
         from repro.train.pipeline import pipeline_apply, incrs_stage_fn
-        from repro.sparse.linear import (incrs_linear_stack_init,
-                                         incrs_to_dense_weight)
+        from repro.sparse import SparseSpec, stack_init
+        from repro.sparse.linear import incrs_to_dense_weight
         mesh = Mesh(np.array(jax.devices()[:2]), ("pipe",))
-        ps = incrs_linear_stack_init(jax.random.PRNGKey(0), 2, 64, 64,
-                                     density=0.2, scale=0.3,
-                                     section=64, block=8)
+        ps = stack_init(jax.random.PRNGKey(0), 2, 64, 64,
+                        SparseSpec("incrs", density=0.2,
+                                   section=64, block=8), scale=0.3).inner
         stage = incrs_stage_fn()
         x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 64))
         out = pipeline_apply(stage, ps, x, n_stages=2, n_micro=4, mesh=mesh)
@@ -98,28 +98,29 @@ def test_sharded_incrs_linear_matches_single_device():
         import dataclasses
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import Mesh
-        from repro.sparse.linear import (
-            incrs_linear_from_dense, incrs_linear_from_dense_sharded,
-            incrs_linear_apply, incrs_linear_sharded_apply,
-            incrs_to_dense_weight, incrs_sharded_to_dense_weight)
+        from repro.sparse import Linear, SparseSpec
+        from repro.sparse import apply as sp_apply
+        from repro.sparse.linear import (incrs_to_dense_weight,
+                                         incrs_sharded_to_dense_weight)
         mesh = Mesh(np.array(jax.devices()).reshape(8), ("data",))
+        spec1 = SparseSpec("incrs", section=64, block=8)
+        spec8 = SparseSpec("incrs", section=64, block=8, mesh=mesh)
         rng = np.random.default_rng(0)
         for d in (0.0, 0.03, 0.5):
             w = np.where(rng.random((96, 512)) < d,
                          rng.normal(size=(96, 512)), 0.0).astype(np.float32)
-            p1 = incrs_linear_from_dense(w, section=64, block=8)
-            ps = incrs_linear_from_dense_sharded(w, mesh=mesh,
-                                                 section=64, block=8)
+            p1 = Linear.from_dense(w, spec1).inner
+            ps = Linear.from_dense(w, spec8).inner
             assert ps.values.sharding.num_devices == 8
             np.testing.assert_array_equal(
                 incrs_to_dense_weight(p1), incrs_sharded_to_dense_weight(ps))
             x = jnp.asarray(rng.normal(size=(16, 96)).astype(np.float32))
             np.testing.assert_array_equal(
-                np.asarray(incrs_linear_apply(p1, x)),
-                np.asarray(incrs_linear_sharded_apply(ps, x)))
-            l1 = lambda v, xx: (incrs_linear_apply(
+                np.asarray(sp_apply(p1, x)),
+                np.asarray(sp_apply(ps, x)))
+            l1 = lambda v, xx: (sp_apply(
                 dataclasses.replace(p1, values=v), xx) ** 2).sum()
-            ls = lambda v, xx: (incrs_linear_sharded_apply(
+            ls = lambda v, xx: (sp_apply(
                 dataclasses.replace(ps, values=v), xx) ** 2).sum()
             g1v, g1x = jax.grad(l1, argnums=(0, 1))(p1.values, x)
             gsv, gsx = jax.grad(ls, argnums=(0, 1))(ps.values, x)
@@ -133,15 +134,14 @@ def test_sharded_incrs_linear_matches_single_device():
         # allowed — still exact to ~1e-5 relative.
         w = np.where(rng.random((100, 1024)) < 0.1,
                      rng.normal(size=(100, 1024)), 0.0).astype(np.float32)
-        p1 = incrs_linear_from_dense(w, section=64, block=8)
-        ps = incrs_linear_from_dense_sharded(w, mesh=mesh,
-                                             section=64, block=8)
+        p1 = Linear.from_dense(w, spec1).inner
+        ps = Linear.from_dense(w, spec8).inner
         x = jnp.asarray(rng.normal(size=(8, 100)).astype(np.float32))
         np.testing.assert_array_equal(
-            np.asarray(incrs_linear_apply(p1, x)),
-            np.asarray(incrs_linear_sharded_apply(ps, x)))
-        g1 = jax.grad(lambda xx: (incrs_linear_apply(p1, xx) ** 2).sum())(x)
-        gs = jax.grad(lambda xx: (incrs_linear_sharded_apply(ps, xx)
+            np.asarray(sp_apply(p1, x)),
+            np.asarray(sp_apply(ps, x)))
+        g1 = jax.grad(lambda xx: (sp_apply(p1, xx) ** 2).sum())(x)
+        gs = jax.grad(lambda xx: (sp_apply(ps, xx)
                                   ** 2).sum())(x)
         np.testing.assert_allclose(np.asarray(g1), np.asarray(gs),
                                    rtol=1e-5, atol=1e-6)
@@ -183,13 +183,13 @@ def test_spmm_engine_sharded_wave_roundtrip():
         for r in done:
             np.testing.assert_allclose(r.out, d @ r.b, rtol=1e-4, atol=1e-4)
             np.testing.assert_array_equal(
-                r.out, np.asarray(ops.incrs_spmm(single, jnp.asarray(r.b))))
+                r.out, np.asarray(ops.spmm(single, jnp.asarray(r.b))))
         # Trained sharded layer -> engine, zero repacking: the values leaf
         # IS the serving operand.
-        from repro.sparse.linear import incrs_linear_sharded_init
-        p = incrs_linear_sharded_init(jax.random.PRNGKey(1), 600, 96,
-                                      density=0.05, mesh=mesh,
-                                      section=64, block=8)
+        from repro.sparse import Linear, SparseSpec
+        p = Linear.init(jax.random.PRNGKey(1), 600, 96,
+                        SparseSpec("incrs", density=0.05, mesh=mesh,
+                                   section=64, block=8)).inner
         eng2 = SpMMEngine(p.prep)
         eng2.submit(SpMMRequest(0, rng.normal(size=(600, 32))
                                 .astype(np.float32)))
@@ -211,14 +211,14 @@ def test_spmm_engine_sharded_swap_pattern():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import Mesh
         from repro.serve.engine import SpMMEngine, SpMMRequest
+        from repro.sparse import Linear, SparseSpec
         from repro.sparse import pattern as spat
-        from repro.sparse.linear import (incrs_linear_sharded_init,
-                                         incrs_sharded_to_dense_weight)
+        from repro.sparse.linear import incrs_sharded_to_dense_weight
         rng = np.random.default_rng(0)
         mesh = Mesh(np.array(jax.devices()).reshape(8), ("data",))
-        p = incrs_linear_sharded_init(jax.random.PRNGKey(1), 600, 96,
-                                      density=0.5, mesh=mesh,
-                                      section=64, block=8)
+        p = Linear.init(jax.random.PRNGKey(1), 600, 96,
+                        SparseSpec("incrs", density=0.5, mesh=mesh,
+                                   section=64, block=8)).inner
         eng = SpMMEngine(p, max_wave_cols=128)
         assert eng.sharded and eng.pattern_version == 0
         def serve(rid):

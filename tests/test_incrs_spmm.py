@@ -100,7 +100,7 @@ def test_incrs_spmm_matches_dense(rng, density):
     d = _random_sparse(rng, 96, 700, density)
     b = rng.normal(size=(700, 130)).astype(np.float32)
     inc = InCRS.from_dense(d)
-    out = np.asarray(ops.incrs_spmm(inc, jnp.asarray(b)))
+    out = np.asarray(ops.spmm(inc, jnp.asarray(b)))
     np.testing.assert_allclose(out, d @ b, rtol=1e-4, atol=1e-4)
 
 
@@ -111,7 +111,7 @@ def test_incrs_spmm_nonaligned_shapes(rng, m, k, n):
     d = _random_sparse(rng, m, k, 0.1)
     b = rng.normal(size=(k, n)).astype(np.float32)
     inc = InCRS.from_dense(d)
-    out = np.asarray(ops.incrs_spmm(inc, jnp.asarray(b)))
+    out = np.asarray(ops.spmm(inc, jnp.asarray(b)))
     np.testing.assert_allclose(out, d @ b, rtol=1e-4, atol=1e-4)
 
 
@@ -121,14 +121,14 @@ def test_incrs_spmm_empty_rows_and_sections(rng):
     d[:, 256:512] = 0.0            # a fully-empty section (S=256)
     b = rng.normal(size=(600, 33)).astype(np.float32)
     inc = InCRS.from_dense(d)
-    out = np.asarray(ops.incrs_spmm(inc, jnp.asarray(b)))
+    out = np.asarray(ops.spmm(inc, jnp.asarray(b)))
     np.testing.assert_allclose(out, d @ b, rtol=1e-4, atol=1e-4)
 
 
 def test_incrs_spmm_all_zero(rng):
     d = np.zeros((16, 300), np.float32)
     b = rng.normal(size=(300, 8)).astype(np.float32)
-    out = np.asarray(ops.incrs_spmm(InCRS.from_dense(d), jnp.asarray(b)))
+    out = np.asarray(ops.spmm(InCRS.from_dense(d), jnp.asarray(b)))
     assert out.shape == (16, 8)
     np.testing.assert_array_equal(out, 0.0)
 
@@ -137,7 +137,7 @@ def test_incrs_spmm_small_section_params(rng):
     d = _random_sparse(rng, 24, 500, 0.07)
     b = rng.normal(size=(500, 64)).astype(np.float32)
     inc = InCRS.from_dense(d, section=64, block=8)
-    out = np.asarray(ops.incrs_spmm(inc, jnp.asarray(b)))
+    out = np.asarray(ops.spmm(inc, jnp.asarray(b)))
     np.testing.assert_allclose(out, d @ b, rtol=1e-4, atol=1e-4)
 
 
@@ -146,7 +146,7 @@ def test_fused_matches_twopass(rng):
     d = _random_sparse(rng, 64, 520, 0.05)
     b = jnp.asarray(rng.normal(size=(520, 96)).astype(np.float32))
     inc = InCRS.from_dense(d)
-    fused = np.asarray(ops.incrs_spmm(inc, b))
+    fused = np.asarray(ops.spmm(inc, b))
     twopass = np.asarray(ops.dense_mm(ops.incrs_to_dense(inc), b))
     np.testing.assert_allclose(fused, twopass, rtol=1e-4, atol=1e-4)
 
@@ -259,11 +259,12 @@ def test_from_crs_rejects_oversized_block_count():
 
 # ----------------------------------------------------------------------
 def test_incrs_linear_matches_dense(rng):
-    from repro.sparse.linear import (incrs_linear_init, incrs_linear_apply,
-                                     incrs_to_dense_weight)
-    p = incrs_linear_init(jax.random.PRNGKey(0), 300, 64, density=0.05)
+    from repro.sparse import Linear, SparseSpec, apply
+    from repro.sparse.linear import incrs_to_dense_weight
+    p = Linear.init(jax.random.PRNGKey(0), 300, 64,
+                    SparseSpec("incrs", density=0.05)).inner
     x = jnp.asarray(rng.normal(size=(3, 5, 300)).astype(np.float32))
-    y = incrs_linear_apply(p, x)
+    y = apply(p, x)
     w = incrs_to_dense_weight(p)
     want = np.asarray(x).reshape(-1, 300) @ w
     np.testing.assert_allclose(np.asarray(y).reshape(-1, 64), want,
@@ -293,11 +294,12 @@ def test_incrs_linear_shard_preserves_zero_valued_slots(rng):
     on exactly 0.0 — the pattern rides along as an explicit mask, not
     re-derived from non-zeros."""
     from jax.sharding import Mesh
-    from repro.sparse.linear import (incrs_linear_init, incrs_linear_shard,
-                                     incrs_to_dense_weight,
+    from repro.sparse import Linear, SparseSpec
+    from repro.sparse.linear import (incrs_to_dense_weight,
                                      incrs_sharded_to_dense_weight)
-    p = incrs_linear_init(jax.random.PRNGKey(0), 40, 64, density=0.2,
-                          section=32, block=8)
+    p = Linear.init(jax.random.PRNGKey(0), 40, 64,
+                    SparseSpec("incrs", density=0.2, section=32,
+                               block=8)).inner
     live = np.asarray(p.meta.fwd_idx) >= 0
     r, s, k = np.nonzero(live)
     vals = np.asarray(p.values).copy()
@@ -305,7 +307,7 @@ def test_incrs_linear_shard_preserves_zero_valued_slots(rng):
     import dataclasses
     p = dataclasses.replace(p, values=jnp.asarray(vals))
     mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
-    ps = incrs_linear_shard(p, mesh=mesh)
+    ps = Linear(p).shard(mesh=mesh).inner
     assert ps.nnz == p.nnz                        # slot still in the pattern
     np.testing.assert_array_equal(incrs_to_dense_weight(p),
                                   incrs_sharded_to_dense_weight(ps))
@@ -359,10 +361,10 @@ def test_invalidate_prepared_after_mutation(rng):
     d = _random_sparse(rng, 16, 300, 0.1)
     inc = InCRS.from_dense(d)
     b = jnp.asarray(rng.normal(size=(300, 8)).astype(np.float32))
-    y1 = np.asarray(ops.incrs_spmm(inc, b))
+    y1 = np.asarray(ops.spmm(inc, b))
     inc.crs.values = inc.crs.values * 2.0     # in-place operand mutation
     ops.invalidate_prepared(inc)
-    y2 = np.asarray(ops.incrs_spmm(inc, b))
+    y2 = np.asarray(ops.spmm(inc, b))
     np.testing.assert_allclose(y2, 2.0 * y1, rtol=1e-5, atol=1e-5)
 
 
@@ -370,5 +372,5 @@ def test_invalidate_prepared_after_mutation(rng):
 def test_incrs_spmm_bn_autoselect_odd_widths(rng, n):
     d = _random_sparse(rng, 32, 400, 0.08)
     b = rng.normal(size=(400, n)).astype(np.float32)
-    out = np.asarray(ops.incrs_spmm(InCRS.from_dense(d), jnp.asarray(b)))
+    out = np.asarray(ops.spmm(InCRS.from_dense(d), jnp.asarray(b)))
     np.testing.assert_allclose(out, d @ b, rtol=1e-4, atol=1e-4)

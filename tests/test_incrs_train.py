@@ -11,10 +11,14 @@ from repro.core.incrs import InCRS
 from repro.kernels import ops
 from repro.kernels.incrs_spmm import incrs_spmm as _expand_kernel
 from repro.kernels.incrs_spmm import incrs_spmm_reuse as _reuse_kernel
-from repro.sparse.linear import (InCRSLinearParams, incrs_linear_apply,
-                                 incrs_linear_from_dense, incrs_linear_init,
-                                 incrs_linear_stack_init,
-                                 incrs_to_dense_weight)
+from repro.sparse import Linear, SparseSpec, apply as sp_apply, stack_init
+from repro.sparse.linear import InCRSLinearParams, incrs_to_dense_weight
+
+
+def _incrs_init(key, d_in, d_out, density, scale=0.02, **kw):
+    return Linear.init(key, d_in, d_out,
+                       SparseSpec("incrs", density=density, **kw),
+                       scale=scale).inner
 
 
 def _random_sparse(rng, m, n, d):
@@ -33,8 +37,8 @@ def test_reuse_kernel_matches_expand(rng, m, k, n, density):
     d = _random_sparse(rng, m, k, density)
     b = rng.normal(size=(k, n)).astype(np.float32)
     inc = InCRS.from_dense(d)
-    exp = np.asarray(ops.incrs_spmm(inc, jnp.asarray(b), variant="expand"))
-    reu = np.asarray(ops.incrs_spmm(inc, jnp.asarray(b), variant="reuse"))
+    exp = np.asarray(ops.spmm(inc, jnp.asarray(b), variant="expand"))
+    reu = np.asarray(ops.spmm(inc, jnp.asarray(b), variant="reuse"))
     np.testing.assert_allclose(reu, d @ b, rtol=1e-4, atol=1e-4)
     np.testing.assert_allclose(reu, exp, rtol=1e-5, atol=1e-5)
 
@@ -64,7 +68,7 @@ def test_variant_auto_dispatch(rng):
     inc = InCRS.from_dense(d)
     for n in (64, 2048):        # 1 tile -> expand; 4x512 tiles -> reuse
         b = rng.normal(size=(520, n)).astype(np.float32)
-        out = np.asarray(ops.incrs_spmm(inc, jnp.asarray(b)))
+        out = np.asarray(ops.spmm(inc, jnp.asarray(b)))
         np.testing.assert_allclose(out, d @ b, rtol=1e-4, atol=1e-4)
 
 
@@ -74,18 +78,19 @@ def test_variant_auto_dispatch(rng):
 def test_incrs_grad_matches_dense_oracle(rng, density):
     d_in, d_out, t = 300, 64, 9
     if density == 0.0:
-        p = incrs_linear_from_dense(np.zeros((d_in, d_out), np.float32))
+        p = Linear.from_dense(np.zeros((d_in, d_out), np.float32),
+                              SparseSpec("incrs")).inner
     else:
-        p = incrs_linear_init(jax.random.PRNGKey(0), d_in, d_out,
-                              density=density)
+        p = _incrs_init(jax.random.PRNGKey(0), d_in, d_out,
+                        density=density)
     x = jnp.asarray(rng.normal(size=(t, d_in)).astype(np.float32))
     w = jnp.asarray(incrs_to_dense_weight(p))
 
     def f(vals, x_):
-        return (incrs_linear_apply(
+        return (sp_apply(
             dataclasses.replace(p, values=vals), x_) ** 2).sum()
 
-    y = incrs_linear_apply(p, x)
+    y = sp_apply(p, x)
     np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w),
                                rtol=1e-4, atol=1e-4)
     gv, gx = jax.grad(f, argnums=(0, 1))(p.values, x)
@@ -104,12 +109,12 @@ def test_incrs_grad_matches_dense_oracle(rng, density):
 
 
 def test_incrs_grad_through_jit_and_3d_batch(rng):
-    p = incrs_linear_init(jax.random.PRNGKey(1), 130, 70, density=0.1)
+    p = _incrs_init(jax.random.PRNGKey(1), 130, 70, density=0.1)
     x = jnp.asarray(rng.normal(size=(2, 5, 130)).astype(np.float32))
 
     @jax.jit
     def f(params, x_):
-        return (incrs_linear_apply(params, x_) ** 2).sum()
+        return (sp_apply(params, x_) ** 2).sum()
 
     g = jax.grad(f)(p, x)
     assert isinstance(g, InCRSLinearParams)
@@ -126,14 +131,14 @@ def test_incrs_training_converges(rng):
     """Gradient descent on the fused path reaches toward the best loss
     achievable under the fixed sparsity pattern."""
     d_in = d_out = 64
-    p = incrs_linear_init(jax.random.PRNGKey(2), d_in, d_out, density=0.3,
-                          scale=0.3, section=64, block=8)
+    p = _incrs_init(jax.random.PRNGKey(2), d_in, d_out, density=0.3,
+                    scale=0.3, section=64, block=8)
     w_true = rng.normal(size=(d_in, d_out)).astype(np.float32) * 0.3
     x = jnp.asarray(rng.normal(size=(128, d_in)).astype(np.float32))
     y = x @ jnp.asarray(w_true)
 
     def loss(vals):
-        pred = incrs_linear_apply(dataclasses.replace(p, values=vals), x)
+        pred = sp_apply(dataclasses.replace(p, values=vals), x)
         return jnp.mean((pred - y) ** 2)
 
     # achievable floor: the target restricted to the live pattern
@@ -159,17 +164,17 @@ def test_incrs_adamw_roundtrip(rng):
     """InCRSLinearParams is a plain pytree to the optimizer: moments mirror
     the values leaf, meta survives the update untouched."""
     from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
-    p = {"l": incrs_linear_init(jax.random.PRNGKey(3), 96, 48, density=0.2,
-                                section=64, block=8)}
+    p = {"l": _incrs_init(jax.random.PRNGKey(3), 96, 48, density=0.2,
+                          section=64, block=8)}
     x = jnp.asarray(rng.normal(size=(8, 96)).astype(np.float32))
     opt = AdamWConfig(lr=1e-2, weight_decay=0.0, warmup_steps=0,
                       total_steps=10)
     state = adamw_init(opt, p)
-    loss0 = float((incrs_linear_apply(p["l"], x) ** 2).sum())
-    g = jax.grad(lambda q: (incrs_linear_apply(q["l"], x) ** 2).sum())(p)
+    loss0 = float((sp_apply(p["l"], x) ** 2).sum())
+    g = jax.grad(lambda q: (sp_apply(q["l"], x) ** 2).sum())(p)
     p2, state, _ = adamw_update(opt, g, state, p)
     assert p2["l"].meta is p["l"].meta
-    loss1 = float((incrs_linear_apply(p2["l"], x) ** 2).sum())
+    loss1 = float((sp_apply(p2["l"], x) ** 2).sum())
     assert loss1 < loss0
     # pad slots stay exactly zero through the update
     pad = np.asarray(p["l"].meta.fwd_idx) < 0
@@ -177,8 +182,9 @@ def test_incrs_adamw_roundtrip(rng):
 
 
 def test_incrs_stack_init_shared_pattern(rng):
-    ps = incrs_linear_stack_init(jax.random.PRNGKey(4), 3, 64, 64,
-                                 density=0.2, section=64, block=8)
+    ps = stack_init(jax.random.PRNGKey(4), 3, 64, 64,
+                    SparseSpec("incrs", density=0.2, section=64,
+                               block=8)).inner
     assert ps.values.shape[0] == 3
     live = np.asarray(ps.meta.fwd_idx) >= 0
     vals = np.asarray(ps.values)
@@ -191,7 +197,7 @@ def test_incrs_stack_init_shared_pattern(rng):
 def test_trained_values_flow_into_serving(rng):
     """params.prep exposes the CURRENT values to SpMMEngine."""
     from repro.serve.engine import SpMMEngine, SpMMRequest
-    p = incrs_linear_init(jax.random.PRNGKey(5), 200, 64, density=0.1)
+    p = _incrs_init(jax.random.PRNGKey(5), 200, 64, density=0.1)
     p = dataclasses.replace(p, values=p.values * 3.0)    # "trained"
     eng = SpMMEngine(p.prep)
     req = SpMMRequest(0, rng.normal(size=(200, 16)).astype(np.float32))

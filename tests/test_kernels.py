@@ -35,7 +35,7 @@ def test_bsr_spmm_sweep(rng, block, density, dtype):
     bsr = BSR.from_mask(d, mask, (block, block))
     bsr.values = np.asarray(bsr.values, dtype=np.float32)
     b = jnp.asarray(rng.normal(size=(k, n)), dtype)
-    out = ops.bsr_matmul(bsr, b)
+    out = ops.spmm(bsr, b)
     want = ref.bsr_spmm(bsr.values, bsr.col_idx, bsr.row_ptr, bsr.shape,
                         bsr.block, b)
     tol = 1e-3 if dtype == jnp.float32 else 3e-2
@@ -50,7 +50,7 @@ def test_bsr_spmm_empty_rows(rng):
     mask[1, 0] = True                      # block-row 0 fully empty
     bsr = BSR.from_mask(d, mask, (128, 128))
     b = jnp.asarray(rng.normal(size=(256, 64)).astype(np.float32))
-    out = ops.bsr_matmul(bsr, b)
+    out = ops.spmm(bsr, b)
     np.testing.assert_allclose(out, bsr.to_dense() @ np.asarray(b),
                                rtol=1e-4, atol=1e-4)
     assert np.allclose(np.asarray(out)[:128], 0.0)
@@ -61,7 +61,7 @@ def test_bsr_spmm_empty_rows(rng):
 def test_index_match_spmm(rng, rounds, density):
     a = synthesize(DatasetSpec("a", 96, 500, density), seed=7)
     bt = synthesize(DatasetSpec("b", 70, 500, density * 1.5), seed=8)
-    out = ops.index_match_matmul(a, bt, rounds=rounds)
+    out = ops.spmm(a, bt, rounds=rounds)
     want = a.to_dense().astype(np.float32) @ \
         bt.to_dense().astype(np.float32).T
     np.testing.assert_allclose(np.asarray(out), want, rtol=1e-3, atol=1e-3)
@@ -90,10 +90,10 @@ def test_bsr_vs_index_match_consistency(rng):
     d = rng.normal(size=(128, 256)).astype(np.float32)
     bsr = BSR.from_dense(d, (128, 128))
     b = rng.normal(size=(256, 128)).astype(np.float32)
-    out1 = np.asarray(ops.bsr_matmul(bsr, jnp.asarray(b)))
+    out1 = np.asarray(ops.spmm(bsr, jnp.asarray(b)))
     a_crs = CRS.from_dense(d)
     bt_crs = CRS.from_dense(b.T.copy())
-    out2 = np.asarray(ops.index_match_matmul(a_crs, bt_crs, rounds=128))
+    out2 = np.asarray(ops.spmm(a_crs, bt_crs, rounds=128))
     np.testing.assert_allclose(out1, out2, rtol=2e-3, atol=2e-3)
 
 

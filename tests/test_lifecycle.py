@@ -12,8 +12,25 @@ from repro.core.crs import CRS
 from repro.core.incrs import InCRS
 from repro.kernels import ops
 from repro.serve.engine import SpMMEngine, SpMMRequest
+from repro.sparse import Linear, SparseSpec, stack_init
+from repro.sparse import apply as sp_apply
 from repro.sparse import linear as slin
 from repro.sparse import pattern as spat
+
+
+def _incrs_init(key, d_in, d_out, density, scale=0.02, **kw):
+    return Linear.init(key, d_in, d_out,
+                       SparseSpec("incrs", density=density, **kw),
+                       scale=scale).inner
+
+
+def _incrs_from_dense(w, mask=None, **kw):
+    return Linear.from_dense(w, SparseSpec("incrs", mask=mask, **kw)).inner
+
+
+def _bsr_init(key, d_in, d_out, block, density):
+    return Linear.init(key, d_in, d_out,
+                       SparseSpec("bsr", density=density, block=block)).inner
 from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
 from repro.train.trainer import make_prune_callback
 
@@ -23,9 +40,9 @@ KW = dict(section=32, block=8)
 def _mlp(key, d_in=64, d_hidden=96, d_out=32, density=1.0):
     k1, k2 = jax.random.split(key)
     return {
-        "l1": slin.incrs_linear_init(k1, d_in, d_hidden, density,
+        "l1": _incrs_init(k1, d_in, d_hidden, density,
                                      scale=0.2, **KW),
-        "l2": slin.incrs_linear_init(k2, d_hidden, d_out, density,
+        "l2": _incrs_init(k2, d_hidden, d_out, density,
                                      scale=0.2, **KW),
     }
 
@@ -33,7 +50,7 @@ def _mlp(key, d_in=64, d_hidden=96, d_out=32, density=1.0):
 # ----------------------------------------------------------------------
 # Pattern + repack semantics
 def test_pattern_attached_and_versioned(rng):
-    p = slin.incrs_linear_init(jax.random.PRNGKey(0), 64, 96, 0.3, **KW)
+    p = _incrs_init(jax.random.PRNGKey(0), 64, 96, 0.3, **KW)
     pat = spat.get_pattern(p)
     assert pat is not None and pat.version == 0
     assert pat.nnz == p.meta.nnz
@@ -45,7 +62,7 @@ def test_pattern_attached_and_versioned(rng):
 
 
 def test_repack_carries_surviving_values(rng):
-    p = slin.incrs_linear_init(jax.random.PRNGKey(1), 64, 96, 0.4, **KW)
+    p = _incrs_init(jax.random.PRNGKey(1), 64, 96, 0.4, **KW)
     w = slin.incrs_to_dense_weight(p)
     p2 = spat.magnitude_repack(p, 0.15)
     w2 = slin.incrs_to_dense_weight(p2)
@@ -61,9 +78,9 @@ def test_repack_explicit_mask_keeps_zero_slots(rng):
     w[0, 0] = 1.0
     mask = np.zeros((32, 32), bool)
     mask[0, 0] = mask[3, 5] = True             # (3, 5) is live at 0.0
-    p = slin.incrs_linear_from_dense(w, mask=mask, **KW)
+    p = _incrs_from_dense(w, mask=mask, **KW)
     assert p.meta.nnz == 2
-    g = jax.grad(lambda v: slin.incrs_linear_apply(
+    g = jax.grad(lambda v: sp_apply(
         dataclasses.replace(p, values=v),
         jnp.ones((4, 32))).sum())(p.values)
     gd = slin.incrs_to_dense_weight(dataclasses.replace(p, values=g))
@@ -71,7 +88,7 @@ def test_repack_explicit_mask_keeps_zero_slots(rng):
 
 
 def test_repack_noop_returns_same_object(rng):
-    p = slin.incrs_linear_init(jax.random.PRNGKey(2), 64, 64, 0.2, **KW)
+    p = _incrs_init(jax.random.PRNGKey(2), 64, 64, 0.2, **KW)
     p2 = spat.magnitude_repack(p, 0.2)
     assert p2 is p
 
@@ -82,17 +99,17 @@ def test_fixed_pattern_apply_bitwise_stable(rng):
     forward results."""
     w = np.where(rng.random((64, 96)) < 0.2,
                  rng.normal(size=(64, 96)), 0.0).astype(np.float32)
-    p = slin.incrs_linear_from_dense(w, **KW)
+    p = _incrs_from_dense(w, **KW)
     x = jnp.asarray(rng.normal(size=(8, 64)).astype(np.float32))
-    y1 = np.asarray(slin.incrs_linear_apply(p, x))
+    y1 = np.asarray(sp_apply(p, x))
     p2 = spat.repack(p, spat.get_pattern(p).mask)   # forced version bump
     assert spat.get_pattern(p2).version == 1
-    y2 = np.asarray(slin.incrs_linear_apply(p2, x))
+    y2 = np.asarray(sp_apply(p2, x))
     np.testing.assert_array_equal(y1, y2)
 
 
 def test_bsr_repack_block_granularity(rng):
-    p = slin.sparse_linear_init(jax.random.PRNGKey(3), 64, 64, 16, 0.75)
+    p = _bsr_init(jax.random.PRNGKey(3), 64, 64, 16, 0.75)
     p2 = spat.magnitude_repack(p, 0.25)
     pat2 = spat.get_pattern(p2)
     bm = pat2.block_mask(16)
@@ -105,7 +122,7 @@ def test_bsr_repack_block_granularity(rng):
     np.testing.assert_array_equal(w2[live], w[live])
     x = jnp.asarray(rng.normal(size=(4, 64)).astype(np.float32))
     ref = np.asarray(x) @ w2
-    np.testing.assert_allclose(np.asarray(slin.sparse_linear_apply(p2, x)),
+    np.testing.assert_allclose(np.asarray(sp_apply(p2, x)),
                                ref, rtol=1e-4, atol=1e-5)
 
 
@@ -113,7 +130,7 @@ def test_bsr_magnitude_mask_keeps_dead_blocks_dead(rng):
     """A generous target density must not resurrect all-zero blocks: the
     block threshold degenerates to 0.0 once n_keep exceeds the live-block
     count, and score >= 0 would otherwise mark every dead block live."""
-    p = slin.sparse_linear_init(jax.random.PRNGKey(10), 64, 64, 16, 0.25)
+    p = _bsr_init(jax.random.PRNGKey(10), 64, 64, 16, 0.25)
     assert spat.magnitude_repack(p, 0.99) is p     # no-op: nothing to add
     w = np.asarray(slin.to_dense(p), np.float32)
     m = spat.magnitude_mask(w, 0.99, block=16)
@@ -121,9 +138,9 @@ def test_bsr_magnitude_mask_keeps_dead_blocks_dead(rng):
 
 
 def test_reshard_shares_pattern_lineage(rng):
-    p = slin.incrs_linear_init(jax.random.PRNGKey(4), 32, 64, 0.3, **KW)
+    p = _incrs_init(jax.random.PRNGKey(4), 32, 64, 0.3, **KW)
     mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:1]), ("data",))
-    ps = slin.incrs_linear_shard(p, mesh=mesh)
+    ps = Linear(p).shard(mesh=mesh).inner
     assert spat.get_pattern(ps) is spat.get_pattern(p)
     assert spat.get_pattern(p).packed["incrs_sharded"] is ps.meta
     np.testing.assert_array_equal(slin.incrs_sharded_to_dense_weight(ps),
@@ -159,8 +176,8 @@ def test_grad_matches_dense_oracle_after_pattern_swap(rng):
     y = jnp.asarray(rng.normal(size=(16, 32)).astype(np.float32))
 
     def loss_fn(p):
-        h = jnp.tanh(slin.incrs_linear_apply(p["l1"], x))
-        return jnp.mean((slin.incrs_linear_apply(p["l2"], h) - y) ** 2)
+        h = jnp.tanh(sp_apply(p["l1"], x))
+        return jnp.mean((sp_apply(p["l2"], h) - y) ** 2)
 
     opt = AdamWConfig(lr=5e-3, weight_decay=0.0, warmup_steps=1,
                       total_steps=10)
@@ -191,7 +208,7 @@ def test_grad_matches_dense_oracle_after_pattern_swap(rng):
 
 
 def test_prune_callback_resets_pruned_moments(rng):
-    params = {"l1": slin.incrs_linear_init(jax.random.PRNGKey(6), 64, 64,
+    params = {"l1": _incrs_init(jax.random.PRNGKey(6), 64, 64,
                                            1.0, scale=0.2, **KW)}
     opt = AdamWConfig(lr=1e-2, weight_decay=0.0, warmup_steps=1,
                       total_steps=10)
@@ -218,8 +235,8 @@ def test_prune_callback_resets_pruned_moments(rng):
 
 
 def test_prune_callback_skips_stacked_stages(rng):
-    stack = slin.incrs_linear_stack_init(jax.random.PRNGKey(7), 2, 64, 64,
-                                         0.3, **KW)
+    stack = stack_init(jax.random.PRNGKey(7), 2, 64, 64,
+                       SparseSpec("incrs", density=0.3, **KW)).inner
     assert not spat.is_lifecycle_node(stack)
     opt = AdamWConfig(lr=1e-2, warmup_steps=1, total_steps=10)
     st = adamw_init(opt, {"s": stack})
@@ -245,7 +262,7 @@ def test_ops_versioned_prep_invalidation(rng):
     assert p2 is not p1
     assert ops.prepare_incrs(inc2, pattern=pat2) is p2
     np.testing.assert_allclose(
-        np.asarray(ops.incrs_spmm(p2, jnp.eye(128, dtype=jnp.float32))),
+        np.asarray(ops.spmm(p2, jnp.eye(128, dtype=jnp.float32))),
         d2, rtol=1e-5, atol=1e-6)
     ops.invalidate_pattern(pat2)
     assert ops.prepare_incrs(inc2, pattern=pat2) is not p2
@@ -271,7 +288,7 @@ def test_ops_versioned_prep_guards_source_identity(rng):
 # ----------------------------------------------------------------------
 # serving: hot pattern swap
 def test_spmm_engine_swap_pattern_roundtrip(rng):
-    p = slin.incrs_linear_init(jax.random.PRNGKey(8), 96, 64, 0.5,
+    p = _incrs_init(jax.random.PRNGKey(8), 96, 64, 0.5,
                                scale=0.3, **KW)
     eng = SpMMEngine(p, max_wave_cols=128)
     assert eng.pattern_version == 0
@@ -294,8 +311,8 @@ def test_spmm_engine_swap_pattern_roundtrip(rng):
 
 
 def test_spmm_engine_swap_shape_mismatch_rejected(rng):
-    p = slin.incrs_linear_init(jax.random.PRNGKey(9), 96, 64, 0.5, **KW)
-    other = slin.incrs_linear_init(jax.random.PRNGKey(9), 64, 64, 0.5, **KW)
+    p = _incrs_init(jax.random.PRNGKey(9), 96, 64, 0.5, **KW)
+    other = _incrs_init(jax.random.PRNGKey(9), 64, 64, 0.5, **KW)
     eng = SpMMEngine(p)
     old_a, old_prep = eng.a, eng.prep
     with pytest.raises(ValueError, match="serving shape"):

@@ -62,8 +62,8 @@ def test_bsr_matmul_linear_in_inputs(nbr, nbc, seed):
     bsr = BSR.from_dense(dense, (blk, blk))
     x = jnp.asarray(rng.normal(size=(nbc * blk, 64)).astype(np.float32))
     y = jnp.asarray(rng.normal(size=(nbc * blk, 64)).astype(np.float32))
-    lhs = ops.bsr_matmul(bsr, x + y)
-    rhs = ops.bsr_matmul(bsr, x) + ops.bsr_matmul(bsr, y)
+    lhs = ops.spmm(bsr, x + y)
+    rhs = ops.spmm(bsr, x) + ops.spmm(bsr, y)
     np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
                                rtol=1e-4, atol=1e-4)
 

@@ -6,30 +6,41 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.sparse.linear import (real_blocks, sparse_linear_apply,
-                                 sparse_linear_from_mask, sparse_linear_init,
-                                 to_dense)
+from repro.sparse import Linear, SparseSpec, apply as sp_apply
+from repro.sparse.linear import real_blocks, to_dense
+from repro.sparse.pattern import expand_block_mask
 from repro.sparse.prune import prune_to_bsr, sparsity_schedule
+
+
+def _bsr_init(key, d_in, d_out, block, density):
+    return Linear.init(key, d_in, d_out,
+                       SparseSpec("bsr", density=density, block=block)).inner
+
+
+def _bsr_from_mask(w, mask, block):
+    return Linear.from_dense(
+        w, SparseSpec("bsr", mask=expand_block_mask(mask, block),
+                      block=block)).inner
 
 
 @pytest.mark.parametrize("d_in,d_out,block,density",
                          [(256, 384, 64, 0.4), (128, 128, 128, 1.0),
                           (256, 128, 64, 0.25)])
 def test_sparse_linear_forward(rng, d_in, d_out, block, density):
-    p = sparse_linear_init(jax.random.PRNGKey(0), d_in, d_out, block,
+    p = _bsr_init(jax.random.PRNGKey(0), d_in, d_out, block,
                            density)
     x = jnp.asarray(rng.normal(size=(20, d_in)).astype(np.float32))
-    y = sparse_linear_apply(p, x)
+    y = sp_apply(p, x)
     np.testing.assert_allclose(y, x @ to_dense(p), rtol=1e-4, atol=1e-4)
 
 
 def test_sparse_linear_vjp_matches_dense(rng):
-    p = sparse_linear_init(jax.random.PRNGKey(1), 192, 256, 64, 0.5)
+    p = _bsr_init(jax.random.PRNGKey(1), 192, 256, 64, 0.5)
     x = jnp.asarray(rng.normal(size=(16, 192)).astype(np.float32))
     wd = to_dense(p)
 
     def f_sparse(vals, x_):
-        return (sparse_linear_apply(
+        return (sp_apply(
             dataclasses.replace(p, values=vals), x_) ** 2).sum()
 
     gv, gx = jax.grad(f_sparse, argnums=(0, 1))(p.values, x)
@@ -45,9 +56,9 @@ def test_sparse_linear_vjp_matches_dense(rng):
 
 
 def test_sparse_linear_3d_batch(rng):
-    p = sparse_linear_init(jax.random.PRNGKey(2), 128, 128, 64, 0.5)
+    p = _bsr_init(jax.random.PRNGKey(2), 128, 128, 64, 0.5)
     x = jnp.asarray(rng.normal(size=(2, 5, 128)).astype(np.float32))
-    y = sparse_linear_apply(p, x)
+    y = sp_apply(p, x)
     assert y.shape == (2, 5, 128)
     np.testing.assert_allclose(y.reshape(-1, 128),
                                x.reshape(-1, 128) @ to_dense(p),
@@ -62,17 +73,17 @@ def test_sparse_linear_empty_block_rows(rng):
     mask = np.zeros((d_out // blk, d_in // blk), bool)     # (4, 3) blocks
     mask[0, 1] = mask[2, 1] = True     # fwd rows 1, 3 empty; bwd rows 0, 2
     w = rng.normal(size=(d_in, d_out)).astype(np.float32) * 0.2
-    p = sparse_linear_from_mask(w, mask, blk)
+    p = _bsr_from_mask(w, mask, blk)
     x = jnp.asarray(rng.normal(size=(16, d_in)).astype(np.float32))
     wd = to_dense(p)
-    np.testing.assert_allclose(sparse_linear_apply(p, x), x @ wd,
+    np.testing.assert_allclose(sp_apply(p, x), x @ wd,
                                rtol=1e-4, atol=1e-4)
     # dx runs the TRANSPOSED metadata (bwd empty rows) — must match dense
-    gx = jax.grad(lambda x_: (sparse_linear_apply(p, x_) ** 2).sum())(x)
+    gx = jax.grad(lambda x_: (sp_apply(p, x_) ** 2).sum())(x)
     gx_ref = jax.grad(lambda x_: ((x_ @ wd) ** 2).sum())(x)
     np.testing.assert_allclose(gx, gx_ref, rtol=1e-3, atol=1e-3)
     # values grads exist only for the 2 real blocks, not the zero tiles
-    gv = jax.grad(lambda v: (sparse_linear_apply(
+    gv = jax.grad(lambda v: (sp_apply(
         dataclasses.replace(p, values=v), x) ** 2).sum())(p.values)
     assert gv.shape == (2, blk, blk)
 
@@ -84,12 +95,12 @@ def test_sparse_linear_all_empty_weight(rng):
     blk = 64
     mask = np.zeros((d_out // blk, d_in // blk), bool)
     w = rng.normal(size=(d_in, d_out)).astype(np.float32)
-    p = sparse_linear_from_mask(w, mask, blk)
+    p = _bsr_from_mask(w, mask, blk)
     assert p.values.shape[0] == 0
     x = jnp.asarray(rng.normal(size=(8, d_in)).astype(np.float32))
-    y = sparse_linear_apply(p, x)
+    y = sp_apply(p, x)
     np.testing.assert_array_equal(np.asarray(y), 0.0)
-    gx = jax.grad(lambda x_: (sparse_linear_apply(p, x_) ** 2).sum())(x)
+    gx = jax.grad(lambda x_: (sp_apply(p, x_) ** 2).sum())(x)
     np.testing.assert_array_equal(np.asarray(gx), 0.0)
 
 
@@ -124,13 +135,13 @@ def test_sparse_training_converges(rng):
     best loss ACHIEVABLE under its sparsity pattern (a 50%-sparse weight
     cannot fit a dense target exactly — the floor is the loss of the
     target restricted to the live blocks)."""
-    p = sparse_linear_init(jax.random.PRNGKey(3), 64, 64, 32, 0.5)
+    p = _bsr_init(jax.random.PRNGKey(3), 64, 64, 32, 0.5)
     w_true = rng.normal(size=(64, 64)).astype(np.float32) * 0.3
     x = jnp.asarray(rng.normal(size=(128, 64)).astype(np.float32))
     y = x @ jnp.asarray(w_true)
 
     def loss(vals):
-        pred = sparse_linear_apply(dataclasses.replace(p, values=vals), x)
+        pred = sp_apply(dataclasses.replace(p, values=vals), x)
         return jnp.mean((pred - y) ** 2)
 
     # the achievable floor: target blocks copied into the live pattern

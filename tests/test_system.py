@@ -36,6 +36,6 @@ def test_spmm_example_path():
     wl = WORKLOADS["incrs-docword"]
     spec = scaled(wl.dataset, 0.04)
     a = synthesize(spec, seed=0)
-    out = np.asarray(ops.index_match_matmul(a, a, rounds=128))
+    out = np.asarray(ops.spmm(a, a, rounds=128))
     ref = a.to_dense().astype(np.float32)
     np.testing.assert_allclose(out, ref @ ref.T, rtol=2e-3, atol=2e-3)
