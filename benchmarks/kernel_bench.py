@@ -6,10 +6,21 @@ terms, not from this host).
 ``bench_kernels/v1``) so the perf trajectory is tracked across PRs:
 
   {"schema": "bench_kernels/v1",
-   "rows": [{"name": ..., "us": ..., "derived": ...}, ...],
+   "rows": [{"name": ..., "us": ..., "derived": ...,
+             "model": {...}?}, ...],
    "comparisons": {"incrs_spmm_fused_vs_twopass":
        {"fused_us": ..., "twopass_us": ..., "speedup": ...,
         "workload": "128x1024 d=0.03 @ 256 cols"}}}
+
+Fused-kernel rows additionally carry a ``model`` block — the autotuner's
+cycle-level cost prediction (``core.mesh_sim.fused_spmm_cost``) for that
+exact launch, so ``benchmarks/roofline.py --kernels`` can report each
+row's predicted-vs-measured overhead factor and fraction-of-roofline.
+
+``--check BASELINE`` re-runs the suite and fails (exit 1) if any kernel
+row regressed >25% against the committed record, after normalizing both
+sides by their ``dense_mm_256`` row — interpret-mode timings scale with
+host speed, so only machine-relative ratios are comparable across hosts.
 """
 from __future__ import annotations
 
@@ -18,6 +29,7 @@ import json
 import os
 import subprocess
 import sys
+import tempfile
 import time
 
 import jax
@@ -26,7 +38,7 @@ import numpy as np
 
 from repro.core.bsr import BSR, magnitude_block_mask
 from repro.data.datasets import DatasetSpec, synthesize
-from repro.kernels import ops
+from repro.kernels import autotune, ops
 
 
 def _time(fn, *args, reps: int = 5):
@@ -49,6 +61,7 @@ def run(seed: int = 0):
     rng = np.random.default_rng(seed)
     rows = []
     comparisons = {}
+    models = {}               # row name -> cost-model block (fused rows)
     m = k = n = 256
     a = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
     b = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
@@ -155,22 +168,62 @@ def run(seed: int = 0):
     # Stripe-reuse vs per-col-tile re-expansion on the same operand, at a
     # fixed 128-wide col tiling over a 1024-col RHS (8 col tiles): the
     # baseline order expands every section stripe once PER TILE, the reuse
-    # order once per (row tile, section).
+    # order once per (row tile, section). Each explicit-variant row also
+    # records the autotuner's cost-model prediction for that exact launch
+    # (predict -> measure -> overhead factor; see roofline.py --kernels).
+    prep = ops.prepare_incrs(inc, pad_rows_to=128)
+
+    def _model(variant, n_cols, bm=128, bn=128):
+        mrows, nsec, smax = prep.idx.shape
+        np_ = -(-n_cols // bn) * bn
+        cost = autotune.kernel_cost(variant, mrows, np_, n_sections=nsec,
+                                    smax=smax, section=prep.section,
+                                    bm=bm, bn=bn, nnz=a_sp.nnz)
+        return {"variant": variant, "bm": bm, "bn": bn,
+                "predicted_us": round(autotune.predict_us(
+                    variant, mrows, np_, n_sections=nsec, smax=smax,
+                    section=prep.section, bm=bm, bn=bn,
+                    interpret=ops.INTERPRET), 1),
+                "cycles": cost.cycles, "grid_steps": cost.grid_steps,
+                "flops": cost.flops, "hbm_bytes": cost.hbm_bytes,
+                "compute_cycles": cost.compute_cycles,
+                "memory_cycles": cost.memory_cycles}
+
     bw = jnp.asarray(rng.normal(size=(spec.n, 1024)).astype(np.float32))
     expand_us = _time(
         lambda x: ops.spmm(inc, x, bn=128, variant="expand"),
         bw, reps=9)
     rows.append(("incrs_spmm_expand_percoltile", expand_us,
                  "variant=expand;bn=128;cols=1024"))
+    models["incrs_spmm_expand_percoltile"] = _model("expand", 1024)
     reuse_us = _time(
         lambda x: ops.spmm(inc, x, bn=128, variant="reuse"),
         bw, reps=9)
     rows.append(("incrs_spmm_reuse", reuse_us,
                  "variant=reuse;bn=128;cols=1024"))
+    models["incrs_spmm_reuse"] = _model("reuse", 1024)
     comparisons["incrs_spmm_reuse_vs_expand"] = {
         "reuse_us": reuse_us,
         "expand_us": expand_us,
         "speedup": expand_us / reuse_us,
+        "workload": f"{spec.m}x{spec.n} d={spec.density} @ 1024 cols, "
+                    f"bn=128",
+    }
+
+    # Double-buffered RHS pipelining on the same workload: one grid step
+    # per row tile, the streamed (section, bn) RHS blocks double-buffered
+    # behind the MXU, output-stationary (bm, N) panel (acceptance:
+    # pipelined must beat reuse on this row).
+    pipe_us = _time(
+        lambda x: ops.spmm(inc, x, bn=128, variant="pipelined"),
+        bw, reps=9)
+    rows.append(("incrs_spmm_pipelined", pipe_us,
+                 "variant=pipelined;bn=128;cols=1024"))
+    models["incrs_spmm_pipelined"] = _model("pipelined", 1024)
+    comparisons["incrs_spmm_pipelined_vs_reuse"] = {
+        "pipelined_us": pipe_us,
+        "reuse_us": reuse_us,
+        "speedup": reuse_us / pipe_us,
         "workload": f"{spec.m}x{spec.n} d={spec.density} @ 1024 cols, "
                     f"bn=128",
     }
@@ -184,10 +237,12 @@ def run(seed: int = 0):
                   ba, reps=9)
     rows.append(("incrs_spmm_expand_autopoint", exp_a,
                  "variant=expand;bn=default(512);cols=2048"))
+    models["incrs_spmm_expand_autopoint"] = _model("expand", 2048, bn=512)
     reu_a = _time(lambda x: ops.spmm(inc, x, variant="reuse"),
                   ba, reps=9)
     rows.append(("incrs_spmm_reuse_autopoint", reu_a,
                  "variant=reuse;bn=default(512);cols=2048"))
+    models["incrs_spmm_reuse_autopoint"] = _model("reuse", 2048, bn=512)
     comparisons["incrs_spmm_reuse_vs_expand_default_bn"] = {
         "reuse_us": reu_a,
         "expand_us": exp_a,
@@ -195,6 +250,41 @@ def run(seed: int = 0):
         "workload": f"{spec.m}x{spec.n} d={spec.density} @ 2048 cols, "
                     f"bn=512 (auto threshold)",
     }
+
+    # Autotune economics on the bn=128/1024-col workload: a cold tune()
+    # (model-ranked sweep, top candidates measured) vs the lookup a
+    # plan-persisted config rides on every later call (memory/disk
+    # cache). The gap is what `plan(spec, rhs_shape)` saves every caller
+    # after the first.
+    tmpdir = tempfile.mkdtemp(prefix="kb-autotune-")
+    saved_env = os.environ.get(autotune.CACHE_ENV)
+    os.environ[autotune.CACHE_ENV] = os.path.join(tmpdir, "cache.json")
+    try:
+        autotune.clear_memory_cache()
+        t0 = time.perf_counter()
+        autotune.tune(prep.idx, prep.val, bw, section=inc.section,
+                      interpret=ops.INTERPRET, reps=1)
+        miss_us = (time.perf_counter() - t0) * 1e6
+        rows.append(("autotune_miss", miss_us,
+                     "cold tune(): model-ranked sweep, top-4 measured"))
+        hit_us = _time(lambda: autotune.tune(
+            prep.idx, prep.val, bw, section=inc.section,
+            interpret=ops.INTERPRET, reps=1))
+        rows.append(("autotune_hit", hit_us,
+                     "tuning-cache lookup (what a persisted plan pays)"))
+        comparisons["autotune_hit_vs_miss"] = {
+            "hit_us": hit_us,
+            "miss_us": miss_us,
+            "speedup": miss_us / max(hit_us, 1e-9),
+            "workload": f"{spec.m}x{spec.n} d={spec.density} @ 1024 cols "
+                        f"tuning sweep vs cached config",
+        }
+    finally:
+        if saved_env is None:
+            os.environ.pop(autotune.CACHE_ENV, None)
+        else:
+            os.environ[autotune.CACHE_ENV] = saved_env
+        autotune.clear_memory_cache()
 
     # Row-sharded fused SpMM across fake host devices: each count runs in a
     # subprocess (XLA fixes the device count at backend init, so the parent
@@ -216,7 +306,7 @@ def run(seed: int = 0):
             "workload": f"{spec.m}x{spec.n} d={spec.density} @ 256 cols, "
                         f"row-sharded over fake CPU devices",
         }
-    return rows, comparisons
+    return rows, comparisons, models
 
 
 _SHARDED_BENCH = """
@@ -277,12 +367,51 @@ def _sharded_scaling(spec, seed, counts=(1, 2, 4, 8)):
     return out
 
 
+# Regression gate: normalize both sides by dense_mm_256 (a pure
+# machine-speed proxy) so interpret-mode timings from different hosts
+# stay comparable, and ignore rows under the noise floor.
+CHECK_TOLERANCE = 0.25
+CHECK_FLOOR_US = 200.0
+_NORM_ROW = "dense_mm_256"
+
+
+def check_regressions(rows, baseline_path, tolerance=CHECK_TOLERANCE,
+                      floor_us=CHECK_FLOOR_US):
+    """Compare fresh rows to a committed record. Returns a list of
+    failure strings (empty = pass)."""
+    try:
+        with open(baseline_path) as f:
+            base = json.load(f)
+    except (OSError, ValueError) as e:
+        return [f"cannot read baseline {baseline_path}: {e}"]
+    base_us = {r["name"]: float(r["us"]) for r in base.get("rows", [])}
+    new_us = {name: us for name, us, _ in rows}
+    norm_old, norm_new = base_us.get(_NORM_ROW), new_us.get(_NORM_ROW)
+    if not norm_old or not norm_new:
+        return [f"norm row {_NORM_ROW!r} missing from baseline or run"]
+    failures = []
+    for name, us, _ in rows:
+        old = base_us.get(name)
+        if old is None or old < floor_us or us < floor_us:
+            continue                   # new row / noise-floor row
+        rel = (us / norm_new) / (old / norm_old)
+        if rel > 1.0 + tolerance:
+            failures.append(
+                f"{name}: {us:.0f}us vs baseline {old:.0f}us "
+                f"(machine-relative {rel:.2f}x > "
+                f"{1 + tolerance:.2f}x allowed)")
+    return failures
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default=None,
                     help="write machine-readable results to this path")
+    ap.add_argument("--check", default=None, metavar="BASELINE",
+                    help="fail (exit 1) if any kernel row regresses >25%% "
+                         "vs this committed record (machine-relative)")
     args = ap.parse_args(argv)
-    rows, comparisons = run()
+    rows, comparisons, models = run()
     for name, us, derived in rows:
         print(f"kernel,{name},{us:.0f}us,{derived}")
     for name, c in comparisons.items():
@@ -290,18 +419,28 @@ def main(argv=None):
             print(f"compare,{name},speedup={c['speedup']:.2f}x")
         else:
             print(f"compare,{name},{json.dumps(c, sort_keys=True)}")
+    failures = []
+    if args.check:
+        failures = check_regressions(rows, args.check)
+        for f in failures:
+            print(f"regression,{f}", file=sys.stderr)
+        if not failures:
+            print(f"check,ok,vs={args.check}")
     if args.json:
         record = {
             "schema": "bench_kernels/v1",
             "backend": jax.default_backend(),
             "interpret": ops.INTERPRET,
-            "rows": [{"name": n, "us": round(u, 1), "derived": d}
+            "rows": [dict({"name": n, "us": round(u, 1), "derived": d},
+                          **({"model": models[n]} if n in models else {}))
                      for n, u, d in rows],
             "comparisons": comparisons,
         }
         with open(args.json, "w") as f:
             json.dump(record, f, indent=2)
         print(f"wrote {args.json}")
+    if failures:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -8,6 +8,15 @@ dry-run artifacts.
 Inputs: roofline_all.json (loop-corrected costs, see launch/dryrun.py
 --roofline) and dryrun_all.json (compile proof + memory analysis).
 
+``--kernels BENCH_kernels.json`` switches to per-kernel-row analysis:
+every fused-SpMM row that carries a cost-model block (see
+``kernel_bench.py``) is reported with its predicted-vs-measured overhead
+factor (SUMMA-compute-model style: measured µs / pure-model µs) and its
+fraction-of-roofline (useful FLOP rate vs the compute/memory ceiling its
+modelled intensity allows). Interpret-mode fractions are honest but tiny
+— the Python interpreter is the machine; the overhead factor is the
+number to track there.
+
 MODEL_FLOPS uses 6*N_active*tokens for training (fwd 2 + bwd 4) and
 2*N_active*tokens for inference steps; the MODEL/HLO ratio exposes remat
 and replication waste (ratios << 1 mean the compiled module does much more
@@ -81,12 +90,73 @@ def analyze(roofline_path: str, dryrun_path: Optional[str] = None
     return rows
 
 
+def analyze_kernels(bench_path: str) -> List[Dict]:
+    """Per-kernel-row roofline + model-overhead report from a
+    ``bench_kernels/v1`` record (rows lacking a ``model`` block — prep
+    timings, comparisons-only rows — are skipped)."""
+    with open(bench_path) as f:
+        rec = json.load(f)
+    rows = []
+    for r in rec.get("rows", []):
+        model = r.get("model")
+        if not model:
+            continue
+        us = float(r["us"])
+        predicted = float(model.get("predicted_us") or 0.0)
+        flops = float(model.get("flops") or 0.0)
+        # The ceiling this launch's modelled intensity allows: compute-
+        # bound rows cap at PEAK_FLOPS, memory-bound rows at the rate HBM
+        # can feed (flops/byte * bandwidth).
+        hbm = float(model.get("hbm_bytes") or 0.0)
+        ceiling = PEAK_FLOPS
+        if hbm > 0 and flops > 0:
+            ceiling = min(PEAK_FLOPS, flops / hbm * HBM_BW)
+        achieved = flops / (us * 1e-6) if us > 0 else 0.0
+        rows.append({
+            "name": r["name"],
+            "variant": model.get("variant"),
+            "us": us,
+            "predicted_us": predicted,
+            "overhead_factor": us / predicted if predicted > 0
+            else float("inf"),
+            "achieved_gflops": achieved / 1e9,
+            "bound": ("memory" if model.get("memory_cycles", 0)
+                      > model.get("compute_cycles", 0) else "compute"),
+            "roofline_fraction": achieved / ceiling if ceiling else 0.0,
+        })
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--roofline-json", default="roofline_all.json")
     ap.add_argument("--dryrun-json", default="dryrun_all.json")
+    ap.add_argument("--kernels", default=None, metavar="BENCH_JSON",
+                    help="report fraction-of-roofline + predicted-vs-"
+                         "measured overhead per kernel row of a "
+                         "bench_kernels/v1 record instead")
     ap.add_argument("--md", action="store_true")
     args = ap.parse_args(argv)
+    if args.kernels:
+        rows = analyze_kernels(args.kernels)
+        if args.md:
+            print("| kernel | variant | measured µs | predicted µs | "
+                  "overhead | bound | GFLOP/s | roofline frac |")
+            print("|---|---|---|---|---|---|---|---|")
+            for r in rows:
+                print(f"| {r['name']} | {r['variant']} | {r['us']:.0f} | "
+                      f"{r['predicted_us']:.0f} | "
+                      f"{r['overhead_factor']:.2f}x | {r['bound']} | "
+                      f"{r['achieved_gflops']:.3g} | "
+                      f"{r['roofline_fraction']:.2e} |")
+        else:
+            for r in rows:
+                print(f"kernel_roofline,{r['name']},variant={r['variant']},"
+                      f"us={r['us']:.0f},predicted={r['predicted_us']:.0f},"
+                      f"overhead={r['overhead_factor']:.2f}x,"
+                      f"bound={r['bound']},"
+                      f"frac={r['roofline_fraction']:.2e}")
+        return rows
     rows = analyze(args.roofline_json, args.dryrun_json)
     if args.md:
         print("| arch | shape | compute s | memory s | collective s | "

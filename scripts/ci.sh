@@ -17,7 +17,11 @@ python -m pytest -x -q -W error::DeprecationWarning
 # additionally covers any future in-process multi-device tests.
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     python -m pytest -x -q tests/test_distributed.py
-python benchmarks/kernel_bench.py --json BENCH_kernels.json
+# --check: fail on any kernel row regressing >25% vs the committed
+# record (machine-relative, so interpret-mode hosts compare fairly),
+# then refresh the record with this run's numbers.
+python benchmarks/kernel_bench.py --check BENCH_kernels.json \
+    --json BENCH_kernels.json
 # trainable-sparse end-to-end smoke (fused-kernel fwd/bwd + serve round
 # trip) — the kernel family is a SparseSpec --format flag, both paths run
 python examples/train_unstructured.py --steps 8

@@ -276,6 +276,77 @@ def sync_mesh_latency(a: CRS, bt: CRS, mesh: int,
 
 
 # ----------------------------------------------------------------------
+# Cost-model oracle for the *software* fused kernels (kernels/incrs_spmm).
+# Same predict -> measure -> overhead-factor methodology as the mesh
+# models above, but for the Pallas grid program: the autotuner
+# (kernels/autotune.py) uses these cycle counts as its prior and reports
+# the measured/predicted overhead factor per configuration
+# (SUMMA-compute-model style).
+
+MXU_MACS = 128 * 128          # MACs one MXU retires per cycle
+VPU_LANES = 8 * 128           # f32 lanes one VPU pass covers per cycle
+HBM_BYTES_PER_CYCLE = 871     # 819 GB/s HBM at the 940 MHz core clock
+GRID_STEP_CYCLES = 150        # per-grid-step dispatch / window bookkeeping
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedKernelCost:
+    """Cycle breakdown of one fused-SpMM launch at a given tiling."""
+    variant: str
+    grid_steps: int           # Pallas grid invocations
+    expansions: int           # one-hot stripe expansions (VPU)
+    dots: int                 # (bm, section) @ (section, bn) contractions
+    compute_cycles: int       # expansion + MXU work
+    hbm_bytes: int            # operand + output HBM traffic
+    memory_cycles: int        # hbm_bytes / HBM bandwidth
+    cycles: int               # modelled total (variant-dependent overlap)
+    flops: int                # useful flops (2 * stored nnz slots * N)
+
+
+def fused_spmm_cost(variant: str, m: int, n: int, *, n_sections: int,
+                    smax: int, section: int, bm: int, bn: int,
+                    nnz: int | None = None) -> FusedKernelCost:
+    """Cycle-level model of ``kernels.incrs_spmm`` variants.
+
+    ``expand``/``reuse`` serialize HBM traffic behind compute (the
+    automatic Pallas pipeline hides some of it, but every grid step still
+    stalls on its RHS block); ``pipelined`` overlaps the streamed RHS with
+    the MXU via double-buffered DMA, so its total is
+    ``max(compute, memory)`` plus its (much smaller) grid overhead.
+    """
+    if variant not in ("expand", "reuse", "pipelined"):
+        raise ValueError(f"unknown variant {variant!r}")
+    mp = -(-m // bm) * bm
+    n_rt, n_ct = mp // bm, -(-n // bn)
+    exp_cycles = 2 * bm * smax * section // VPU_LANES   # compare + FMA
+    dot_cycles = bm * section * bn // MXU_MACS
+
+    if variant == "expand":
+        grid_steps = n_rt * n_ct * n_sections
+        expansions = grid_steps                    # re-expanded per col tile
+        stripe_fetches = grid_steps
+    else:
+        grid_steps = (n_rt if variant == "pipelined"
+                      else n_rt * n_sections * n_ct)
+        expansions = n_rt * n_sections             # once per (row, section)
+        stripe_fetches = expansions
+    dots = n_rt * n_sections * n_ct
+
+    hbm_bytes = (stripe_fetches * bm * smax * 8    # idx (i32) + val (f32)
+                 + dots * section * bn * 4         # RHS blocks
+                 + mp * n * 4)                     # output, written once
+    compute = expansions * exp_cycles + dots * dot_cycles
+    memory = -(-hbm_bytes // HBM_BYTES_PER_CYCLE)
+    if variant == "pipelined":
+        cycles = max(compute, memory) + grid_steps * GRID_STEP_CYCLES
+    else:
+        cycles = compute + memory + grid_steps * GRID_STEP_CYCLES
+    slots = nnz if nnz is not None else m * n_sections * smax
+    return FusedKernelCost(variant, grid_steps, expansions, dots, compute,
+                           hbm_bytes, memory, cycles, 2 * slots * n)
+
+
+# ----------------------------------------------------------------------
 # Resource matching (paper §V-C equations 1 / 2 and Table V).
 def fpic_units_same_bw(n_synch: int) -> int:
     """Eq. 1: 2*N*W = 2*8*k*W  ->  k = N/8."""

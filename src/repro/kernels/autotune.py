@@ -1,0 +1,310 @@
+"""Autotuner for the fused InCRS SpMM kernels.
+
+Sweeps ``(bm, bn, variant)`` for one prepared operand + RHS shape, picks
+by *measured* microseconds with the cycle-level cost model of
+``core.mesh_sim.fused_spmm_cost`` as the prior: every candidate is
+predicted first, only the most promising few are measured, and each
+winning config records its ``overhead_factor = measured / predicted`` —
+the same predict -> measure -> report methodology the SUMMA compute
+model uses (SNIPPETS.md; that exemplar lands at ~3.9x).
+
+Tuned configs are persisted in a small disk cache
+(``~/.cache/repro-autotune.json``, overridable via the
+``REPRO_AUTOTUNE_CACHE`` env var) keyed by
+``(padded_rows, n_sections, smax, section, n_cols, backend)`` — i.e. the
+spec's prepared shape + the RHS width + where it runs. The cache is
+versioned: bumping ``AUTOTUNE_VERSION`` (a kernel change that shifts the
+performance landscape) invalidates every stored entry at load time.
+
+``sparse.api.plan`` attaches a cached config to its ``MatmulPlan`` so
+every ``spmm`` / ``Linear.apply`` / serve-engine call rides it, and
+``ops.spmm(variant="auto")`` consults the same cache (falling back to
+the cost model alone when no tuned entry exists).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import logging
+import os
+import tempfile
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.mesh_sim import FusedKernelCost, fused_spmm_cost
+from .incrs_spmm import (incrs_spmm, incrs_spmm_pipelined,
+                         incrs_spmm_reuse, _resolve_row_tile)
+
+log = logging.getLogger(__name__)
+
+# Bump on any kernel change that shifts the performance landscape —
+# invalidates every persisted tuning entry at load time.
+AUTOTUNE_VERSION = 1
+
+CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+
+# Row-panel accumulator budget shared by the reuse/pipelined variants
+# (bm x Np f32 held in VMEM for a whole row tile). ``ops`` re-exports
+# this as its fallback gate so the two always agree.
+PANEL_BYTES = 2 * 1024 * 1024
+
+# Cycles -> wall time for compiled TPU execution (v4-class core clock).
+TPU_CLOCK_HZ = 940e6
+
+# Interpret-mode wall cost is dominated by per-op Python dispatch, not
+# cycles: model it as flat per-grid-step / per-expansion / per-dot costs
+# (µs), calibrated against BENCH_kernels.json interpret rows.
+_I_STEP_US = 500.0
+_I_EXPAND_US = 400.0
+_I_DOT_US = 90.0
+
+# How many candidates (in cost-model order) get measured per sweep.
+MEASURE_TOP_K = 4
+
+_KERNELS = {"expand": incrs_spmm, "reuse": incrs_spmm_reuse,
+            "pipelined": incrs_spmm_pipelined}
+
+
+# ----------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class TunedConfig:
+    """One winning kernel configuration with its prediction audit trail."""
+    variant: str
+    bm: int
+    bn: int
+    measured_us: float
+    predicted_us: float
+
+    @property
+    def overhead_factor(self) -> float:
+        """measured / predicted — how much slower reality is than the
+        pure cost model (SUMMA-compute-model style)."""
+        if self.predicted_us <= 0:
+            return float("inf")
+        return self.measured_us / self.predicted_us
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: dict) -> "TunedConfig":
+        return TunedConfig(str(d["variant"]), int(d["bm"]), int(d["bn"]),
+                           float(d["measured_us"]), float(d["predicted_us"]))
+
+
+def backend_name(interpret: bool) -> str:
+    return "interpret" if interpret else jax.default_backend()
+
+
+def cache_key(padded_rows: int, n_sections: int, smax: int, section: int,
+              n_cols: int, backend: str) -> str:
+    """Tuning-cache key: prepared-operand shape + RHS width + backend."""
+    return (f"m{padded_rows}.sec{n_sections}x{section}.w{smax}"
+            f".n{n_cols}.{backend}")
+
+
+# ----------------------------------------------------------------------
+# Disk-backed cache with versioned invalidation.
+_MEM: Dict[str, TunedConfig] = {}
+
+
+def cache_path() -> str:
+    override = os.environ.get(CACHE_ENV)
+    if override:
+        return override
+    return os.path.join(os.path.expanduser("~"), ".cache",
+                        "repro-autotune.json")
+
+
+def _load_disk() -> Dict[str, dict]:
+    try:
+        with open(cache_path()) as f:
+            blob = json.load(f)
+    except (OSError, ValueError):
+        return {}
+    if not isinstance(blob, dict) or \
+            blob.get("version") != AUTOTUNE_VERSION:
+        return {}                      # versioned invalidation
+    entries = blob.get("entries")
+    return entries if isinstance(entries, dict) else {}
+
+
+def _store_disk(key: str, cfg: TunedConfig) -> None:
+    path = cache_path()
+    entries = _load_disk()
+    entries[key] = cfg.to_json()
+    payload = {"version": AUTOTUNE_VERSION, "entries": entries}
+    try:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                                   prefix=".autotune-")
+        with os.fdopen(fd, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)          # atomic: readers never see a torn file
+    except OSError:
+        pass                           # read-only FS: tuning still works
+
+
+def lookup(key: str) -> Optional[TunedConfig]:
+    """In-memory first, then disk (populating memory on a hit)."""
+    hit = _MEM.get(key)
+    if hit is not None:
+        return hit
+    raw = _load_disk().get(key)
+    if raw is None:
+        return None
+    try:
+        cfg = TunedConfig.from_json(raw)
+    except (KeyError, TypeError, ValueError):
+        return None
+    _MEM[key] = cfg
+    return cfg
+
+
+def clear_memory_cache() -> None:
+    """Forget in-process tuning state (tests; does not touch the disk)."""
+    _MEM.clear()
+    _logged.clear()
+
+
+# ----------------------------------------------------------------------
+# Cost-model prior.
+def predict_us(variant: str, m: int, n: int, *, n_sections: int, smax: int,
+               section: int, bm: int, bn: int, interpret: bool) -> float:
+    """Predicted wall µs for one launch from the cycle model alone."""
+    cost = fused_spmm_cost(variant, m, n, n_sections=n_sections, smax=smax,
+                           section=section, bm=bm, bn=bn)
+    if interpret:
+        return (cost.grid_steps * _I_STEP_US
+                + cost.expansions * _I_EXPAND_US
+                + cost.dots * _I_DOT_US)
+    return cost.cycles / TPU_CLOCK_HZ * 1e6
+
+
+def kernel_cost(variant: str, m: int, n: int, *, n_sections: int,
+                smax: int, section: int, bm: int, bn: int,
+                nnz: int | None = None) -> FusedKernelCost:
+    """Cycle breakdown for roofline reporting (re-export of the oracle)."""
+    return fused_spmm_cost(variant, m, n, n_sections=n_sections, smax=smax,
+                           section=section, bm=bm, bn=bn, nnz=nnz)
+
+
+def candidates(padded_rows: int, n: int, *, section: int,
+               n_sections: int) -> List[Tuple[str, int, int]]:
+    """Feasible ``(variant, bm, bn)`` sweep space for one problem."""
+    bms, seen = [], set()
+    for bm in (32, 64, 128, 256):
+        eff, _ = _resolve_row_tile(padded_rows, bm)
+        if eff not in seen:
+            seen.add(eff)
+            bms.append(eff)
+    np128 = -(-n // 128) * 128
+    bns = sorted({min(bn, np128) for bn in (128, 256, 512)})
+    out: List[Tuple[str, int, int]] = []
+    for bm in bms:
+        for bn in bns:
+            np_ = -(-n // bn) * bn
+            out.append(("expand", bm, bn))
+            if bm * np_ * 4 <= PANEL_BYTES:
+                out.append(("reuse", bm, bn))
+                # pipelined additionally holds the stripe + a double
+                # (section, bn) RHS window in VMEM
+                if (bm * section + 2 * section * bn) * 4 \
+                        <= 2 * PANEL_BYTES:
+                    out.append(("pipelined", bm, bn))
+    return out
+
+
+# ----------------------------------------------------------------------
+def _measure_us(fn, reps: int) -> float:
+    jax.block_until_ready(fn())        # compile / warm caches
+    best = float("inf")
+    for _ in range(max(1, reps)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, (time.perf_counter() - t0) * 1e6)
+    return best
+
+
+def tune(idx, val, b, *, section: int, interpret: bool,
+         reps: int = 3, persist: bool = True,
+         top_k: int = MEASURE_TOP_K) -> TunedConfig:
+    """Sweep ``(variant, bm, bn)`` for one prepared operand + RHS.
+
+    Cache hit -> returns the stored config without running anything.
+    Miss -> rank all feasible candidates by the cost model, measure the
+    ``top_k`` most promising, keep the fastest, persist it.
+    """
+    m, n_sections, smax = idx.shape
+    n = b.shape[1]
+    key = cache_key(m, n_sections, smax, section, n,
+                    backend_name(interpret))
+    hit = lookup(key)
+    if hit is not None:
+        return hit
+
+    cands = candidates(m, n, section=section, n_sections=n_sections)
+    ranked = sorted(
+        cands,
+        key=lambda c: predict_us(c[0], m, n, n_sections=n_sections,
+                                 smax=smax, section=section, bm=c[1],
+                                 bn=c[2], interpret=interpret))
+    best_cfg: Optional[TunedConfig] = None
+    for variant, bm, bn in ranked[:max(1, top_k)]:
+        predicted = predict_us(variant, m, n, n_sections=n_sections,
+                               smax=smax, section=section, bm=bm, bn=bn,
+                               interpret=interpret)
+        kp = n_sections * section
+        np_ = -(-n // bn) * bn
+        bp = jnp.pad(b, ((0, kp - b.shape[0]), (0, np_ - n)))
+        kern = _KERNELS[variant]
+        measured = _measure_us(
+            lambda: kern(idx, val, bp, section=section, bm=bm, bn=bn,
+                         interpret=interpret), reps)
+        cfg = TunedConfig(variant, bm, bn, measured, predicted)
+        if best_cfg is None or cfg.measured_us < best_cfg.measured_us:
+            best_cfg = cfg
+    assert best_cfg is not None
+    _MEM[key] = best_cfg
+    if persist:
+        _store_disk(key, best_cfg)
+    log.info("autotune: %s -> %s bm=%d bn=%d (measured %.0fµs, predicted "
+             "%.0fµs, overhead %.2fx)", key, best_cfg.variant, best_cfg.bm,
+             best_cfg.bn, best_cfg.measured_us, best_cfg.predicted_us,
+             best_cfg.overhead_factor)
+    return best_cfg
+
+
+# ----------------------------------------------------------------------
+# Model-only variant pick (ops.spmm variant="auto" with no tuned entry).
+_logged: set = set()
+
+
+def model_pick_variant(m: int, n: int, *, n_sections: int, smax: int,
+                       section: int, bm: int, bn: int,
+                       interpret: bool) -> str:
+    """Choose a variant from the cost model alone (no measurement), with
+    a one-time log line explaining the pick for this problem shape."""
+    bm, _ = _resolve_row_tile(m, bm)   # same clamp the kernels apply
+    np_ = -(-n // bn) * bn
+    allowed = ["expand"]
+    if bm * np_ * 4 <= PANEL_BYTES:
+        allowed.append("reuse")
+        if (bm * section + 2 * section * bn) * 4 <= 2 * PANEL_BYTES:
+            allowed.append("pipelined")
+    scored = {v: predict_us(v, m, n, n_sections=n_sections, smax=smax,
+                            section=section, bm=bm, bn=bn,
+                            interpret=interpret)
+              for v in allowed}
+    pick = min(scored, key=scored.get)
+    sig = (m, n, n_sections, smax, section, bm, bn, interpret)
+    if sig not in _logged:
+        _logged.add(sig)
+        log.info(
+            "spmm auto (no tuned entry): picked %r for m=%d n=%d "
+            "(predicted µs: %s)", pick, m, n,
+            ", ".join(f"{v}={u:.0f}" for v, u in sorted(scored.items())))
+    return pick

@@ -18,18 +18,23 @@ row/col tiles are parallel. This is the same fusion that streaming SpMM
 accelerators (Sextans, SpArch) perform between their decompression front-end
 and their accumulation array.
 
-Two grid orders are provided (``ops.spmm`` picks by shape):
+Three grid orders are provided (``ops.spmm`` picks by tuned config or the
+autotuner's cost model):
 
-* ``incrs_spmm``        — grid (row-tile, col-tile, section), accumulator
+* ``incrs_spmm``           — grid (row-tile, col-tile, section), accumulator
   per output tile; every col tile re-expands the section stripe.
-* ``incrs_spmm_reuse``  — grid (row-tile, section, col-tile); the stripe is
-  expanded ONCE into a VMEM scratch and reused across all col tiles, with
+* ``incrs_spmm_reuse``     — grid (row-tile, section, col-tile); the stripe
+  is expanded ONCE into a VMEM scratch and reused across all col tiles, with
   an output-stationary (bm, N) row-panel accumulator.
+* ``incrs_spmm_pipelined`` — grid (row-tile,); the dense RHS stays in HBM
+  and is streamed block-by-block through a double-buffered VMEM window
+  (manual DMA), so the next (section, bn) block is in flight while the MXU
+  contracts the current one. The (bm, N) out block is output-stationary in
+  VMEM for the whole row panel — partial sums never round-trip HBM.
 """
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp
@@ -44,6 +49,48 @@ from ._compat import CompilerParams
 # be bm*smax*section*4B — 16MB at bm=128/smax=128/section=256, i.e. a whole
 # TPU core's VMEM. Chunking the smax axis bounds it regardless of density.
 _ONEHOT_BYTES = 2 * 1024 * 1024
+
+# TPU f32 sublane granularity: row tiles are kept to multiples of this so
+# padded panels still map onto native (8, 128) vregs.
+_SUBLANE = 8
+
+
+def _resolve_row_tile(m: int, bm: int) -> tuple[int, int]:
+    """Resolve the row tile for an ``m``-row operand.
+
+    A row-sharded operand hands each device a panel that may be smaller
+    than one default row tile, or padded to a granularity the tile does
+    not divide. The old answer — ``math.gcd(bm, m)`` — silently collapses
+    to ``bm=1`` on odd panels (127 rows -> 127 one-row grid steps). New
+    rule: shrink ``bm`` to the sublane-rounded panel height, then pad the
+    panel up to a whole number of tiles. Returns ``(bm, padded_m)``.
+    """
+    bm = max(1, min(bm, -(-m // _SUBLANE) * _SUBLANE))
+    return bm, -(-m // bm) * bm
+
+
+def _pad_rows(idx: jnp.ndarray, val: jnp.ndarray,
+              padded_m: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Pad the row axis with empty stripes (idx=-1 rows expand to zeros)."""
+    m = idx.shape[0]
+    if padded_m == m:
+        return idx, val
+    pad = ((0, padded_m - m), (0, 0), (0, 0))
+    return (jnp.pad(idx, pad, constant_values=-1),
+            jnp.pad(val, pad))
+
+
+def _check_grid(m: int, n: int, bm: int, bn: int,
+                k: int, n_sections: int, section: int) -> None:
+    # ValueError, not assert: these guard user-supplied shapes and must
+    # survive `python -O` (same bug class PR 3 fixed in SpMMEngine.submit).
+    if m % bm != 0 or n % bn != 0:
+        raise ValueError(
+            f"operand ({m}, {n}) not tileable by (bm={bm}, bn={bn})")
+    if k != n_sections * section:
+        raise ValueError(
+            f"dense operand has {k} rows, InCRS stripes describe "
+            f"{n_sections} x {section} = {n_sections * section}")
 
 
 def _expand_stripe(idx, val, section: int) -> jnp.ndarray:
@@ -90,15 +137,11 @@ def incrs_spmm(idx: jnp.ndarray, val: jnp.ndarray, b: jnp.ndarray, *,
     """
     m, n_sections, smax = idx.shape
     k, n = b.shape
-    # Shard-local grid bounds: a row-sharded operand hands each device a
-    # panel that may be smaller than one default row tile (or padded to a
-    # granularity the tile does not divide) — shrink bm to the largest
-    # tile that tiles the panel instead of rejecting the shard.
-    bm = math.gcd(bm, m)
-    assert m % bm == 0 and n % bn == 0, ((m, n), (bm, bn))
-    assert k == n_sections * section, (k, n_sections, section)
-    grid = (m // bm, n // bn, n_sections)
-    return pl.pallas_call(
+    bm, mp = _resolve_row_tile(m, bm)
+    _check_grid(mp, n, bm, bn, k, n_sections, section)
+    idx, val = _pad_rows(idx, val, mp)
+    grid = (mp // bm, n // bn, n_sections)
+    out = pl.pallas_call(
         functools.partial(_kernel, section=section),
         grid=grid,
         in_specs=[
@@ -107,12 +150,13 @@ def incrs_spmm(idx: jnp.ndarray, val: jnp.ndarray, b: jnp.ndarray, *,
             pl.BlockSpec((section, bn), lambda i, j, s: (s, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((mp, n), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(idx, val, b)
+    return out[:m] if mp != m else out
 
 
 # ----------------------------------------------------------------------
@@ -165,11 +209,11 @@ def incrs_spmm_reuse(idx: jnp.ndarray, val: jnp.ndarray, b: jnp.ndarray, *,
     n_sections * n_col_tiles."""
     m, n_sections, smax = idx.shape
     k, n = b.shape
-    bm = math.gcd(bm, m)                   # shard-local grid bounds
-    assert m % bm == 0 and n % bn == 0, ((m, n), (bm, bn))
-    assert k == n_sections * section, (k, n_sections, section)
-    grid = (m // bm, n_sections, n // bn)
-    return pl.pallas_call(
+    bm, mp = _resolve_row_tile(m, bm)      # shard-local grid bounds
+    _check_grid(mp, n, bm, bn, k, n_sections, section)
+    idx, val = _pad_rows(idx, val, mp)
+    grid = (mp // bm, n_sections, n // bn)
+    out = pl.pallas_call(
         functools.partial(_kernel_reuse, section=section, bn=bn),
         grid=grid,
         in_specs=[
@@ -178,10 +222,115 @@ def incrs_spmm_reuse(idx: jnp.ndarray, val: jnp.ndarray, b: jnp.ndarray, *,
             pl.BlockSpec((section, bn), lambda i, s, j: (s, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, s, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((mp, n), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, section), jnp.float32),
                         pltpu.VMEM((bm, n), jnp.float32)],
         interpret=interpret,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
     )(idx, val, b)
+    return out[:m] if mp != m else out
+
+
+# ----------------------------------------------------------------------
+# Pipelined variant: one grid step per row tile. The dense RHS never
+# enters the automatic Pallas pipeline — it stays in HBM (memory_space=ANY)
+# and (section, bn) blocks are streamed through a double-buffered VMEM
+# window by manual async copies, so block t+1 is in flight while the MXU
+# contracts block t (SpArch's "stream the dense operand behind an
+# output-stationary accumulator"). The (bm, N) out block is the
+# accumulator itself: it is written once per (section, col-tile) step and
+# leaves VMEM only when the row panel is done — partial sums never
+# round-trip HBM. Stripes are still expanded once per (row-tile, section),
+# and the expansion of section s+? overlaps the DMA wait for its first
+# RHS block.
+
+
+def _kernel_pipelined(idx_ref, val_ref, b_hbm, o_ref, b_buf, sem,
+                      stripe_ref, *, section: int, bn: int, n_ct: int):
+    n_sections = idx_ref.shape[1]
+    total = n_sections * n_ct
+
+    def block_copy(slot, t):
+        s, j = t // n_ct, t % n_ct
+        return pltpu.make_async_copy(
+            b_hbm.at[pl.dslice(s * section, section), pl.dslice(j * bn, bn)],
+            b_buf.at[slot], sem.at[slot])
+
+    block_copy(0, 0).start()
+
+    def body(t, carry):
+        s, j = t // n_ct, t % n_ct
+
+        @pl.when(t + 1 < total)
+        def _prefetch():
+            block_copy((t + 1) % 2, t + 1).start()
+
+        # Expand the stripe for this section while the DMA for its first
+        # RHS block is (potentially) still in flight.
+        @pl.when(j == 0)
+        def _expand():
+            idx_s = pl.load(idx_ref, (slice(None), pl.dslice(s, 1),
+                                      slice(None)))
+            val_s = pl.load(val_ref, (slice(None), pl.dslice(s, 1),
+                                      slice(None)))
+            stripe_ref[...] = _expand_stripe(idx_s[:, 0, :], val_s[:, 0, :],
+                                             section)
+
+        block_copy(t % 2, t).wait()
+        contrib = jnp.dot(stripe_ref[...], b_buf[t % 2].astype(jnp.float32),
+                          preferred_element_type=jnp.float32)
+        sl = pl.dslice(j * bn, bn)
+
+        @pl.when(s == 0)
+        def _init():
+            o_ref[:, sl] = contrib
+
+        @pl.when(s != 0)
+        def _acc():
+            o_ref[:, sl] += contrib
+
+        return carry
+
+    jax.lax.fori_loop(0, total, body, 0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("section", "bm", "bn", "interpret"))
+def incrs_spmm_pipelined(idx: jnp.ndarray, val: jnp.ndarray,
+                         b: jnp.ndarray, *, section: int = 256,
+                         bm: int = 128, bn: int = 128,
+                         interpret: bool = False) -> jnp.ndarray:
+    """Same contract as ``incrs_spmm``; RHS is double-buffered from HBM.
+
+    VMEM bound per row tile: bm*N*4B out panel + bm*section*4B stripe +
+    2*section*bn RHS window — callers (``ops.spmm``/autotuner) fall back
+    to the baseline order when the panel would not fit. The dot shape and
+    section accumulation order match the other variants exactly, so
+    outputs are bitwise identical at equal (bm, bn).
+    """
+    m, n_sections, smax = idx.shape
+    k, n = b.shape
+    bm, mp = _resolve_row_tile(m, bm)
+    _check_grid(mp, n, bm, bn, k, n_sections, section)
+    idx, val = _pad_rows(idx, val, mp)
+    n_ct = n // bn
+    out = pl.pallas_call(
+        functools.partial(_kernel_pipelined, section=section, bn=bn,
+                          n_ct=n_ct),
+        grid=(mp // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n_sections, smax), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bm, n_sections, smax), lambda i: (i, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((2, section, bn), b.dtype),
+                        pltpu.SemaphoreType.DMA((2,)),
+                        pltpu.VMEM((bm, section), jnp.float32)],
+        interpret=interpret,
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary",)),
+    )(idx, val, b)
+    return out[:m] if mp != m else out

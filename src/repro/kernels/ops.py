@@ -16,7 +16,6 @@ the backend.
 from __future__ import annotations
 
 import dataclasses
-import math
 import warnings
 import weakref
 from typing import Dict, Tuple
@@ -37,8 +36,10 @@ from .flash_attention import flash_attention as _flash_kernel
 from .dense_mm import dense_mm as _dense_mm_kernel
 from .incrs_gather import incrs_gather as _incrs_gather_kernel
 from .incrs_spmm import incrs_spmm as _incrs_spmm_kernel
+from .incrs_spmm import incrs_spmm_pipelined as _incrs_spmm_pipelined_kernel
 from .incrs_spmm import incrs_spmm_reuse as _incrs_spmm_reuse_kernel
 from .index_match_spmm import index_match_spmm as _index_match_kernel
+from . import autotune as _autotune
 
 INTERPRET = jax.default_backend() != "tpu"
 
@@ -482,8 +483,8 @@ def prepare_incrs_sharded(incrs: InCRS, mesh: Mesh, *, axis=None,
 
 def _spmm_incrs_sharded(a: InCRS | ShardedPreparedOperand, b, *,
                         mesh: Mesh | None = None, axis=None,
-                        pad_rows_to: int = 128, bn: int | None = None,
-                        variant: str = "auto",
+                        pad_rows_to: int = 128, bm: int = 128,
+                        bn: int | None = None, variant: str = "auto",
                         interpret: bool | None = None):
     """C = A @ B with A row-sharded across the mesh.
 
@@ -510,8 +511,10 @@ def _spmm_incrs_sharded(a: InCRS | ShardedPreparedOperand, b, *,
     rps, section = prep.rows_per_shard, prep.section
 
     def local(idx, val, bl):
+        # bm clamps to the shard-local panel inside _spmm_incrs (the
+        # per-shard tile can be narrower than the global default).
         p1 = PreparedOperand(idx[0], val[0], (rps, k), section)
-        return _spmm_incrs(p1, bl, bn=bn, variant=variant,
+        return _spmm_incrs(p1, bl, bm=bm, bn=bn, variant=variant,
                            interpret=interpret)
 
     spec0 = P(prep.axes)
@@ -522,10 +525,16 @@ def _spmm_incrs_sharded(a: InCRS | ShardedPreparedOperand, b, *,
 
 
 # ----------------------------------------------------------------------
-# Row-panel accumulator budget of the stripe-reuse variant (bm x Np f32
-# held in VMEM for a whole row tile) — beyond this, fall back to the
-# re-expanding order whose accumulator is one (bm, bn) tile.
-_REUSE_PANEL_BYTES = 2 * 1024 * 1024
+# Row-panel accumulator budget of the stripe-reuse/pipelined variants
+# (bm x Np f32 held in VMEM for a whole row tile) — beyond this, fall
+# back to the re-expanding order whose accumulator is one (bm, bn) tile.
+# Single source of truth lives in the autotuner (its feasibility filter
+# must agree with this dispatch gate).
+_REUSE_PANEL_BYTES = _autotune.PANEL_BYTES
+
+_INCRS_KERNELS = {"expand": _incrs_spmm_kernel,
+                  "reuse": _incrs_spmm_reuse_kernel,
+                  "pipelined": _incrs_spmm_pipelined_kernel}
 
 
 def _spmm_incrs(a: InCRS | PreparedOperand, b, *, bm: int = 128,
@@ -544,25 +553,30 @@ def _spmm_incrs(a: InCRS | PreparedOperand, b, *, bm: int = 128,
     ``variant`` picks the grid order (see ``kernels/incrs_spmm.py``):
     "expand" re-expands the stripe per col tile, "reuse" expands once per
     (row tile, section) and reuses it across col tiles behind an
-    output-stationary row-panel accumulator. "auto" (default) picks by
-    shape: reuse when the col-tile count makes re-expansion the dominant
-    waste (>= 4 tiles, per ``kernel_bench.py``) and the row panel fits the
-    VMEM budget.
+    output-stationary row-panel accumulator, "pipelined" additionally
+    double-buffers the RHS stream from HBM. "auto" (default) first
+    consults the autotuner's tuning cache for this problem shape (a
+    ``sparse.api.plan``-tuned config or a prior ``kernels.autotune.tune``
+    run); with no tuned entry it picks by the autotuner's cycle-level
+    cost model (one-time log says which variant won and why).
     """
-    if variant not in ("auto", "expand", "reuse"):
-        raise ValueError(f"variant must be 'auto', 'expand' or 'reuse', "
-                         f"got {variant!r}")
+    if variant not in ("auto", "expand", "reuse", "pipelined"):
+        raise ValueError(f"variant must be 'auto', 'expand', 'reuse' or "
+                         f"'pipelined', got {variant!r}")
     interpret = INTERPRET if interpret is None else interpret
     prep = a if isinstance(a, PreparedOperand) else \
         prepare_incrs(a, pad_rows_to=bm)
-    # Shard-local panels (row-sharded operands) can be narrower than one
-    # default row tile, or padded to a sub-128 granularity that 128 does
-    # not divide — shrink bm to the largest tile that tiles the panel.
-    bm = math.gcd(bm, prep.padded_rows)
-    assert prep.padded_rows % bm == 0, (prep.padded_rows, bm)
     m, k = prep.shape
     k2, n = b.shape
-    assert k == k2, (prep.shape, b.shape)
+    if k != k2:
+        raise ValueError(f"inner dims disagree: A is {prep.shape}, "
+                         f"B is {b.shape}")
+    if variant == "auto":
+        tuned = _autotune.lookup(_autotune.cache_key(
+            prep.padded_rows, prep.n_sections, prep.idx.shape[2],
+            prep.section, n, _autotune.backend_name(interpret)))
+        if tuned is not None and bn is None:
+            variant, bm, bn = tuned.variant, tuned.bm, tuned.bn
     if bn is None:
         # Fewest ~512-wide tiles, then shrink bn to the 128-multiple that
         # just covers them — bounds padding waste at <128 cols/tile instead
@@ -573,12 +587,12 @@ def _spmm_incrs(a: InCRS | PreparedOperand, b, *, bm: int = 128,
     kp = prep.n_sections * prep.section
     np_ = -(-n // bn) * bn
     if variant == "auto":
-        variant = "reuse" if (np_ // bn >= 4
-                              and bm * np_ * 4 <= _REUSE_PANEL_BYTES) \
-            else "expand"
+        variant = _autotune.model_pick_variant(
+            prep.padded_rows, np_, n_sections=prep.n_sections,
+            smax=prep.idx.shape[2], section=prep.section, bm=bm, bn=bn,
+            interpret=interpret)
     b = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
-    kernel = _incrs_spmm_reuse_kernel if variant == "reuse" \
-        else _incrs_spmm_kernel
+    kernel = _INCRS_KERNELS[variant]
     out = kernel(prep.idx, prep.val, b, section=prep.section,
                  bm=bm, bn=bn, interpret=interpret)
     return out[:m, :n]
@@ -623,7 +637,7 @@ def spmm(a, b, *, mesh: Mesh | None = None, axis=None, rounds: int = 128,
     sparsity lifecycle on top.
     """
     if isinstance(a, ShardedPreparedOperand):
-        return _spmm_incrs_sharded(a, b, bn=bn, variant=variant,
+        return _spmm_incrs_sharded(a, b, bm=bm, bn=bn, variant=variant,
                                    interpret=interpret)
     if isinstance(a, (PreparedOperand, InCRS)):
         if mesh is not None:
@@ -633,8 +647,9 @@ def spmm(a, b, *, mesh: Mesh | None = None, axis=None, rounds: int = 128,
                     "PreparedOperand — pass the raw InCRS with mesh=, or "
                     "a ShardedPreparedOperand")
             return _spmm_incrs_sharded(a, b, mesh=mesh, axis=axis,
-                                       pad_rows_to=pad_rows_to, bn=bn,
-                                       variant=variant, interpret=interpret)
+                                       pad_rows_to=pad_rows_to, bm=bm,
+                                       bn=bn, variant=variant,
+                                       interpret=interpret)
         return _spmm_incrs(a, b, bm=bm, bn=bn, variant=variant,
                            interpret=interpret)
     if isinstance(a, BSR):

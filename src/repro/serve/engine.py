@@ -179,13 +179,13 @@ class SpMMEngine:
         ``linear.bound()`` / ``plan.bind(values)``). Passing ``mesh``
         (with optional ``shard_axis``) row-shards a raw InCRS across that
         mesh at construction. ``variant`` selects the kernel grid order
-        ("expand" | "reuse" | "auto" — see ``ops.spmm``); "auto" switches
-        to the stripe-reuse kernel when a wave is wide enough that
-        per-col-tile re-expansion would dominate."""
+        ("expand" | "reuse" | "pipelined" | "auto" — see ``ops.spmm``);
+        "auto" rides a tuned config from the autotune cache when one
+        exists for the wave shape, else the autotuner's cost model."""
         from ..kernels import ops
-        if variant not in ("auto", "expand", "reuse"):
-            raise ValueError(f"variant must be 'auto', 'expand' or "
-                             f"'reuse', got {variant!r}")
+        if variant not in ("auto", "expand", "reuse", "pipelined"):
+            raise ValueError(f"variant must be 'auto', 'expand', 'reuse' "
+                             f"or 'pipelined', got {variant!r}")
         self._ops = ops
         self.pattern_version: Optional[int] = None
         self._set_operand(a, mesh, shard_axis)

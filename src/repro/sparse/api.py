@@ -47,6 +47,7 @@ from jax.sharding import Mesh
 from ..core.bsr import BSR
 from ..core.crs import CRS
 from ..core.incrs import InCRS
+from ..kernels import autotune as _autotune
 from ..kernels import ops
 from . import linear as _lin
 from .pattern import (FamilyOps, SparsityPattern, get_pattern, magnitude_mask,
@@ -230,7 +231,8 @@ def _crs_plan_meta(pat: SparsityPattern, rounds: int) -> CRSPlanMeta:
                        pattern=pat)
 
 
-def _crs_call(meta: CRSPlanMeta, values, b, variant, interpret):
+def _crs_call(meta: CRSPlanMeta, values, b, variant, interpret,
+              config=None):
     if not isinstance(b, CRS):
         raise TypeError("a 'crs' plan runs the index-matching kernel "
                         "C = A @ B^T and needs B^T as a CRS")
@@ -258,7 +260,11 @@ class FormatAdapter:
     make: Callable                     # (w, spec, dtype) -> inner params
     apply: Optional[Callable]          # (inner, x) -> y; None: no layer
     call: Callable                     # (meta, values, b, variant,
-    #                                     interpret) -> C = A @ B
+    #                                     interpret, config=None) -> C;
+    #                                     config is an optional
+    #                                     autotune.TunedConfig the plan
+    #                                     carries (InCRS families honor
+    #                                     it, others may ignore it)
     pack: Callable                     # (meta, w) -> plan/layer values
     spec_of: Callable                  # (meta) -> SparseSpec
     plan_values: Callable = lambda inner: inner.values  # layer -> plan vals
@@ -368,24 +374,33 @@ def _make_crs(w, spec, dtype=jnp.float32):
 
 
 # ---- per-format plan execution ----------------------------------------
-def _dense_call(meta, values, b, variant, interpret):
+def _dense_call(meta, values, b, variant, interpret, config=None):
     return ops.spmm(values, b, interpret=interpret)
 
 
-def _bsr_call(meta, values, b, variant, interpret):
+def _bsr_call(meta, values, b, variant, interpret, config=None):
     return _lin._sparse_mm(values, jnp.asarray(b).T, meta).T
 
 
-def _incrs_call(meta, values, b, variant, interpret):
+def _incrs_call(meta, values, b, variant, interpret, config=None):
     prep = ops.PreparedOperand(meta.fwd_idx, values,
                                (meta.d_out, meta.d_in), meta.section)
+    if variant is None and config is not None:
+        # Plan-persisted tuned config: variant AND tile sizes, no per-call
+        # cache lookup or model evaluation.
+        return ops.spmm(prep, b, variant=config.variant, bm=config.bm,
+                        bn=config.bn, interpret=interpret)
     return ops.spmm(prep, b, variant=variant or "auto", interpret=interpret)
 
 
-def _incrs_sharded_call(meta, values, b, variant, interpret):
+def _incrs_sharded_call(meta, values, b, variant, interpret, config=None):
     prep = ops.ShardedPreparedOperand(
         meta.fwd_idx, values, (meta.d_out, meta.d_in), meta.section,
         meta.shard_width, meta.mesh, meta.axes)
+    if variant is None and config is not None:
+        # bm re-clamps to each shard-local panel inside the kernel.
+        return ops.spmm(prep, b, variant=config.variant, bm=config.bm,
+                        bn=config.bn, interpret=interpret)
     return ops.spmm(prep, b, variant=variant or "auto", interpret=interpret)
 
 
@@ -447,14 +462,66 @@ class MatmulPlan:
     ``pack`` turns a dense W (d_in, d_out) into the plan's packed values;
     ``bind`` closes over one values array, yielding the serving-operand
     view ``serve.SpMMEngine`` consumes.
+
+    ``tuned`` is an optional ``kernels.autotune.TunedConfig`` the plan
+    carries (attached by ``plan(..., tune=...)`` or ``MatmulPlan.tune``):
+    every execution then runs the tuned ``(variant, bm, bn)`` directly —
+    no per-call cache lookup, no cost-model evaluation. An explicit
+    ``variant=`` at call time overrides it.
     """
     spec: SparseSpec
     meta: Any                 # family meta; CRSPlanMeta; None for dense
+    tuned: Optional[_autotune.TunedConfig] = None
 
     def __call__(self, values, b, *, variant: Optional[str] = None,
                  interpret: Optional[bool] = None):
         return _adapter(self.spec).call(self.meta, values, b, variant,
-                                        interpret)
+                                        interpret, config=self.tuned)
+
+    # -- kernel tuning --------------------------------------------------
+    def _tuning_arrays(self):
+        """(idx, section, shard?) of the InCRS stripes this plan executes
+        with, or None for non-InCRS formats."""
+        meta = self.meta
+        if meta is None or not hasattr(meta, "fwd_idx"):
+            return None
+        idx = meta.fwd_idx
+        if idx.ndim == 4:              # sharded: tune the per-shard panel
+            idx = idx[0]
+        return idx, meta.section
+
+    def lookup_tuned(self, n_cols: int,
+                     interpret: Optional[bool] = None
+                     ) -> Optional[_autotune.TunedConfig]:
+        """Cached tuned config for an ``n_cols``-wide RHS, if one exists
+        (memory or disk) — never measures."""
+        arrs = self._tuning_arrays()
+        if arrs is None:
+            return None
+        idx, section = arrs
+        interpret = ops.INTERPRET if interpret is None else interpret
+        return _autotune.lookup(_autotune.cache_key(
+            idx.shape[0], idx.shape[1], idx.shape[2], section, n_cols,
+            _autotune.backend_name(interpret)))
+
+    def tune(self, n_cols: int, *, interpret: Optional[bool] = None,
+             reps: int = 3, persist: bool = True) -> "MatmulPlan":
+        """Measure-tune this plan's kernel for an ``n_cols``-wide RHS and
+        return a plan carrying the winning config (also persisted to the
+        tuning cache unless ``persist=False``). Values do not matter for
+        timing, so the sweep runs on zeros."""
+        arrs = self._tuning_arrays()
+        if arrs is None:
+            raise ValueError(f"format {self.spec.format!r} has no tunable "
+                             f"fused kernel")
+        idx, section = arrs
+        interpret = ops.INTERPRET if interpret is None else interpret
+        cfg = _autotune.tune(
+            idx, jnp.zeros(idx.shape, jnp.float32),
+            jnp.zeros((idx.shape[1] * section, n_cols), jnp.float32),
+            section=section, interpret=interpret, reps=reps,
+            persist=persist)
+        return dataclasses.replace(self, tuned=cfg)
 
     def pack(self, w) -> jnp.ndarray:
         """Dense W (d_in, d_out) -> packed plan values (for 'dense' the
@@ -507,7 +574,7 @@ class BoundPlan:
 
 
 def plan(spec: SparseSpec, rhs_shape: Optional[Tuple[int, ...]] = None, *,
-         mesh: Optional[Mesh] = None) -> MatmulPlan:
+         mesh: Optional[Mesh] = None, tune: str = "cache") -> MatmulPlan:
     """Build the static half of C = A @ B for ``spec`` — prep once,
     execute many.
 
@@ -517,7 +584,17 @@ def plan(spec: SparseSpec, rhs_shape: Optional[Tuple[int, ...]] = None, *,
     ``dense``. ``rhs_shape``, when given, is validated against the
     operand's K. ``mesh`` overrides/sets the spec's mesh (row-sharded
     InCRS).
+
+    ``tune`` decides how the plan picks kernel tiles when ``rhs_shape``
+    pins the RHS width (InCRS formats only): ``"cache"`` (default)
+    attaches a previously tuned config if the tuning cache has one —
+    free; ``"measure"`` runs the autotuner sweep now (cache hit included)
+    and attaches the winner; ``"off"`` attaches nothing (execution falls
+    back to per-call auto dispatch).
     """
+    if tune not in ("cache", "measure", "off"):
+        raise ValueError(f"tune must be 'cache', 'measure' or 'off', "
+                         f"got {tune!r}")
     if mesh is not None:
         spec = dataclasses.replace(spec, mesh=mesh)
     if spec.format == "dense" and spec.pattern is None and \
@@ -539,7 +616,16 @@ def plan(spec: SparseSpec, rhs_shape: Optional[Tuple[int, ...]] = None, *,
     if spec.format == "crs":
         return MatmulPlan(spec, _crs_plan_meta(pat, spec.rounds))
     inner = _adapter(spec).make(np.zeros(pat.shape, np.float32), spec)
-    return MatmulPlan(spec, inner.meta)
+    built = MatmulPlan(spec, inner.meta)
+    if spec.format == "incrs" and rhs_shape is not None \
+            and len(rhs_shape) >= 2 and tune != "off":
+        n_cols = int(rhs_shape[1])
+        if tune == "measure":
+            built = built.tune(n_cols)
+        else:
+            built = dataclasses.replace(
+                built, tuned=built.lookup_tuned(n_cols))
+    return built
 
 
 def plan_for_operand(a, spec: Optional[SparseSpec] = None) -> BoundPlan:

@@ -1,9 +1,29 @@
+import os
 import warnings
 
 import numpy as np
 import pytest
 
 warnings.filterwarnings("ignore", category=DeprecationWarning)
+
+# Hermetic kernel tuning: never let a developer's ~/.cache tuning file
+# leak configs into (or get clobbered by) test runs. One throwaway path
+# per test session; the autouse fixture below clears the in-process memo
+# between tests (tests that need a specific cache file monkeypatch the
+# env var themselves).
+import tempfile  # noqa: E402
+
+os.environ.setdefault(
+    "REPRO_AUTOTUNE_CACHE",
+    os.path.join(tempfile.mkdtemp(prefix="repro-autotune-test-"),
+                 "cache.json"))
+
+
+@pytest.fixture(autouse=True)
+def _fresh_autotune_memory():
+    from repro.kernels import autotune
+    autotune.clear_memory_cache()
+    yield
 
 # NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 device.
 # Multi-device tests spawn subprocesses with their own flags
