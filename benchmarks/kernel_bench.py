@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import vmem
 from repro.core.bsr import BSR, magnitude_block_mask
 from repro.data.datasets import DatasetSpec, synthesize
 from repro.kernels import autotune, ops
@@ -179,6 +180,11 @@ def run(seed: int = 0):
         cost = autotune.kernel_cost(variant, mrows, np_, n_sections=nsec,
                                     smax=smax, section=prep.section,
                                     bm=bm, bn=bn, nnz=a_sp.nnz)
+        # Static VMEM footprint from the same model the checker proves
+        # against (analysis.vmem) — roofline.py --kernels reports it.
+        foot = vmem.incrs_footprint(variant, m=mrows, n=n_cols, bm=bm,
+                                    bn=bn, n_sections=nsec, smax=smax,
+                                    section=prep.section)
         return {"variant": variant, "bm": bm, "bn": bn,
                 "predicted_us": round(autotune.predict_us(
                     variant, mrows, np_, n_sections=nsec, smax=smax,
@@ -187,7 +193,9 @@ def run(seed: int = 0):
                 "cycles": cost.cycles, "grid_steps": cost.grid_steps,
                 "flops": cost.flops, "hbm_bytes": cost.hbm_bytes,
                 "compute_cycles": cost.compute_cycles,
-                "memory_cycles": cost.memory_cycles}
+                "memory_cycles": cost.memory_cycles,
+                "vmem_bytes": foot.total_bytes,
+                "vmem_largest_term": foot.largest.name}
 
     bw = jnp.asarray(rng.normal(size=(spec.n, 1024)).astype(np.float32))
     expand_us = _time(
@@ -285,6 +293,43 @@ def run(seed: int = 0):
         else:
             os.environ[autotune.CACHE_ENV] = saved_env
         autotune.clear_memory_cache()
+
+    # Static VMEM prefilter economics: at a WIDE (8192-col) RHS the
+    # reuse/pipelined row panels at bm=128 are 4 MiB — over the 2 MiB
+    # panel working-set budget — so the checker (analysis.vmem) drops
+    # them from the sweep before anything is measured. Same cold tune,
+    # fresh caches, with and without the filter; the sweep record's
+    # skipped_infeasible list is the proof the skips happened.
+    bwide = jnp.asarray(rng.normal(size=(spec.n, 8192)).astype(np.float32))
+    autotune.clear_memory_cache()
+    t0 = time.perf_counter()
+    autotune.tune(prep.idx, prep.val, bwide, section=inc.section,
+                  interpret=ops.INTERPRET, reps=1, persist=False)
+    filt_us = (time.perf_counter() - t0) * 1e6
+    sweep_on = autotune.LAST_SWEEP
+    autotune.clear_memory_cache()
+    t0 = time.perf_counter()
+    autotune.tune(prep.idx, prep.val, bwide, section=inc.section,
+                  interpret=ops.INTERPRET, reps=1, persist=False,
+                  prefilter=False)
+    nofilt_us = (time.perf_counter() - t0) * 1e6
+    sweep_off = autotune.LAST_SWEEP
+    autotune.clear_memory_cache()
+    rows.append(("autotune_prefilter_sweep", filt_us,
+                 f"skipped={len(sweep_on.skipped_infeasible)};"
+                 f"measured={len(sweep_on.measured)};cols=8192"))
+    comparisons["autotune_prefilter"] = {
+        "filtered_us": filt_us,
+        "unfiltered_us": nofilt_us,
+        "speedup": nofilt_us / max(filt_us, 1e-9),
+        "n_candidates": sweep_on.n_candidates,
+        "n_skipped_infeasible": len(sweep_on.skipped_infeasible),
+        "skipped_infeasible": sweep_on.skipped_infeasible,
+        "measured_filtered": sweep_on.measured,
+        "measured_unfiltered": sweep_off.measured,
+        "workload": f"{spec.m}x{spec.n} d={spec.density} @ 8192 cols, "
+                    f"cold tune with/without static VMEM prefilter",
+    }
 
     # Row-sharded fused SpMM across fake host devices: each count runs in a
     # subprocess (XLA fixes the device count at backend init, so the parent

@@ -123,6 +123,10 @@ def analyze_kernels(bench_path: str) -> List[Dict]:
             "bound": ("memory" if model.get("memory_cycles", 0)
                       > model.get("compute_cycles", 0) else "compute"),
             "roofline_fraction": achieved / ceiling if ceiling else 0.0,
+            # Static VMEM footprint of the launch, from the same
+            # analysis.vmem model the CI checker proves budgets against.
+            "vmem_bytes": model.get("vmem_bytes"),
+            "vmem_largest_term": model.get("vmem_largest_term"),
         })
     return rows
 
@@ -141,21 +145,28 @@ def main(argv=None):
         rows = analyze_kernels(args.kernels)
         if args.md:
             print("| kernel | variant | measured µs | predicted µs | "
-                  "overhead | bound | GFLOP/s | roofline frac |")
-            print("|---|---|---|---|---|---|---|---|")
+                  "overhead | bound | GFLOP/s | roofline frac | "
+                  "VMEM KiB (largest term) |")
+            print("|---|---|---|---|---|---|---|---|---|")
             for r in rows:
+                vm = r.get("vmem_bytes")
+                vmcol = (f"{vm / 1024:.0f} ({r['vmem_largest_term']})"
+                         if vm else "—")
                 print(f"| {r['name']} | {r['variant']} | {r['us']:.0f} | "
                       f"{r['predicted_us']:.0f} | "
                       f"{r['overhead_factor']:.2f}x | {r['bound']} | "
                       f"{r['achieved_gflops']:.3g} | "
-                      f"{r['roofline_fraction']:.2e} |")
+                      f"{r['roofline_fraction']:.2e} | {vmcol} |")
         else:
             for r in rows:
+                vm = r.get("vmem_bytes")
+                vmtail = (f",vmem_kib={vm / 1024:.0f},"
+                          f"vmem_top={r['vmem_largest_term']}" if vm else "")
                 print(f"kernel_roofline,{r['name']},variant={r['variant']},"
                       f"us={r['us']:.0f},predicted={r['predicted_us']:.0f},"
                       f"overhead={r['overhead_factor']:.2f}x,"
                       f"bound={r['bound']},"
-                      f"frac={r['roofline_fraction']:.2e}")
+                      f"frac={r['roofline_fraction']:.2e}{vmtail}")
         return rows
     rows = analyze(args.roofline_json, args.dryrun_json)
     if args.md:

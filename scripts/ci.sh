@@ -6,6 +6,12 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# Static gate FIRST — kernel-invariant verifier + repo lint
+# (VMEM budgets, DMA pairing of the pipelined kernel, -O-safe
+# validation, legacy names). Any finding fails CI before a single
+# test or kernel runs: `python -m repro.analysis` to reproduce.
+python -m repro.analysis --check
+
 # DeprecationWarnings are ERRORS: src/, examples/ and benchmarks/ are
 # migrated off the legacy pre-SparseSpec names; only the shims themselves
 # and the parity suite (tests/test_api.py, which catches the warnings with

@@ -1,0 +1,27 @@
+"""Static analysis: kernel-invariant verifier + repo lint.
+
+Prove resource budgets and code-health invariants *before* anything
+runs — the software equivalent of the paper's statically-sized mesh:
+
+* :mod:`repro.analysis.vmem` — symbolic per-variant VMEM footprint
+  model (the single source of truth for "does this config fit?");
+* :mod:`repro.analysis.kernel_check` — config feasibility
+  (:func:`check_incrs_config` / :class:`KernelConfigError`), the DMA
+  start/wait pairing verifier for the double-buffered kernel, and the
+  footprint-model drift guard;
+* :mod:`repro.analysis.lint` — AST rules for the repo's recurring bug
+  classes (``no-bare-assert``, ``validation-survives-O``,
+  ``pytree-static-meta``, ``no-legacy-names``).
+
+Run the whole gate with ``python -m repro.analysis --check`` (as
+``scripts/ci.sh`` does). Pure Python: importing this package pulls in
+no jax.
+"""
+from .kernel_check import (KernelConfigError, Violation,  # noqa: F401
+                           check_incrs_config, require_feasible,
+                           check_dma_pairing, check_scratch_drift,
+                           check_kernel_invariants, BUDGET_RULES)
+from .lint import Finding, lint_source, lint_file, lint_tree  # noqa: F401
+from .vmem import (DEFAULT_VMEM_BUDGET, PANEL_BYTES,  # noqa: F401
+                   VmemFootprint, VmemTerm, vmem_budget,
+                   incrs_footprint, bsr_footprint, dense_footprint)

@@ -1,0 +1,60 @@
+"""``python -m repro.analysis`` — run the full static gate.
+
+Combines the repo lint (``analysis.lint``) with the kernel-source
+invariants (DMA pairing of the double-buffered kernel + footprint-model
+drift) and prints one ``file:line rule message`` line per finding.
+
+``--check`` makes any finding a non-zero exit (the CI gate in
+``scripts/ci.sh``); without it the report is informational.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from . import kernel_check, lint
+
+
+def run(root: str) -> list:
+    findings = lint.lint_tree(root)
+    kpath = os.path.relpath(kernel_check.kernel_source_path(),
+                            root).replace(os.sep, "/")
+    for kf in kernel_check.check_kernel_invariants():
+        findings.append(lint.Finding(kpath, kf.line, kf.rule, kf.message))
+    return findings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="kernel-invariant verifier + repo lint")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero if any finding (CI gate)")
+    ap.add_argument("--root", default=".",
+                    help="repo root to lint (default: cwd)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the lint rule table and exit")
+    args = ap.parse_args(argv)
+    if args.list_rules:
+        for rule in lint.ALL_RULES:
+            print(f"{rule:<22} {lint.RULE_DESCRIPTIONS[rule]}")
+        for rule in (kernel_check.RULE_VMEM, kernel_check.RULE_PANEL,
+                     kernel_check.RULE_ALIGN, kernel_check.RULE_GRID,
+                     kernel_check.RULE_DMA_READ,
+                     kernel_check.RULE_DMA_WAIT,
+                     kernel_check.RULE_DMA_LEAK,
+                     kernel_check.RULE_DRIFT):
+            print(rule)
+        return 0
+    findings = run(args.root)
+    for f in findings:
+        print(f.format())
+    n = len(findings)
+    print(f"repro.analysis: {n} finding{'s' if n != 1 else ''}",
+          file=sys.stderr)
+    return 1 if (findings and args.check) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,576 @@
+"""Kernel-invariant static verifier: prove a config fits before it runs.
+
+Three layers, all pure Python / AST (no jax import):
+
+1. **Config feasibility** — ``check_incrs_config`` turns the symbolic
+   VMEM footprints of ``analysis.vmem`` plus tile-alignment and
+   grid-bounds rules into a list of structured ``Violation``s;
+   ``require_feasible`` raises a ``KernelConfigError`` naming the
+   violated budget term. ``kernels.autotune`` prefilters its sweep with
+   this, ``sparse.api.plan`` and the serve engine validate configs
+   through it, and ``kernels.ops`` gates explicit variant requests on
+   the hard budget.
+
+2. **DMA pairing** — ``check_dma_pairing`` walks the AST of the
+   manually double-buffered kernel (``_kernel_pipelined``), extracts
+   every ``pltpu.make_async_copy(...).start()`` / ``.wait()`` and every
+   read of the destination buffer, then symbolically executes the
+   ``fori_loop`` (slot expressions like ``(t + 1) % 2`` evaluated at
+   concrete trip counts) to prove: every started copy is waited exactly
+   once per double-buffer slot, no slot is started twice while in
+   flight, and no slot is read before its wait. The same race/deadlock
+   discipline SpArch's merge buffers rely on, checked statically.
+
+3. **Model drift** — ``check_scratch_drift`` parses the real
+   ``scratch_shapes`` of each InCRS kernel entry point and compares
+   against ``vmem.EXPECTED_SCRATCH``, so the footprint model and the
+   kernels cannot silently diverge.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from . import vmem
+
+# Rule identifiers (stable: tests and CI output key on these).
+RULE_VMEM = "vmem-budget"
+RULE_PANEL = "panel-budget"
+RULE_ALIGN = "tile-alignment"
+RULE_GRID = "grid-bounds"
+RULE_DMA_READ = "dma-read-before-wait"
+RULE_DMA_WAIT = "dma-wait-without-start"
+RULE_DMA_LEAK = "dma-unwaited-start"
+RULE_DMA_DOUBLE = "dma-double-start"
+RULE_DMA_OPAQUE = "dma-unverifiable"
+RULE_DRIFT = "vmem-model-drift"
+
+BUDGET_RULES = (RULE_VMEM, RULE_PANEL)
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One provable reason a kernel configuration cannot (or should not)
+    run: the rule that fired, the offending budget term if any, and the
+    measured-vs-allowed byte counts."""
+    rule: str
+    message: str
+    term: Optional[str] = None
+    nbytes: Optional[int] = None
+    limit: Optional[int] = None
+
+    def format(self) -> str:
+        extra = ""
+        if self.nbytes is not None and self.limit is not None:
+            extra = f" ({self.nbytes} B > {self.limit} B)"
+        return f"{self.rule}: {self.message}{extra}"
+
+
+class KernelConfigError(ValueError):
+    """A kernel configuration provably violates a static budget.
+
+    Raised *before* any kernel launch (plan time / dispatch time), with
+    the full list of structured :class:`Violation` objects on
+    ``.violations`` — the first one names the violated budget term.
+    """
+
+    def __init__(self, violations: Sequence[Violation],
+                 context: str = ""):
+        self.violations = tuple(violations)
+        head = context + ": " if context else ""
+        body = "; ".join(v.format() for v in self.violations) \
+            or "infeasible kernel configuration"
+        super().__init__(head + body)
+
+
+# ----------------------------------------------------------------------
+# Layer 1: config feasibility.
+def check_incrs_config(variant: str, *, m: int, n: int, bm: int, bn: int,
+                       n_sections: int, smax: int, section: int,
+                       k: Optional[int] = None,
+                       budget: Optional[int] = None,
+                       panel_budget: int = vmem.PANEL_BYTES,
+                       rules: Optional[Sequence[str]] = None
+                       ) -> List[Violation]:
+    """All static violations of one fused-SpMM ``(variant, bm, bn)``
+    config against an ``(m x k_sparse) @ (k x n)`` problem.
+
+    ``rules`` restricts which rule families fire (e.g. auto-dispatch
+    only cares about :data:`BUDGET_RULES`); default is everything.
+    """
+    out: List[Violation] = []
+
+    def want(rule: str) -> bool:
+        return rules is None or rule in rules
+
+    eff_bm, mp = vmem.resolve_row_tile(m, bm)
+    np128 = -(-n // vmem.LANE) * vmem.LANE
+
+    # Tile alignment: row tiles on sublane multiples, col tiles on lane
+    # multiples, and no col tile wider than the lane-padded operand.
+    if want(RULE_ALIGN):
+        if eff_bm % vmem.SUBLANE != 0 and eff_bm != mp:
+            out.append(Violation(
+                RULE_ALIGN,
+                f"bm={eff_bm} is not a multiple of the f32 sublane "
+                f"({vmem.SUBLANE}); padded panels will not map onto "
+                f"native (8, 128) vregs"))
+        if bn % vmem.LANE != 0:
+            out.append(Violation(
+                RULE_ALIGN,
+                f"bn={bn} is not a multiple of the lane width "
+                f"({vmem.LANE})"))
+        if bn > np128:
+            out.append(Violation(
+                RULE_ALIGN,
+                f"bn={bn} is wider than the lane-padded operand "
+                f"(Np={np128}); the tile would be mostly padding"))
+
+    # Section divisibility / grid bounds.
+    if want(RULE_GRID):
+        if section <= 0 or n_sections <= 0:
+            out.append(Violation(
+                RULE_GRID, f"non-positive section geometry "
+                f"(n_sections={n_sections}, section={section})"))
+        if k is not None and k != n_sections * section:
+            out.append(Violation(
+                RULE_GRID,
+                f"dense operand has {k} rows but the InCRS stripes "
+                f"describe {n_sections} x {section} = "
+                f"{n_sections * section}"))
+        if smax > section:
+            out.append(Violation(
+                RULE_GRID,
+                f"smax={smax} exceeds section={section}: a section "
+                f"stripe cannot hold more non-zeros than columns"))
+    if out:
+        # Geometry is broken; footprints below would be garbage.
+        return out
+
+    fp = vmem.incrs_footprint(variant, m=m, n=n, bm=bm, bn=bn,
+                              n_sections=n_sections, smax=smax,
+                              section=section)
+
+    # Working-set heuristic: the output-stationary row panel (and the
+    # pipelined variant's stripe + streaming window) must leave VMEM
+    # headroom for the automatic pipeline.
+    if want(RULE_PANEL):
+        panel = fp.term("row_panel_accumulator")
+        if panel is not None and panel.single_bytes > panel_budget:
+            out.append(Violation(
+                RULE_PANEL,
+                f"{variant}: row_panel_accumulator "
+                f"{panel.formula.replace(f'{vmem.PIPELINE_BUFFERS}x', '')}"
+                f" exceeds the panel working-set budget",
+                term="row_panel_accumulator",
+                nbytes=panel.single_bytes, limit=panel_budget))
+        if variant == "pipelined":
+            stream = fp.term("rhs_stream_window")
+            stripe = fp.term("stripe_scratch")
+            stream_set = stream.nbytes + stripe.nbytes
+            if stream_set > 2 * panel_budget:
+                out.append(Violation(
+                    RULE_PANEL,
+                    f"pipelined: stripe + double-buffered RHS window "
+                    f"exceed the streaming working-set budget",
+                    term="rhs_stream_window",
+                    nbytes=stream_set, limit=2 * panel_budget))
+
+    # Hard physical budget: the whole launch must fit in VMEM.
+    if want(RULE_VMEM):
+        hard = vmem.vmem_budget(budget)
+        if fp.total_bytes > hard:
+            big = fp.largest
+            out.append(Violation(
+                RULE_VMEM,
+                f"{variant}: total VMEM footprint exceeds the "
+                f"{hard // (1024 * 1024)} MiB core budget (largest "
+                f"term: {big.name} {big.formula} = {big.nbytes} B)",
+                term=big.name, nbytes=fp.total_bytes, limit=hard))
+    return out
+
+
+def require_feasible(variant: str, *, m: int, n: int, bm: int, bn: int,
+                     n_sections: int, smax: int, section: int,
+                     k: Optional[int] = None,
+                     budget: Optional[int] = None,
+                     panel_budget: int = vmem.PANEL_BYTES,
+                     rules: Optional[Sequence[str]] = None,
+                     context: str = "") -> None:
+    """Raise :class:`KernelConfigError` if the config has violations."""
+    vs = check_incrs_config(variant, m=m, n=n, bm=bm, bn=bn,
+                            n_sections=n_sections, smax=smax,
+                            section=section, k=k, budget=budget,
+                            panel_budget=panel_budget, rules=rules)
+    if vs:
+        raise KernelConfigError(vs, context=context)
+
+
+# ----------------------------------------------------------------------
+# Layer 2: DMA pairing (AST + symbolic loop execution).
+@dataclasses.dataclass(frozen=True)
+class DmaFinding:
+    rule: str
+    line: int
+    message: str
+
+    def format(self) -> str:
+        return f"{self.rule} (line {self.line}): {self.message}"
+
+
+def kernel_source_path() -> str:
+    """Path of the module owning the manually double-buffered kernel."""
+    return os.path.join(os.path.dirname(os.path.dirname(__file__)),
+                        "kernels", "incrs_spmm.py")
+
+
+def _load_kernel_source(source: Optional[str]) -> str:
+    if source is not None:
+        return source
+    with open(kernel_source_path()) as f:
+        return f.read()
+
+
+_OPAQUE = object()
+
+
+def _ev(expr: ast.expr, env: Dict[str, int]):
+    """Best-effort evaluation of an index/condition expression under a
+    concrete environment; returns ``_OPAQUE`` for anything symbolic."""
+    try:
+        code = compile(ast.fix_missing_locations(
+            ast.Expression(body=expr)), "<dma-check>", "eval")
+        return eval(code, {"__builtins__": {}}, dict(env))
+    except Exception:
+        return _OPAQUE
+
+
+def _terminal_name(node: ast.expr) -> Optional[str]:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+@dataclasses.dataclass
+class _CopyHelper:
+    """A local ``def helper(slot, ...)`` returning a make_async_copy."""
+    name: str
+    slot_param: int                    # positional index of the slot arg
+    dst_buf: str                       # VMEM destination buffer name
+
+
+def _find_copy_helpers(fn: ast.FunctionDef) -> Dict[str, _CopyHelper]:
+    helpers: Dict[str, _CopyHelper] = {}
+    for stmt in fn.body:
+        if not isinstance(stmt, ast.FunctionDef):
+            continue
+        for ret in ast.walk(stmt):
+            if not (isinstance(ret, ast.Return)
+                    and isinstance(ret.value, ast.Call)
+                    and _terminal_name(ret.value.func)
+                    == "make_async_copy"):
+                continue
+            call = ret.value
+            # make_async_copy(src, dst, sem): find which helper param
+            # indexes the destination's ``.at[...]`` — that's the slot.
+            params = [a.arg for a in stmt.args.args]
+            dst_buf, slot_param = None, None
+            for argpos, arg in enumerate(call.args):
+                if not (isinstance(arg, ast.Subscript)
+                        and isinstance(arg.value, ast.Attribute)
+                        and arg.value.attr == "at"
+                        and isinstance(arg.value.value, ast.Name)):
+                    continue
+                idx = arg.slice
+                names = {n.id for n in ast.walk(idx)
+                         if isinstance(n, ast.Name)}
+                for pi, p in enumerate(params):
+                    if p in names:
+                        if argpos == 1:          # dst is the 2nd operand
+                            dst_buf = arg.value.value.id
+                        slot_param = pi
+            if dst_buf is not None and slot_param is not None:
+                helpers[stmt.name] = _CopyHelper(stmt.name, slot_param,
+                                                 dst_buf)
+    return helpers
+
+
+@dataclasses.dataclass
+class _Event:
+    kind: str                          # "start" | "wait" | "read"
+    slot: ast.expr
+    line: int
+    cond: Optional[ast.expr] = None    # pl.when guard, if any
+
+
+def _collect_events(stmts: Sequence[ast.stmt],
+                    helpers: Dict[str, _CopyHelper],
+                    skip_defs: Sequence[str],
+                    cond: Optional[ast.expr] = None) -> List[_Event]:
+    """Events in trace order. ``@pl.when(c)``-decorated inner defs
+    execute conditionally at their definition site, so their events are
+    collected in place with the guard attached."""
+    dst_bufs = {h.dst_buf for h in helpers.values()}
+    events: List[_Event] = []
+    for stmt in stmts:
+        if isinstance(stmt, ast.FunctionDef):
+            if stmt.name in skip_defs or stmt.name in helpers:
+                continue
+            guard = None
+            for dec in stmt.decorator_list:
+                if (isinstance(dec, ast.Call)
+                        and _terminal_name(dec.func) == "when"
+                        and dec.args):
+                    guard = dec.args[0]
+            if cond is not None and guard is not None:
+                guard = ast.BoolOp(op=ast.And(), values=[cond, guard])
+            elif guard is None:
+                guard = cond
+            events.extend(_collect_events(stmt.body, helpers, skip_defs,
+                                          cond=guard))
+            continue
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in ("start", "wait") \
+                    and isinstance(node.func.value, ast.Call):
+                inner = node.func.value
+                name = _terminal_name(inner.func)
+                if name in helpers:
+                    h = helpers[name]
+                    if len(inner.args) > h.slot_param:
+                        events.append(_Event(
+                            node.func.attr, inner.args[h.slot_param],
+                            node.lineno, cond))
+            elif isinstance(node, ast.Subscript) \
+                    and isinstance(node.value, ast.Name) \
+                    and node.value.id in dst_bufs \
+                    and isinstance(node.ctx, ast.Load):
+                events.append(_Event("read", node.slice, node.lineno,
+                                     cond))
+    return events
+
+
+def _exec_assigns(stmts: Sequence[ast.stmt], env: Dict[str, int]) -> None:
+    """Fold simple (possibly tuple) assignments into ``env`` in order,
+    skipping anything not statically evaluable."""
+    for stmt in stmts:
+        if not (isinstance(stmt, ast.Assign) and len(stmt.targets) == 1):
+            continue
+        tgt = stmt.targets[0]
+        if isinstance(tgt, ast.Name):
+            val = _ev(stmt.value, env)
+            if val is not _OPAQUE:
+                env[tgt.id] = val
+        elif isinstance(tgt, ast.Tuple) and isinstance(stmt.value,
+                                                       ast.Tuple) \
+                and len(tgt.elts) == len(stmt.value.elts):
+            for t_el, v_el in zip(tgt.elts, stmt.value.elts):
+                if isinstance(t_el, ast.Name):
+                    val = _ev(v_el, env)
+                    if val is not _OPAQUE:
+                        env[t_el.id] = val
+
+
+def check_dma_pairing(source: Optional[str] = None,
+                      func: str = "_kernel_pipelined",
+                      trip_counts: Tuple[int, int] = (3, 2)
+                      ) -> List[DmaFinding]:
+    """Prove the double-buffered DMA protocol of ``func``.
+
+    Symbolically executes the kernel's ``fori_loop`` for a concrete
+    small trip count (``n_sections, n_ct = trip_counts``), evaluating
+    every slot expression, ``pl.when`` guard and loop bound, and checks:
+
+    * no started copy is left unwaited at loop exit (deadlock/leak),
+    * no ``.wait()`` fires on a slot with no copy in flight (hang),
+    * no slot is started again while its previous copy is in flight
+      (overwrite race),
+    * no read of the destination buffer touches a slot whose copy is
+      still in flight (data race).
+
+    Returns an empty list when the protocol is sound.
+    """
+    src = _load_kernel_source(source)
+    tree = ast.parse(src)
+    fn = next((node for node in ast.walk(tree)
+               if isinstance(node, ast.FunctionDef)
+               and node.name == func), None)
+    if fn is None:
+        return [DmaFinding(RULE_DMA_OPAQUE, 0,
+                           f"kernel function {func!r} not found")]
+    helpers = _find_copy_helpers(fn)
+    if not helpers:
+        return [DmaFinding(
+            RULE_DMA_OPAQUE, fn.lineno,
+            f"{func}: no make_async_copy helper found — the DMA "
+            f"protocol cannot be verified")]
+
+    # Loop discovery: jax.lax.fori_loop(lo, hi, body, init).
+    loop_call = next(
+        (node for node in ast.walk(fn)
+         if isinstance(node, ast.Call)
+         and _terminal_name(node.func) == "fori_loop"), None)
+    if loop_call is None or len(loop_call.args) < 3 \
+            or not isinstance(loop_call.args[2], ast.Name):
+        return [DmaFinding(RULE_DMA_OPAQUE, fn.lineno,
+                           f"{func}: no fori_loop(lo, hi, body) found")]
+    body_name = loop_call.args[2].id
+    body_fn = next((s for s in fn.body
+                    if isinstance(s, ast.FunctionDef)
+                    and s.name == body_name), None)
+    if body_fn is None:
+        return [DmaFinding(RULE_DMA_OPAQUE, loop_call.lineno,
+                           f"{func}: loop body {body_name!r} not found")]
+    loop_var = body_fn.args.args[0].arg
+
+    # Concrete environment: kernel closure params + simple assignments
+    # (e.g. ``total = n_sections * n_ct``) evaluated in order.
+    n_sections, n_ct = trip_counts
+    env: Dict[str, int] = {"n_sections": n_sections, "n_ct": n_ct,
+                           "section": vmem.SUBLANE * 2,
+                           "bn": vmem.LANE}
+    _exec_assigns(fn.body, env)
+    lo = _ev(loop_call.args[0], env)
+    hi = _ev(loop_call.args[1], env)
+    if lo is _OPAQUE or hi is _OPAQUE:
+        lo, hi = 0, n_sections * n_ct
+
+    skip = [body_name] + list(helpers)
+    prologue = _collect_events(
+        [s for s in fn.body if not isinstance(s, ast.FunctionDef)],
+        helpers, skip)
+    body_events = _collect_events(body_fn.body, helpers, skip)
+
+    findings: List[DmaFinding] = []
+    opaque_lines: set = set()
+    in_flight: Dict[int, int] = {}
+
+    def apply(ev: _Event, t_env: Dict[str, int]) -> None:
+        if ev.cond is not None:
+            c = _ev(ev.cond, t_env)
+            if c is _OPAQUE:
+                if ev.line not in opaque_lines:
+                    opaque_lines.add(ev.line)
+                    findings.append(DmaFinding(
+                        RULE_DMA_OPAQUE, ev.line,
+                        "pl.when guard is not statically evaluable"))
+                return
+            if not c:
+                return
+        slot = _ev(ev.slot, t_env)
+        if slot is _OPAQUE:
+            if ev.line not in opaque_lines:
+                opaque_lines.add(ev.line)
+                findings.append(DmaFinding(
+                    RULE_DMA_OPAQUE, ev.line,
+                    "slot index is not statically evaluable"))
+            return
+        slot = int(slot)
+        if ev.kind == "start":
+            if in_flight.get(slot):
+                findings.append(DmaFinding(
+                    RULE_DMA_DOUBLE, ev.line,
+                    f"slot {slot} started again while its previous "
+                    f"copy is still in flight (overwrite race)"))
+            in_flight[slot] = in_flight.get(slot, 0) + 1
+        elif ev.kind == "wait":
+            if not in_flight.get(slot):
+                findings.append(DmaFinding(
+                    RULE_DMA_WAIT, ev.line,
+                    f"wait on slot {slot} with no copy in flight "
+                    f"(the kernel would hang)"))
+            else:
+                in_flight[slot] -= 1
+        else:                          # read
+            if in_flight.get(slot):
+                findings.append(DmaFinding(
+                    RULE_DMA_READ, ev.line,
+                    f"slot {slot} read while its copy is still in "
+                    f"flight (data race)"))
+
+    for ev in prologue:
+        apply(ev, env)
+    for t in range(int(lo), int(hi)):
+        t_env = dict(env)
+        t_env[loop_var] = t
+        _exec_assigns(body_fn.body, t_env)   # e.g. s, j = t // n_ct, ...
+        for ev in body_events:
+            apply(ev, t_env)
+    for slot, cnt in sorted(in_flight.items()):
+        if cnt:
+            findings.append(DmaFinding(
+                RULE_DMA_LEAK, body_fn.lineno,
+                f"slot {slot} has {cnt} started cop"
+                f"{'y' if cnt == 1 else 'ies'} never waited at loop "
+                f"exit (semaphore leak / next-launch deadlock)"))
+    # De-duplicate repeated per-iteration findings (same rule + line).
+    seen, uniq = set(), []
+    for f in findings:
+        key = (f.rule, f.line, f.message)
+        if key not in seen:
+            seen.add(key)
+            uniq.append(f)
+    return uniq
+
+
+# ----------------------------------------------------------------------
+# Layer 3: footprint-model drift guard.
+def check_scratch_drift(source: Optional[str] = None) -> List[DmaFinding]:
+    """Compare each kernel entry point's real ``scratch_shapes``
+    signature against ``vmem.EXPECTED_SCRATCH`` — the footprint model
+    must change in lockstep with the kernels."""
+    src = _load_kernel_source(source)
+    tree = ast.parse(src)
+    findings: List[DmaFinding] = []
+    for name, expected in vmem.EXPECTED_SCRATCH.items():
+        fn = next((node for node in ast.walk(tree)
+                   if isinstance(node, ast.FunctionDef)
+                   and node.name == name), None)
+        if fn is None:
+            findings.append(DmaFinding(
+                RULE_DRIFT, 0, f"kernel entry {name!r} not found but "
+                f"modelled in vmem.EXPECTED_SCRATCH"))
+            continue
+        kw = next((k for node in ast.walk(fn)
+                   if isinstance(node, ast.Call)
+                   and _terminal_name(node.func) == "pallas_call"
+                   for k in node.keywords
+                   if k.arg == "scratch_shapes"), None)
+        if kw is None or not isinstance(kw.value, (ast.List, ast.Tuple)):
+            findings.append(DmaFinding(
+                RULE_DRIFT, fn.lineno,
+                f"{name}: no literal scratch_shapes list found"))
+            continue
+        kinds = []
+        for el in kw.value.elts:
+            if isinstance(el, ast.Call):
+                parts = []
+                node = el.func
+                while isinstance(node, ast.Attribute):
+                    parts.append(node.attr)
+                    node = node.value
+                kinds.append(".".join(reversed(parts)) or "?")
+            else:
+                kinds.append("?")
+        # Drop the pltpu prefix for comparison ("pltpu.VMEM" -> "VMEM").
+        kinds = tuple(k.split(".", 1)[-1] if k.startswith("pltpu.")
+                      else k for k in kinds)
+        if kinds != expected:
+            findings.append(DmaFinding(
+                RULE_DRIFT, kw.value.lineno if hasattr(kw.value, "lineno")
+                else fn.lineno,
+                f"{name}: scratch_shapes signature {kinds} != modelled "
+                f"{expected} — update analysis/vmem.py footprints"))
+    return findings
+
+
+def check_kernel_invariants(source: Optional[str] = None
+                            ) -> List[DmaFinding]:
+    """Everything the checker can prove about the kernel *source*: DMA
+    pairing of the pipelined variant + footprint-model drift."""
+    return check_dma_pairing(source) + check_scratch_drift(source)

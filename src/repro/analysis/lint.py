@@ -1,0 +1,351 @@
+"""Repo lint: AST rules for this codebase's recurring bug classes.
+
+Each rule encodes a failure mode that has actually bitten (and been
+hand-fixed) in past PRs:
+
+* ``no-bare-assert`` — input validation via ``assert`` silently
+  disappears under ``python -O``; PRs 2, 3 and 5 each re-fixed
+  instances of this by hand. Every ``assert`` in ``src/`` must either
+  become a ``ValueError``/``TypeError`` raise or carry the
+  ``# lint: allow-assert`` tag (genuinely-internal invariants only).
+  Tests are exempt (pytest rewrites their asserts).
+* ``validation-survives-O`` — the sneakier forms of the same class:
+  a ``raise`` gated behind ``if __debug__:`` (stripped by ``-O``), or
+  an ``assert`` whose *message* constructs an exception that is never
+  raised once the assert is stripped.
+* ``pytree-static-meta`` — params classes registered as pytrees must
+  keep their meta (the jit-static aux data) hashable and cache-stable:
+  the meta dataclass needs ``eq=False`` (identity hash) or
+  ``frozen=True`` with ``compare=False`` on unhashable fields,
+  otherwise jit caches thrash or tracing fails on array comparison.
+* ``no-legacy-names`` — the pre-``SparseSpec`` surface
+  (``sparse_linear_*``, ``incrs_linear_*``, ``bsr_matmul``, …) is
+  deprecated; only the shim definition/re-export sites and the parity
+  suite (``tests/test_api.py``) may mention it.
+
+``lint_tree`` applies the right rule set per directory; the CLI
+(``python -m repro.analysis``) prints ``file:line rule message`` per
+finding.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Dict, List, Optional, Sequence
+
+ALLOW_ASSERT_TAG = "lint: allow-assert"
+
+RULE_ASSERT = "no-bare-assert"
+RULE_SURVIVES_O = "validation-survives-O"
+RULE_META = "pytree-static-meta"
+RULE_LEGACY = "no-legacy-names"
+
+ALL_RULES = (RULE_ASSERT, RULE_SURVIVES_O, RULE_META, RULE_LEGACY)
+
+RULE_DESCRIPTIONS: Dict[str, str] = {
+    RULE_ASSERT: "input validation must raise, not assert "
+                 "(asserts vanish under python -O); tag internal "
+                 f"invariants with `# {ALLOW_ASSERT_TAG}`",
+    RULE_SURVIVES_O: "validation must not hide behind __debug__ or an "
+                     "exception-constructing assert message",
+    RULE_META: "pytree-registered params metas need eq=False or "
+               "frozen=True with compare=False on unhashable fields",
+    RULE_LEGACY: "deprecated pre-SparseSpec names only in shim "
+                 "definition/re-export sites and tests/test_api.py",
+}
+
+# The deprecated surface (see repro/_deprecation.py and the shims at the
+# bottom of kernels/ops.py and sparse/linear.py).
+LEGACY_NAMES = frozenset({
+    "sparse_linear_init", "sparse_linear_from_mask", "sparse_linear_apply",
+    "incrs_linear_init", "incrs_linear_from_dense",
+    "incrs_linear_stack_init", "incrs_linear_apply",
+    "incrs_linear_from_dense_sharded", "incrs_linear_sharded_init",
+    "incrs_linear_shard", "incrs_linear_sharded_apply",
+    "bsr_matmul", "index_match_matmul", "incrs_spmm_sharded",
+})
+# ``incrs_spmm`` is ALSO a live kernel entry point — only the
+# ``ops.incrs_spmm`` shim spelling is legacy.
+LEGACY_OPS_ATTRS = frozenset({"incrs_spmm"}) | LEGACY_NAMES
+
+# Shim definition / re-export sites (plus the parity suite) where legacy
+# names legitimately appear. Paths are repo-root-relative.
+LEGACY_EXEMPT = frozenset({
+    "src/repro/_deprecation.py",
+    "src/repro/kernels/ops.py",        # shim definitions
+    "src/repro/sparse/linear.py",      # shim definitions
+    "src/repro/sparse/__init__.py",    # one-release re-exports
+    "tests/test_api.py",               # parity suite pinning the shims
+})
+
+_PYTREE_REGISTER_CALLS = ("register_pytree_with_keys",
+                          "register_pytree_node",
+                          "register_pytree_with_keys_class")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line} {self.rule} {self.message}"
+
+
+def _terminal_name(node: ast.expr) -> Optional[str]:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+def _has_allow_tag(lines: Sequence[str], lineno: int) -> bool:
+    """The tag may sit on the assert's own (first) line or on the line
+    directly above it."""
+    for ln in (lineno, lineno - 1):
+        if 1 <= ln <= len(lines) and ALLOW_ASSERT_TAG in lines[ln - 1]:
+            return True
+    return False
+
+
+# ----------------------------------------------------------------------
+def _rule_no_bare_assert(tree: ast.AST, path: str,
+                         lines: Sequence[str]) -> List[Finding]:
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assert) \
+                and not _has_allow_tag(lines, node.lineno):
+            out.append(Finding(
+                path, node.lineno, RULE_ASSERT,
+                "bare `assert` is stripped under python -O; raise "
+                "ValueError/TypeError for input validation or tag an "
+                f"internal invariant with `# {ALLOW_ASSERT_TAG}`"))
+    return out
+
+
+def _rule_validation_survives_o(tree: ast.AST, path: str,
+                                lines: Sequence[str]) -> List[Finding]:
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.If):
+            test = node.test
+            neg = isinstance(test, ast.UnaryOp) \
+                and isinstance(test.op, ast.Not)
+            name = test.operand if neg else test
+            if isinstance(name, ast.Name) and name.id == "__debug__":
+                body = node.orelse if neg else node.body
+                if any(isinstance(n, ast.Raise)
+                       for stmt in body for n in ast.walk(stmt)):
+                    out.append(Finding(
+                        path, node.lineno, RULE_SURVIVES_O,
+                        "validation raise gated on __debug__ is "
+                        "stripped under python -O; raise "
+                        "unconditionally"))
+        elif isinstance(node, ast.Assert) and node.msg is not None:
+            if isinstance(node.msg, ast.Call):
+                fname = _terminal_name(node.msg.func) or ""
+                if fname.endswith(("Error", "Exception", "Warning")):
+                    out.append(Finding(
+                        path, node.lineno, RULE_SURVIVES_O,
+                        f"assert message constructs {fname} but the "
+                        f"whole statement vanishes under python -O; "
+                        f"raise it instead"))
+    return out
+
+
+def _meta_field_compare_false(stmt: ast.AnnAssign) -> bool:
+    if isinstance(stmt.value, ast.Call) \
+            and _terminal_name(stmt.value.func) == "field":
+        for kw in stmt.value.keywords:
+            if kw.arg == "compare" \
+                    and isinstance(kw.value, ast.Constant) \
+                    and kw.value.value is False:
+                return True
+    return False
+
+
+def _annotation_text(node: Optional[ast.expr]) -> str:
+    if node is None:
+        return ""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    try:
+        return ast.unparse(node)
+    except Exception:
+        return ""
+
+
+_UNHASHABLE_HINTS = ("ndarray", "Array", "Any", "array")
+
+
+def _rule_pytree_static_meta(tree: ast.AST, path: str,
+                             lines: Sequence[str]) -> List[Finding]:
+    classes: Dict[str, ast.ClassDef] = {
+        n.name: n for n in ast.walk(tree) if isinstance(n, ast.ClassDef)}
+    registered: List[str] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call) or not node.args:
+            continue
+        fname = _terminal_name(node.func) or ""
+        if fname in _PYTREE_REGISTER_CALLS \
+                or fname.endswith("register_params_pytree"):
+            if isinstance(node.args[0], ast.Name):
+                registered.append(node.args[0].id)
+    out: List[Finding] = []
+    for cls_name in registered:
+        cls = classes.get(cls_name)
+        if cls is None:
+            continue
+        meta_ann = next(
+            (s for s in cls.body if isinstance(s, ast.AnnAssign)
+             and isinstance(s.target, ast.Name)
+             and s.target.id == "meta"), None)
+        if meta_ann is None:
+            continue                   # no static meta -> nothing to check
+        meta_cls = classes.get(_annotation_text(meta_ann.annotation)
+                               .strip("'\"").split(".")[-1])
+        if meta_cls is None:
+            continue                   # meta defined elsewhere: skip
+        dec = next((d for d in meta_cls.decorator_list
+                    if isinstance(d, ast.Call)
+                    and _terminal_name(d.func) == "dataclass"), None)
+        if dec is None:
+            bare = any(_terminal_name(d) == "dataclass"
+                       for d in meta_cls.decorator_list)
+            out.append(Finding(
+                path, meta_cls.lineno, RULE_META,
+                f"{cls_name} is pytree-registered but its meta "
+                f"{meta_cls.name} is "
+                + ("a default dataclass (eq=True, unfrozen): jit-static "
+                   "aux data needs eq=False or frozen=True"
+                   if bare else "not a dataclass: jit-static aux data "
+                   "needs a stable __eq__/__hash__ (eq=False or "
+                   "frozen=True with compare=False fields)")))
+            continue
+        kwargs = {k.arg: k.value for k in dec.keywords}
+        eq_false = isinstance(kwargs.get("eq"), ast.Constant) \
+            and kwargs["eq"].value is False
+        frozen = isinstance(kwargs.get("frozen"), ast.Constant) \
+            and kwargs["frozen"].value is True
+        if eq_false:
+            continue                   # identity hash: always safe
+        if not frozen:
+            out.append(Finding(
+                path, meta_cls.lineno, RULE_META,
+                f"{cls_name}'s meta {meta_cls.name} is neither "
+                f"eq=False nor frozen=True: value-equality over "
+                f"mutable aux data breaks jit cache stability"))
+            continue
+        for stmt in meta_cls.body:
+            if not isinstance(stmt, ast.AnnAssign):
+                continue
+            ann = _annotation_text(stmt.annotation)
+            if any(h in ann for h in _UNHASHABLE_HINTS) \
+                    and not _meta_field_compare_false(stmt):
+                fld = stmt.target.id \
+                    if isinstance(stmt.target, ast.Name) else "?"
+                out.append(Finding(
+                    path, stmt.lineno, RULE_META,
+                    f"{meta_cls.name}.{fld}: unhashable-typed field "
+                    f"({ann}) in a value-compared meta needs "
+                    f"field(compare=False) (or make the meta "
+                    f"eq=False)"))
+    return out
+
+
+def _rule_no_legacy_names(tree: ast.AST, path: str,
+                          lines: Sequence[str]) -> List[Finding]:
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name) and node.id in LEGACY_NAMES \
+                and isinstance(node.ctx, ast.Load):
+            out.append(Finding(
+                path, node.lineno, RULE_LEGACY,
+                f"`{node.id}` is a one-release deprecation shim; use "
+                f"the SparseSpec/plan/Linear surface"))
+        elif isinstance(node, ast.Attribute) \
+                and isinstance(node.ctx, ast.Load) \
+                and (node.attr in LEGACY_NAMES
+                     or (node.attr in LEGACY_OPS_ATTRS
+                         and isinstance(node.value, ast.Name)
+                         and node.value.id == "ops")):
+            out.append(Finding(
+                path, node.lineno, RULE_LEGACY,
+                f"`.{node.attr}` is a one-release deprecation shim; "
+                f"use ops.spmm / the plan surface"))
+        elif isinstance(node, ast.ImportFrom):
+            for alias in node.names:
+                if alias.name in LEGACY_NAMES:
+                    out.append(Finding(
+                        path, node.lineno, RULE_LEGACY,
+                        f"importing deprecated `{alias.name}`; use the "
+                        f"SparseSpec/plan/Linear surface"))
+    return out
+
+
+_RULE_FNS = {
+    RULE_ASSERT: _rule_no_bare_assert,
+    RULE_SURVIVES_O: _rule_validation_survives_o,
+    RULE_META: _rule_pytree_static_meta,
+    RULE_LEGACY: _rule_no_legacy_names,
+}
+
+
+# ----------------------------------------------------------------------
+def lint_source(src: str, path: str,
+                rules: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Lint one source blob under the given rule set (default: all)."""
+    try:
+        tree = ast.parse(src)
+    except SyntaxError as e:
+        return [Finding(path, e.lineno or 0, "syntax-error", str(e.msg))]
+    lines = src.splitlines()
+    out: List[Finding] = []
+    for rule in (rules if rules is not None else ALL_RULES):
+        out.extend(_RULE_FNS[rule](tree, path, lines))
+    return sorted(out, key=lambda f: (f.line, f.rule))
+
+
+def lint_file(path: str, root: str = ".",
+              rules: Optional[Sequence[str]] = None) -> List[Finding]:
+    rel = os.path.relpath(path, root).replace(os.sep, "/")
+    with open(path, encoding="utf-8") as f:
+        src = f.read()
+    return lint_source(src, rel, rules)
+
+
+def _py_files(*dirs: str) -> List[str]:
+    out = []
+    for d in dirs:
+        if not os.path.isdir(d):
+            continue
+        for base, _dirs, files in os.walk(d):
+            if "__pycache__" in base:
+                continue
+            out.extend(os.path.join(base, f) for f in sorted(files)
+                       if f.endswith(".py"))
+    return sorted(out)
+
+
+def lint_tree(root: str = ".") -> List[Finding]:
+    """Lint the whole repo with per-directory rule scoping:
+
+    * ``src/`` — every rule;
+    * ``tests/``, ``benchmarks/``, ``examples/``, ``scripts/`` — only
+      ``no-legacy-names`` (pytest rewrites test asserts; bench/example
+      asserts are harness checks, not input validation).
+    """
+    findings: List[Finding] = []
+    for path in _py_files(os.path.join(root, "src")):
+        findings.extend(lint_file(path, root))
+    aux = [os.path.join(root, d)
+           for d in ("tests", "benchmarks", "examples", "scripts")]
+    for path in _py_files(*aux):
+        findings.extend(lint_file(path, root, rules=(RULE_LEGACY,)))
+    findings = [f for f in findings
+                if not (f.rule == RULE_LEGACY and f.path in LEGACY_EXEMPT)]
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule))

@@ -56,7 +56,9 @@ class BSR:
         """Blocks whose max-abs exceeds ``keep_threshold`` are stored."""
         m, k = dense.shape
         bm, bk = block
-        assert m % bm == 0 and k % bk == 0, (m, k, block)
+        if m % bm != 0 or k % bk != 0:
+            raise ValueError(
+                f"dense shape {(m, k)} not divisible by block {block}")
         nbr, nbc = m // bm, k // bk
         tiles = dense.reshape(nbr, bm, nbc, bk).transpose(0, 2, 1, 3)
         occupancy = np.abs(tiles).max(axis=(2, 3)) > keep_threshold
@@ -73,7 +75,9 @@ class BSR:
         m, k = dense.shape
         bm, bk = block
         nbr, nbc = m // bm, k // bk
-        assert mask.shape == (nbr, nbc)
+        if mask.shape != (nbr, nbc):
+            raise ValueError(
+                f"mask shape {mask.shape} != block grid {(nbr, nbc)}")
         tiles = dense.reshape(nbr, bm, nbc, bk).transpose(0, 2, 1, 3)
         row_ptr = np.zeros(nbr + 1, dtype=np.int32)
         row_ptr[1:] = np.cumsum(mask.sum(axis=1))

@@ -37,7 +37,10 @@ def _pack64(prefix: np.ndarray, blocks: np.ndarray,
     """Pack (prefix, blocks[..., n_blocks]) into (lo32, hi32) uint32 words."""
     word = prefix.astype(np.uint64)
     nb = blocks.shape[-1]
-    assert prefix_bits + nb * count_bits <= 64, "counter-vector must fit a word"
+    if prefix_bits + nb * count_bits > 64:
+        raise ValueError(
+            f"counter-vector must fit a 64-bit word: prefix_bits="
+            f"{prefix_bits} + {nb} blocks x count_bits={count_bits}")
     for k in range(nb):
         word = word | (blocks[..., k].astype(np.uint64)
                        << np.uint64(prefix_bits + k * count_bits))
@@ -97,13 +100,16 @@ class InCRS:
                  prefix_bits: int = PREFIX_BITS,
                  count_bits: int = COUNT_BITS) -> "InCRS":
         m, n = crs.shape
-        assert section % block == 0
+        if section % block != 0:
+            raise ValueError(
+                f"section={section} must be a multiple of block={block}")
         n_blocks = section // block
         # A full block holds ``block`` non-zeros; that count must fit the
         # per-block field.
-        assert block <= (1 << count_bits) - 1, (
-            f"block count {block} must fit count_bits={count_bits} "
-            f"(max {(1 << count_bits) - 1})")
+        if block > (1 << count_bits) - 1:
+            raise ValueError(
+                f"block count {block} must fit count_bits={count_bits} "
+                f"(max {(1 << count_bits) - 1})")
         n_sections = -(-n // section)
         blocks = np.zeros((m, n_sections, n_blocks), dtype=np.int64)
         if crs.nnz:

@@ -30,7 +30,8 @@ def spmm_colaccess(a: CRS, b, trace: Optional[List[int]] = None
     """
     m, k = a.shape
     k2, n = b.shape
-    assert k == k2, (a.shape, b.shape)
+    if k != k2:
+        raise ValueError(f"inner dims differ: {a.shape} @ {b.shape}")
     c = np.zeros((m, n), dtype=np.result_type(a.values.dtype, np.float64))
     total_ma = 0
     for j in range(n):
@@ -81,7 +82,9 @@ def spmm_index_match(a: CRS, bt: CRS) -> Tuple[np.ndarray, np.ndarray]:
     """
     m = a.shape[0]
     n = bt.shape[0]
-    assert a.shape[1] == bt.shape[1]
+    if a.shape[1] != bt.shape[1]:
+        raise ValueError(
+            f"inner dims differ: {a.shape} vs B^T {bt.shape}")
     c = np.zeros((m, n))
     cyc = np.zeros((m, n), dtype=np.int64)
     rows_a = [a.get_row(i)[:2] for i in range(m)]

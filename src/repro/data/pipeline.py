@@ -23,7 +23,9 @@ class SyntheticTokens:
     def __init__(self, vocab: int, batch: int, seq: int, *, seed: int = 0,
                  rank: int = 0, world: int = 1, n_prefix: int = 0,
                  d_model: int = 0):
-        assert batch % world == 0, (batch, world)
+        if batch % world != 0:
+            raise ValueError(
+                f"global batch {batch} not divisible by world {world}")
         self.vocab, self.seq = vocab, seq
         self.local_batch = batch // world
         self.rank, self.world, self.seed = rank, world, seed

@@ -34,6 +34,7 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..analysis import kernel_check, vmem
 from ..core.mesh_sim import FusedKernelCost, fused_spmm_cost
 from .incrs_spmm import (incrs_spmm, incrs_spmm_pipelined,
                          incrs_spmm_reuse, _resolve_row_tile)
@@ -47,9 +48,11 @@ AUTOTUNE_VERSION = 1
 CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
 
 # Row-panel accumulator budget shared by the reuse/pipelined variants
-# (bm x Np f32 held in VMEM for a whole row tile). ``ops`` re-exports
-# this as its fallback gate so the two always agree.
-PANEL_BYTES = 2 * 1024 * 1024
+# (bm x Np f32 held in VMEM for a whole row tile). Owned by
+# ``analysis.vmem`` (the footprint model is the single source of truth);
+# re-exported here under the historical name — ``ops`` uses this as its
+# fallback gate so the two always agree.
+PANEL_BYTES = vmem.PANEL_BYTES
 
 # Cycles -> wall time for compiled TPU execution (v4-class core clock).
 TPU_CLOCK_HZ = 940e6
@@ -192,9 +195,9 @@ def kernel_cost(variant: str, m: int, n: int, *, n_sections: int,
                            section=section, bm=bm, bn=bn, nnz=nnz)
 
 
-def candidates(padded_rows: int, n: int, *, section: int,
-               n_sections: int) -> List[Tuple[str, int, int]]:
-    """Feasible ``(variant, bm, bn)`` sweep space for one problem."""
+def candidate_space(padded_rows: int, n: int) -> List[Tuple[str, int, int]]:
+    """The raw ``(variant, bm, bn)`` sweep space for one problem, before
+    any feasibility filtering."""
     bms, seen = [], set()
     for bm in (32, 64, 128, 256):
         eff, _ = _resolve_row_tile(padded_rows, bm)
@@ -203,19 +206,47 @@ def candidates(padded_rows: int, n: int, *, section: int,
             bms.append(eff)
     np128 = -(-n // 128) * 128
     bns = sorted({min(bn, np128) for bn in (128, 256, 512)})
-    out: List[Tuple[str, int, int]] = []
-    for bm in bms:
-        for bn in bns:
-            np_ = -(-n // bn) * bn
-            out.append(("expand", bm, bn))
-            if bm * np_ * 4 <= PANEL_BYTES:
-                out.append(("reuse", bm, bn))
-                # pipelined additionally holds the stripe + a double
-                # (section, bn) RHS window in VMEM
-                if (bm * section + 2 * section * bn) * 4 \
-                        <= 2 * PANEL_BYTES:
-                    out.append(("pipelined", bm, bn))
-    return out
+    return [(variant, bm, bn)
+            for bm in bms for bn in bns
+            for variant in ("expand", "reuse", "pipelined")]
+
+
+def split_candidates(padded_rows: int, n: int, *, section: int,
+                     n_sections: int, smax: Optional[int] = None,
+                     vmem_budget: Optional[int] = None
+                     ) -> Tuple[List[Tuple[str, int, int]], List[dict]]:
+    """Partition the sweep space into (feasible, skipped_infeasible)
+    through the static checker of ``analysis.kernel_check``: the
+    row-panel working-set heuristic plus the hard VMEM budget. Each
+    skip records the violated budget term so the sweep result can show
+    *why* a candidate was never measured."""
+    feasible: List[Tuple[str, int, int]] = []
+    skipped: List[dict] = []
+    eff_smax = section if smax is None else smax
+    for variant, bm, bn in candidate_space(padded_rows, n):
+        vs = kernel_check.check_incrs_config(
+            variant, m=padded_rows, n=n, bm=bm, bn=bn,
+            n_sections=n_sections, smax=eff_smax, section=section,
+            budget=vmem_budget, rules=kernel_check.BUDGET_RULES)
+        if vs:
+            v = vs[0]
+            skipped.append({"variant": variant, "bm": bm, "bn": bn,
+                            "rule": v.rule, "term": v.term,
+                            "bytes": v.nbytes, "limit": v.limit,
+                            "message": v.message})
+        else:
+            feasible.append((variant, bm, bn))
+    return feasible, skipped
+
+
+def candidates(padded_rows: int, n: int, *, section: int,
+               n_sections: int, smax: Optional[int] = None,
+               vmem_budget: Optional[int] = None
+               ) -> List[Tuple[str, int, int]]:
+    """Feasible ``(variant, bm, bn)`` sweep space for one problem."""
+    return split_candidates(padded_rows, n, section=section,
+                            n_sections=n_sections, smax=smax,
+                            vmem_budget=vmem_budget)[0]
 
 
 # ----------------------------------------------------------------------
@@ -229,30 +260,80 @@ def _measure_us(fn, reps: int) -> float:
     return best
 
 
+@dataclasses.dataclass
+class SweepRecord:
+    """Audit trail of one autotune sweep: what was considered, what the
+    static VMEM prefilter rejected (and why), what got measured."""
+    key: str
+    cache_hit: bool
+    n_candidates: int
+    skipped_infeasible: List[dict]
+    measured: List[dict]
+    elapsed_s: float
+    winner: Optional[TunedConfig]
+
+    def to_json(self) -> dict:
+        return {"key": self.key, "cache_hit": self.cache_hit,
+                "n_candidates": self.n_candidates,
+                "skipped_infeasible": self.skipped_infeasible,
+                "measured": self.measured, "elapsed_s": self.elapsed_s,
+                "winner": self.winner.to_json() if self.winner else None}
+
+
+# Sweep record of the most recent ``tune`` call (tests / kernel_bench).
+LAST_SWEEP: Optional[SweepRecord] = None
+
+
 def tune(idx, val, b, *, section: int, interpret: bool,
          reps: int = 3, persist: bool = True,
-         top_k: int = MEASURE_TOP_K) -> TunedConfig:
+         top_k: int = MEASURE_TOP_K,
+         vmem_budget: Optional[int] = None,
+         prefilter: bool = True) -> TunedConfig:
     """Sweep ``(variant, bm, bn)`` for one prepared operand + RHS.
 
     Cache hit -> returns the stored config without running anything.
-    Miss -> rank all feasible candidates by the cost model, measure the
+    Miss -> statically drop VMEM-infeasible candidates (recorded as
+    ``skipped_infeasible`` on the ``LAST_SWEEP`` record — they are
+    never measured), rank the rest by the cost model, measure the
     ``top_k`` most promising, keep the fastest, persist it.
+
+    ``vmem_budget`` overrides the hard per-core budget (bytes);
+    ``prefilter=False`` disables the static filter entirely (the
+    before/after baseline for ``kernel_bench``'s ``autotune_prefilter``
+    comparison).
     """
+    global LAST_SWEEP
+    t_sweep = time.perf_counter()
     m, n_sections, smax = idx.shape
     n = b.shape[1]
     key = cache_key(m, n_sections, smax, section, n,
                     backend_name(interpret))
     hit = lookup(key)
     if hit is not None:
+        LAST_SWEEP = SweepRecord(key, True, 0, [], [],
+                                 time.perf_counter() - t_sweep, hit)
         return hit
 
-    cands = candidates(m, n, section=section, n_sections=n_sections)
+    if prefilter:
+        cands, skipped = split_candidates(
+            m, n, section=section, n_sections=n_sections, smax=smax,
+            vmem_budget=vmem_budget)
+    else:
+        cands, skipped = candidate_space(m, n), []
+    if not cands:
+        raise kernel_check.KernelConfigError(
+            [kernel_check.Violation(s["rule"], s["message"], s["term"],
+                                    s["bytes"], s["limit"])
+             for s in skipped[:3]],
+            context=f"autotune {key}: no feasible candidate under the "
+                    f"VMEM budget")
     ranked = sorted(
         cands,
         key=lambda c: predict_us(c[0], m, n, n_sections=n_sections,
                                  smax=smax, section=section, bm=c[1],
                                  bn=c[2], interpret=interpret))
     best_cfg: Optional[TunedConfig] = None
+    measured_log: List[dict] = []
     for variant, bm, bn in ranked[:max(1, top_k)]:
         predicted = predict_us(variant, m, n, n_sections=n_sections,
                                smax=smax, section=section, bm=bm, bn=bn,
@@ -264,11 +345,16 @@ def tune(idx, val, b, *, section: int, interpret: bool,
         measured = _measure_us(
             lambda: kern(idx, val, bp, section=section, bm=bm, bn=bn,
                          interpret=interpret), reps)
+        measured_log.append({"variant": variant, "bm": bm, "bn": bn,
+                             "us": measured, "predicted_us": predicted})
         cfg = TunedConfig(variant, bm, bn, measured, predicted)
         if best_cfg is None or cfg.measured_us < best_cfg.measured_us:
             best_cfg = cfg
-    assert best_cfg is not None
+    assert best_cfg is not None  # lint: allow-assert (ranked is non-empty)
     _MEM[key] = best_cfg
+    LAST_SWEEP = SweepRecord(key, False, len(cands) + len(skipped),
+                             skipped, measured_log,
+                             time.perf_counter() - t_sweep, best_cfg)
     if persist:
         _store_disk(key, best_cfg)
     log.info("autotune: %s -> %s bm=%d bn=%d (measured %.0fµs, predicted "
@@ -289,12 +375,13 @@ def model_pick_variant(m: int, n: int, *, n_sections: int, smax: int,
     """Choose a variant from the cost model alone (no measurement), with
     a one-time log line explaining the pick for this problem shape."""
     bm, _ = _resolve_row_tile(m, bm)   # same clamp the kernels apply
-    np_ = -(-n // bn) * bn
-    allowed = ["expand"]
-    if bm * np_ * 4 <= PANEL_BYTES:
-        allowed.append("reuse")
-        if (bm * section + 2 * section * bn) * 4 <= 2 * PANEL_BYTES:
-            allowed.append("pipelined")
+    allowed = [v for v in ("expand", "reuse", "pipelined")
+               if not kernel_check.check_incrs_config(
+                   v, m=m, n=n, bm=bm, bn=bn, n_sections=n_sections,
+                   smax=smax, section=section,
+                   rules=kernel_check.BUDGET_RULES)]
+    if not allowed:
+        allowed = ["expand"]           # smallest footprint: last resort
     scored = {v: predict_us(v, m, n, n_sections=n_sections, smax=smax,
                             section=section, bm=bm, bn=bn,
                             interpret=interpret)

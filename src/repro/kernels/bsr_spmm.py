@@ -73,7 +73,9 @@ def bsr_spmm(row_of: jnp.ndarray, col_of: jnp.ndarray, values: jnp.ndarray,
     """
     nnz, bm, bk = values.shape
     k, n = b.shape
-    assert n % bn == 0, (n, bn)
+    if n % bn != 0:
+        raise ValueError(f"n={n} must be a multiple of bn={bn} "
+                         "(ops.spmm_bsr pads)")
     grid = (n // bn, nnz)
 
     return pl.pallas_call(

@@ -41,8 +41,9 @@ def dense_mm(a: jnp.ndarray, b: jnp.ndarray, *, bm: int = 128, bn: int = 128,
     """
     m, k = a.shape
     k2, n = b.shape
-    assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0, (
-        (m, k, n), (bm, bn, bk))
+    if k != k2 or m % bm or n % bn or k % bk:
+        raise ValueError(f"shapes {(m, k, n)} must align to tiles "
+                         f"{(bm, bn, bk)} (ops.dense_mm pads)")
     grid = (m // bm, n // bn, k // bk)
     return pl.pallas_call(
         _kernel,

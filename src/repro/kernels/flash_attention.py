@@ -90,8 +90,11 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     Sq/Sk padded to bq/bk multiples by the wrapper (ops.flash_mha)."""
     lanes, sq, hd = q.shape
     lk, sk, _ = k.shape
-    assert lanes == lk * g, (lanes, lk, g)
-    assert sq % bq == 0 and sk % bk == 0
+    if lanes != lk * g:
+        raise ValueError(f"query lanes {lanes} != kv lanes {lk} * g={g}")
+    if sq % bq or sk % bk:
+        raise ValueError(f"seq lens {(sq, sk)} must align to tiles "
+                         f"{(bq, bk)} (ops.flash_mha pads)")
     grid = (lanes, sq // bq, sk // bk)
     kernel = functools.partial(
         _kernel, bq=bq, bk=bk, sk=sk, window=window,

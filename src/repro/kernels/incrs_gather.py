@@ -45,7 +45,8 @@ def incrs_gather(idx: jnp.ndarray, val: jnp.ndarray, *, section: int = 256,
     val : (M, n_sections, smax)
     """
     m, n_sections, smax = idx.shape
-    assert m % bm == 0, (m, bm)
+    if m % bm != 0:
+        raise ValueError(f"m={m} must be a multiple of bm={bm}")
     grid = (m // bm, n_sections)
     return pl.pallas_call(
         functools.partial(_kernel, section=section),

@@ -167,9 +167,12 @@ def incrs_spmm(idx: jnp.ndarray, val: jnp.ndarray, b: jnp.ndarray, *,
 # tile. The price is an output-stationary (bm, N) row-panel accumulator
 # (the out block is revisited once per section, non-consecutively, so the
 # running sum must live in scratch): SpArch/Sextans-style output-stationary
-# accumulation. VMEM bound: bm*N*4B panel + bm*section*4B stripe — callers
-# (ops.spmm variant="auto") fall back to the baseline order when the
-# panel would not fit.
+# accumulation. The full VMEM footprint (panel + stripe + the idx/val/rhs
+# pipeline blocks + the one-hot transient) is modelled symbolically in
+# ``analysis.vmem.incrs_footprint("reuse", ...)`` — that model, not a
+# hand-kept formula here, is what callers (ops.spmm variant="auto", the
+# autotuner's candidate prefilter) consult to fall back to the baseline
+# order when the panel would not fit.
 
 
 def _kernel_reuse(idx_ref, val_ref, b_ref, o_ref, stripe_ref, acc_ref, *,
@@ -303,11 +306,13 @@ def incrs_spmm_pipelined(idx: jnp.ndarray, val: jnp.ndarray,
                          interpret: bool = False) -> jnp.ndarray:
     """Same contract as ``incrs_spmm``; RHS is double-buffered from HBM.
 
-    VMEM bound per row tile: bm*N*4B out panel + bm*section*4B stripe +
-    2*section*bn RHS window — callers (``ops.spmm``/autotuner) fall back
-    to the baseline order when the panel would not fit. The dot shape and
-    section accumulation order match the other variants exactly, so
-    outputs are bitwise identical at equal (bm, bn).
+    The per-row-tile VMEM footprint (out panel, stripe, the 2-deep RHS
+    stream window, idx/val pipeline blocks, one-hot transient) is
+    modelled term-by-term in ``analysis.vmem.incrs_footprint("pipelined",
+    ...)``; callers (``ops.spmm``/autotuner) consult that model and fall
+    back to the baseline order when the panel would not fit. The dot
+    shape and section accumulation order match the other variants
+    exactly, so outputs are bitwise identical at equal (bm, bn).
     """
     m, n_sections, smax = idx.shape
     k, n = b.shape

@@ -75,8 +75,12 @@ def index_match_spmm(a_idx: jnp.ndarray, a_val: jnp.ndarray,
     """
     m, n_rounds, rmax_a = a_idx.shape
     n, n_rounds_b, rmax_b = b_idx.shape
-    assert n_rounds == n_rounds_b
-    assert m % bm == 0 and n % bn == 0, ((m, n), (bm, bn))
+    if n_rounds != n_rounds_b:
+        raise ValueError(
+            f"operand round counts differ: {n_rounds} vs {n_rounds_b}")
+    if m % bm or n % bn:
+        raise ValueError(f"shape {(m, n)} must align to tiles "
+                         f"{(bm, bn)} (ops.spmm_index_match pads)")
     grid = (m // bm, n // bn, n_rounds)
 
     kernel = functools.partial(_kernel, rounds=rounds)

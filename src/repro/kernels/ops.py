@@ -40,6 +40,7 @@ from .incrs_spmm import incrs_spmm_pipelined as _incrs_spmm_pipelined_kernel
 from .incrs_spmm import incrs_spmm_reuse as _incrs_spmm_reuse_kernel
 from .index_match_spmm import index_match_spmm as _index_match_kernel
 from . import autotune as _autotune
+from ..analysis import kernel_check as _kernel_check
 
 INTERPRET = jax.default_backend() != "tpu"
 
@@ -105,7 +106,9 @@ def _spmm_bsr(bsr: BSR, b, *, bn: int = 128, interpret: bool | None = None):
     interpret = INTERPRET if interpret is None else interpret
     row_of, col_of, values = prep_bsr(bsr)
     k, n = b.shape
-    assert k == bsr.shape[1], (bsr.shape, b.shape)
+    if k != bsr.shape[1]:
+        raise ValueError(f"inner dims disagree: A is {bsr.shape}, "
+                         f"B is {b.shape}")
     np_ = -(-n // bn) * bn
     b = jnp.pad(b, ((0, 0), (0, np_ - n)))
     out = _bsr_spmm_kernel(row_of, col_of, values, b,
@@ -210,7 +213,9 @@ def _spmm_index_match(a: CRS, bt: CRS, *, rounds: int = 128,
                       interpret: bool | None = None):
     """C = A @ Bt.T via the round-synchronized index-matching kernel
     (paper Alg. 2 on the MXU). Returns C[:M, :N] unpadded."""
-    assert a.shape[1] == bt.shape[1]
+    if a.shape[1] != bt.shape[1]:
+        raise ValueError(f"inner dims disagree: A is {a.shape}, "
+                         f"Bt is {bt.shape} (expected equal col counts)")
     ai, av = prep_rounds(a, rounds, pad_rows_to=bm)
     bi, bv = prep_rounds(bt, rounds, pad_rows_to=bn)
     out = index_match_prepped(ai, av, bi, bv, rounds=rounds, bm=bm, bn=bn,
@@ -507,7 +512,9 @@ def _spmm_incrs_sharded(a: InCRS | ShardedPreparedOperand, b, *,
                                      pad_rows_to=pad_rows_to)
     m, k = prep.shape
     k2, n = b.shape
-    assert k == k2, (prep.shape, b.shape)
+    if k != k2:
+        raise ValueError(f"inner dims disagree: A is {prep.shape}, "
+                         f"B is {b.shape}")
     rps, section = prep.rows_per_shard, prep.section
 
     def local(idx, val, bl):
@@ -528,8 +535,9 @@ def _spmm_incrs_sharded(a: InCRS | ShardedPreparedOperand, b, *,
 # Row-panel accumulator budget of the stripe-reuse/pipelined variants
 # (bm x Np f32 held in VMEM for a whole row tile) — beyond this, fall
 # back to the re-expanding order whose accumulator is one (bm, bn) tile.
-# Single source of truth lives in the autotuner (its feasibility filter
-# must agree with this dispatch gate).
+# Single source of truth is the static footprint model in
+# ``analysis.vmem`` (the autotuner's feasibility filter and this
+# dispatch gate both read it, so the two always agree).
 _REUSE_PANEL_BYTES = _autotune.PANEL_BYTES
 
 _INCRS_KERNELS = {"expand": _incrs_spmm_kernel,
@@ -563,6 +571,7 @@ def _spmm_incrs(a: InCRS | PreparedOperand, b, *, bm: int = 128,
     if variant not in ("auto", "expand", "reuse", "pipelined"):
         raise ValueError(f"variant must be 'auto', 'expand', 'reuse' or "
                          f"'pipelined', got {variant!r}")
+    explicit_variant = variant != "auto"
     interpret = INTERPRET if interpret is None else interpret
     prep = a if isinstance(a, PreparedOperand) else \
         prepare_incrs(a, pad_rows_to=bm)
@@ -591,6 +600,17 @@ def _spmm_incrs(a: InCRS | PreparedOperand, b, *, bm: int = 128,
             prep.padded_rows, np_, n_sections=prep.n_sections,
             smax=prep.idx.shape[2], section=prep.section, bm=bm, bn=bn,
             interpret=interpret)
+    elif explicit_variant:
+        # An explicitly requested variant may ignore the panel working-
+        # set *heuristic*, but never the physical per-core VMEM budget:
+        # prove the launch fits before it runs (KernelConfigError names
+        # the violated term) instead of OOMing on hardware.
+        _kernel_check.require_feasible(
+            variant, m=prep.padded_rows, n=np_, bm=bm, bn=bn,
+            n_sections=prep.n_sections, smax=prep.idx.shape[2],
+            section=prep.section,
+            rules=(_kernel_check.RULE_VMEM,),
+            context=f"spmm variant={variant!r}")
     b = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
     kernel = _INCRS_KERNELS[variant]
     out = kernel(prep.idx, prep.val, b, section=prep.section,

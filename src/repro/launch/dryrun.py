@@ -379,7 +379,8 @@ def main(argv=None):
             for s in SHAPES:
                 cells.append((a, s))
     else:
-        assert args.arch and args.shape, "--arch/--shape or --all"
+        if not (args.arch and args.shape):
+            raise SystemExit("dryrun: pass --arch and --shape, or --all")
         cells = [(args.arch, args.shape)]
 
     meshes = [args.multi_pod]

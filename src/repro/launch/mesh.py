@@ -27,7 +27,9 @@ def make_pipeline_mesh(n_stages: int = 8):
     """(pipe, data) mesh for the GPipe executor (>4k-chip scaling path)."""
     import numpy as np
     devs = jax.devices()
-    assert len(devs) % n_stages == 0
+    if len(devs) % n_stages != 0:
+        raise ValueError(f"{len(devs)} devices do not divide into "
+                         f"{n_stages} pipeline stages")
     return jax.sharding.Mesh(
         np.asarray(devs).reshape(n_stages, len(devs) // n_stages),
         ("pipe", "data"))

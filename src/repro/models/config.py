@@ -95,11 +95,15 @@ class ModelConfig:
     def __post_init__(self):
         if self.head_dim == 0 and self.n_heads:
             object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
-        assert self.n_layers % len(self.block_pattern) == 0, (
-            f"{self.name}: pattern {self.block_pattern} must tile "
-            f"{self.n_layers} layers")
+        if self.n_layers % len(self.block_pattern) != 0:
+            raise ValueError(
+                f"{self.name}: pattern {self.block_pattern} must tile "
+                f"{self.n_layers} layers")
         if self.n_heads and self.n_kv_heads:
-            assert self.n_heads % self.n_kv_heads == 0
+            if self.n_heads % self.n_kv_heads != 0:
+                raise ValueError(
+                    f"{self.name}: n_heads={self.n_heads} must be a "
+                    f"multiple of n_kv_heads={self.n_kv_heads}")
 
     # ------------------------------------------------------------------
     @property

@@ -89,6 +89,7 @@ class Builder:
 
     def add(self, name: str, shape, logical: Tuple[Optional[str], ...],
             scale: float = 0.02, init: str = "normal"):
+        # Caller-side literals, not user input.  # lint: allow-assert
         assert len(shape) == len(logical), (name, shape, logical)
         if init == "normal":
             v = jax.random.normal(self._next(), shape, self.param_dtype) * scale
@@ -225,7 +226,9 @@ def attention(p: Params, cfg: ModelConfig, x, pos, *, window: Optional[int],
 
     new_cache = None
     if mode == "decode":
-        assert cache is not None and s == 1
+        if cache is None or s != 1:
+            raise ValueError("decode mode needs a cache and a "
+                             "single-token step")
         end = cache["end"]                       # tokens already in cache
         s_alloc = cache["k"].shape[1]
         # ring-buffer write position (windowed caches wrap around)
@@ -505,7 +508,9 @@ def ssd(p: Params, cfg: ModelConfig, x, *, mode: str,
     adt = dt * a                                               # (B,S,H) <=0
 
     if mode == "decode":
-        assert cache is not None and s == 1
+        if cache is None or s != 1:
+            raise ValueError("decode mode needs a cache and a "
+                             "single-token step")
         st = cache["state"].astype(jnp.float32)                # (B,H,P,N)
         dt1, adt1 = dt[:, 0], adt[:, 0]                        # (B,H)
         xb = jnp.einsum("bhp,bn->bhpn", xs[:, 0].astype(jnp.float32),
@@ -629,7 +634,9 @@ def rglru(p: Params, cfg: ModelConfig, x, *, mode: str,
     beta = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * gated_x
 
     if mode == "decode":
-        assert cache is not None and s == 1
+        if cache is None or s != 1:
+            raise ValueError("decode mode needs a cache and a "
+                             "single-token step")
         h0 = cache["state"].astype(jnp.float32)           # (B,w)
         h = a[:, 0] * h0 + beta[:, 0]
         y = h[:, None, :]

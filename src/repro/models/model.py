@@ -57,6 +57,7 @@ class _AxesBuilder:
         self.axes: Dict[str, Any] = {}
 
     def add(self, name, shape, logical, **kw):
+        # Caller-side literals, not user input.  # lint: allow-assert
         assert len(shape) == len(logical), (name, shape, logical)
         self.params[name] = None            # presence checks (sparsity)
         self.axes[name] = logical

@@ -176,7 +176,8 @@ def spec_tree(axes_tree, shape_tree=None):
 def sharding_tree(axes_tree, shape_tree=None):
     """Map a tree of logical-axes tuples to NamedShardings."""
     mesh = _CTX.mesh
-    assert mesh is not None, "sharding_tree needs an active axis_rules mesh"
+    if mesh is None:
+        raise ValueError("sharding_tree needs an active axis_rules mesh")
     if shape_tree is None:
         return jax.tree.map(
             lambda ax: NamedSharding(mesh, resolve(ax)), axes_tree,

@@ -188,9 +188,9 @@ class SpMMEngine:
                              f"or 'pipelined', got {variant!r}")
         self._ops = ops
         self.pattern_version: Optional[int] = None
-        self._set_operand(a, mesh, shard_axis)
         self.max_wave_cols = max_wave_cols
         self.variant = variant
+        self._set_operand(a, mesh, shard_axis)
         self.interpret = interpret
         self.queue: List[SpMMRequest] = []
         self.finished: List[SpMMRequest] = []
@@ -247,10 +247,40 @@ class SpMMEngine:
             return getattr(prep.plan.spec, "mesh", None) is not None
         return isinstance(prep, self._ops.ShardedPreparedOperand)
 
+    def _check_feasible(self, prep) -> None:
+        """Validate an incoming operand through the static kernel checker
+        (``repro.analysis``) for this engine's wave shape, BEFORE it is
+        committed: a tuned plan config is re-proven against the VMEM
+        budgets, and an explicitly pinned variant must fit the hard
+        per-core budget at ``max_wave_cols``. Raises
+        ``analysis.KernelConfigError`` (a ValueError, so a rejected swap
+        leaves the engine on the old operand)."""
+        from ..analysis import kernel_check
+        from ..sparse import api
+        if isinstance(prep, api.BoundPlan):
+            prep.plan.check_feasible(self.max_wave_cols)
+            return
+        if self.variant == "auto" or not hasattr(prep, "idx"):
+            return            # auto dispatch only picks feasible orders
+        idx = prep.idx
+        if idx.ndim == 4:     # sharded: each device launches one panel
+            idx = idx[0]
+        # Same default col-tile heuristic ops.spmm applies at launch.
+        np128 = -(-self.max_wave_cols // 128) * 128
+        tiles = -(-np128 // 512)
+        bn = -(-np128 // (tiles * 128)) * 128
+        kernel_check.require_feasible(
+            self.variant, m=idx.shape[0], n=self.max_wave_cols, bm=128,
+            bn=bn, n_sections=idx.shape[1], smax=idx.shape[2],
+            section=prep.section, rules=(kernel_check.RULE_VMEM,),
+            context=f"engine variant={self.variant!r} at "
+                    f"max_wave_cols={self.max_wave_cols}")
+
     def _set_operand(self, a, mesh, shard_axis):
         from ..sparse import api
-        self.a, self.prep, self.pattern_version = \
-            self._build_operand(a, mesh, shard_axis)
+        a, prep, version = self._build_operand(a, mesh, shard_axis)
+        self._check_feasible(prep)
+        self.a, self.prep, self.pattern_version = a, prep, version
         self._bound = self.prep if isinstance(self.prep, api.BoundPlan) \
             else None
         self.sharded = self._is_sharded(self.prep)
@@ -275,6 +305,7 @@ class SpMMEngine:
         from ..sparse import api
         new_a, new_prep, new_version = self._build_operand(a, mesh,
                                                            shard_axis)
+        self._check_feasible(new_prep)      # static VMEM proof pre-commit
         if tuple(new_prep.shape) != tuple(self.prep.shape):
             raise ValueError(
                 f"swap_pattern: new operand shape {tuple(new_prep.shape)} "

@@ -44,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
+from ..analysis import kernel_check as _kernel_check
 from ..core.bsr import BSR
 from ..core.crs import CRS
 from ..core.incrs import InCRS
@@ -523,6 +524,26 @@ class MatmulPlan:
             persist=persist)
         return dataclasses.replace(self, tuned=cfg)
 
+    def check_feasible(self, n_cols: int) -> None:
+        """Prove this plan's tuned config against the static VMEM
+        budgets of ``analysis.kernel_check`` for an ``n_cols``-wide RHS.
+
+        Raises :class:`repro.analysis.KernelConfigError` naming the
+        violated budget term — e.g. a tuned-cache entry swept under a
+        larger ``REPRO_VMEM_BUDGET`` than the current one. No-op for
+        untuned plans and non-InCRS formats."""
+        cfg = self.tuned
+        arrs = self._tuning_arrays()
+        if cfg is None or arrs is None:
+            return
+        idx, section = arrs
+        _kernel_check.require_feasible(
+            cfg.variant, m=idx.shape[0], n=int(n_cols), bm=cfg.bm,
+            bn=cfg.bn, n_sections=idx.shape[1], smax=idx.shape[2],
+            section=section, rules=_kernel_check.BUDGET_RULES,
+            context=f"plan tuned config ({cfg.variant}, bm={cfg.bm}, "
+                    f"bn={cfg.bn})")
+
     def pack(self, w) -> jnp.ndarray:
         """Dense W (d_in, d_out) -> packed plan values (for 'dense' the
         A = W^T array itself, pattern-masked)."""
@@ -625,6 +646,10 @@ def plan(spec: SparseSpec, rhs_shape: Optional[Tuple[int, ...]] = None, *,
         else:
             built = dataclasses.replace(
                 built, tuned=built.lookup_tuned(n_cols))
+        # Fail at plan time, not launch time: a tuned config that violates
+        # the (configurable) VMEM budgets raises a structured
+        # KernelConfigError naming the violated term.
+        built.check_feasible(n_cols)
     return built
 
 

@@ -348,6 +348,9 @@ def _transpose_gather(fwd_idx: np.ndarray, bwd_idx: np.ndarray,
     ok = bkey.size == fkey.size and np.array_equal(
         fkey[np.clip(where, 0, max(fkey.size - 1, 0))] if fkey.size
         else fkey, bkey)
+    # Internal invariant of the packer, not caller input; -O strips it
+    # but the gather below still lands on the sentinel row and the
+    # transpose-check test catches regressions.  # lint: allow-assert
     assert ok, \
         "fwd/bwd stripe non-zero sets must be transposes of each other"
     t_gather = np.full(bwd_idx.size, fwd_idx.size, dtype=np.int32)

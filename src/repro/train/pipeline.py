@@ -70,7 +70,9 @@ def split_stages(stacked_params, n_stages: int):
     (n_stages, groups_per_stage, ...) for the pipeline executor."""
     def r(a):
         g = a.shape[0]
-        assert g % n_stages == 0, (g, n_stages)
+        if g % n_stages != 0:
+            raise ValueError(f"{g} layer groups do not divide into "
+                             f"{n_stages} pipeline stages")
         return a.reshape(n_stages, g // n_stages, *a.shape[1:])
     return jax.tree.map(r, stacked_params)
 

@@ -42,7 +42,9 @@ def loss_and_grads(cfg: ModelConfig, params, batch, *, n_micro: int = 1,
 
     def split(x):
         b = x.shape[0]
-        assert b % n_micro == 0, (b, n_micro)
+        if b % n_micro != 0:
+            raise ValueError(f"batch {b} not divisible by "
+                             f"n_micro={n_micro}")
         return x.reshape(n_micro, b // n_micro, *x.shape[1:])
     mbs = jax.tree.map(split, batch)
 

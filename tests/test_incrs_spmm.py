@@ -253,7 +253,7 @@ def test_prep_rounds_bit_identical_to_loop(rng, seed, rounds):
 
 def test_from_crs_rejects_oversized_block_count():
     crs = CRS.from_dense(np.eye(4, dtype=np.float32))
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         InCRS.from_crs(crs, section=256, block=128)   # 128 > 2^6 - 1
 
 
