@@ -6,10 +6,12 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-# Static gate FIRST — kernel-invariant verifier + repo lint
-# (VMEM budgets, DMA pairing of the pipelined kernel, -O-safe
-# validation, legacy names). Any finding fails CI before a single
-# test or kernel runs: `python -m repro.analysis` to reproduce.
+# Static gate FIRST — kernel-invariant verifier + grid abstract
+# interpreter + repo lint (VMEM budgets, DMA pairing of every
+# async-copy kernel, per-kernel bounds/accumulator/coverage/race
+# proofs, -O-safe validation, legacy names). Any finding fails CI
+# before a single test or kernel runs: `python -m repro.analysis` to
+# reproduce; `--json report.json` for the structured report.
 python -m repro.analysis --check
 
 # DeprecationWarnings are ERRORS: src/, examples/ and benchmarks/ are

@@ -3,15 +3,21 @@
 Prove resource budgets and code-health invariants *before* anything
 runs — the software equivalent of the paper's statically-sized mesh:
 
-* :mod:`repro.analysis.vmem` — symbolic per-variant VMEM footprint
+* :mod:`repro.analysis.vmem` — symbolic per-kernel VMEM footprint
   model (the single source of truth for "does this config fit?");
 * :mod:`repro.analysis.kernel_check` — config feasibility
-  (:func:`check_incrs_config` / :class:`KernelConfigError`), the DMA
-  start/wait pairing verifier for the double-buffered kernel, and the
-  footprint-model drift guard;
+  (:func:`check_incrs_config` / :class:`KernelConfigError`), the
+  pattern-driven DMA start/wait pairing verifier (any kernel using
+  ``make_async_copy``), and the footprint-model drift guard;
+* :mod:`repro.analysis.grid_interp` — the grid abstract interpreter:
+  per-kernel proofs of bounds safety, accumulator init/flush
+  discipline, exact output coverage and parallel-axis race-freedom,
+  summarized in a proof matrix;
 * :mod:`repro.analysis.lint` — AST rules for the repo's recurring bug
   classes (``no-bare-assert``, ``validation-survives-O``,
-  ``pytree-static-meta``, ``no-legacy-names``).
+  ``pytree-static-meta``, ``no-legacy-names``);
+* :mod:`repro.analysis.registry` — the single rule/pass registry that
+  drives both ``--list-rules`` and the ``--check`` gate.
 
 Run the whole gate with ``python -m repro.analysis --check`` (as
 ``scripts/ci.sh`` does). Pure Python: importing this package pulls in
@@ -19,9 +25,16 @@ no jax.
 """
 from .kernel_check import (KernelConfigError, Violation,  # noqa: F401
                            check_incrs_config, require_feasible,
-                           check_dma_pairing, check_scratch_drift,
-                           check_kernel_invariants, BUDGET_RULES)
+                           check_dma_pairing, check_dma_pairing_auto,
+                           check_scratch_drift, check_kernel_invariants,
+                           check_repo_invariants, discover_dma_kernels,
+                           BUDGET_RULES, LAUNCH_RULES)
 from .lint import Finding, lint_source, lint_file, lint_tree  # noqa: F401
+from .grid_interp import (GridFinding, GRID_RULES,  # noqa: F401
+                          check_kernel_grid, check_all_grids,
+                          check_config_bounds, proof_matrix,
+                          format_proof_matrix)
 from .vmem import (DEFAULT_VMEM_BUDGET, PANEL_BYTES,  # noqa: F401
                    VmemFootprint, VmemTerm, vmem_budget,
-                   incrs_footprint, bsr_footprint, dense_footprint)
+                   incrs_footprint, bsr_footprint, dense_footprint,
+                   flash_footprint)

@@ -1,28 +1,41 @@
 """``python -m repro.analysis`` — run the full static gate.
 
-Combines the repo lint (``analysis.lint``) with the kernel-source
-invariants (DMA pairing of the double-buffered kernel + footprint-model
-drift) and prints one ``file:line rule message`` line per finding.
+Runs every registered pass (``analysis.registry``): the repo lint, the
+kernel-source invariants (pattern-driven DMA pairing + footprint-model
+drift across all kernel modules) and the grid abstract interpreter
+(bounds / accumulator discipline / output coverage / race-freedom for
+every Pallas kernel body), and prints one ``file:line rule message``
+line per finding plus the per-kernel proof matrix.
 
 ``--check`` makes any finding a non-zero exit (the CI gate in
-``scripts/ci.sh``); without it the report is informational.
+``scripts/ci.sh``); without it the report is informational. ``--json``
+writes a structured report (findings, rule table, proof matrix) for CI
+artifact upload.
 """
 from __future__ import annotations
 
 import argparse
-import os
+import json
 import sys
 
-from . import kernel_check, lint
+from . import grid_interp, registry
 
 
 def run(root: str) -> list:
-    findings = lint.lint_tree(root)
-    kpath = os.path.relpath(kernel_check.kernel_source_path(),
-                            root).replace(os.sep, "/")
-    for kf in kernel_check.check_kernel_invariants():
-        findings.append(lint.Finding(kpath, kf.line, kf.rule, kf.message))
-    return findings
+    return registry.run_all(root)
+
+
+def _json_report(findings, matrix) -> dict:
+    return {
+        "findings": [{"path": f.path, "line": f.line, "rule": f.rule,
+                      "message": f.message} for f in findings],
+        "count": len(findings),
+        "rules": registry.all_rules(),
+        "passes": [{"name": p.name, "rules": list(p.rules)}
+                   for p in registry.PASSES],
+        "proof_matrix": matrix,
+        "properties": list(grid_interp.PROPERTIES),
+    }
 
 
 def main(argv=None) -> int:
@@ -34,22 +47,24 @@ def main(argv=None) -> int:
     ap.add_argument("--root", default=".",
                     help="repo root to lint (default: cwd)")
     ap.add_argument("--list-rules", action="store_true",
-                    help="print the lint rule table and exit")
+                    help="print the full rule table and exit")
+    ap.add_argument("--json", metavar="FILE", default=None,
+                    help="also write a structured JSON report "
+                         "(findings + rules + proof matrix)")
     args = ap.parse_args(argv)
     if args.list_rules:
-        for rule in lint.ALL_RULES:
-            print(f"{rule:<22} {lint.RULE_DESCRIPTIONS[rule]}")
-        for rule in (kernel_check.RULE_VMEM, kernel_check.RULE_PANEL,
-                     kernel_check.RULE_ALIGN, kernel_check.RULE_GRID,
-                     kernel_check.RULE_DMA_READ,
-                     kernel_check.RULE_DMA_WAIT,
-                     kernel_check.RULE_DMA_LEAK,
-                     kernel_check.RULE_DRIFT):
-            print(rule)
+        for rule, desc in registry.all_rules().items():
+            print(f"{rule:<26} {desc}")
         return 0
     findings = run(args.root)
+    matrix = grid_interp.proof_matrix()
     for f in findings:
         print(f.format())
+    print(grid_interp.format_proof_matrix(matrix))
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(_json_report(findings, matrix), fh, indent=2)
+        print(f"json report: {args.json}", file=sys.stderr)
     n = len(findings)
     print(f"repro.analysis: {n} finding{'s' if n != 1 else ''}",
           file=sys.stderr)

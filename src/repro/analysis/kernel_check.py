@@ -40,6 +40,7 @@ RULE_VMEM = "vmem-budget"
 RULE_PANEL = "panel-budget"
 RULE_ALIGN = "tile-alignment"
 RULE_GRID = "grid-bounds"
+RULE_OOB = "grid-oob-access"           # proved by analysis.grid_interp
 RULE_DMA_READ = "dma-read-before-wait"
 RULE_DMA_WAIT = "dma-wait-without-start"
 RULE_DMA_LEAK = "dma-unwaited-start"
@@ -48,6 +49,26 @@ RULE_DMA_OPAQUE = "dma-unverifiable"
 RULE_DRIFT = "vmem-model-drift"
 
 BUDGET_RULES = (RULE_VMEM, RULE_PANEL)
+# What plan()/autotune gate a candidate launch on: VMEM budgets plus the
+# grid interpreter's interval bounds proof (out-of-bounds dslice/index
+# map arithmetic at the candidate geometry).
+LAUNCH_RULES = BUDGET_RULES + (RULE_OOB,)
+
+# name -> one-line description; the registry merges this table with the
+# lint and grid_interp tables so ``--list-rules`` cannot drift.
+RULES: Dict[str, str] = {
+    RULE_VMEM: "total kernel VMEM footprint exceeds the core budget",
+    RULE_PANEL: "output-stationary panel working set exceeds its budget",
+    RULE_ALIGN: "tile shape not aligned to native (sublane, lane) vregs",
+    RULE_GRID: "section/grid geometry inconsistent with the operands",
+    # RULE_OOB is described in grid_interp.RULES (the pass that proves it).
+    RULE_DMA_READ: "DMA destination read while its copy is in flight",
+    RULE_DMA_WAIT: "DMA wait on a slot with no copy in flight",
+    RULE_DMA_LEAK: "DMA copy started but never waited (semaphore leak)",
+    RULE_DMA_DOUBLE: "DMA slot restarted while its copy is in flight",
+    RULE_DMA_OPAQUE: "DMA protocol not statically verifiable",
+    RULE_DRIFT: "kernel scratch signature drifted from the VMEM model",
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -189,6 +210,15 @@ def check_incrs_config(variant: str, *, m: int, n: int, bm: int, bn: int,
                 f"{hard // (1024 * 1024)} MiB core budget (largest "
                 f"term: {big.name} {big.formula} = {big.nbytes} B)",
                 term=big.name, nbytes=fp.total_bytes, limit=hard))
+
+    # Interval bounds proof: every dslice/load/index-map access of the
+    # kernel body stays inside its ref at this exact geometry. Imported
+    # lazily — grid_interp depends on this module for Violation.
+    if want(RULE_OOB):
+        from . import grid_interp
+        out.extend(grid_interp.check_config_bounds(
+            variant, m=m, n=n, bm=bm, bn=bn, n_sections=n_sections,
+            smax=smax, section=section))
     return out
 
 
@@ -307,14 +337,46 @@ class _Event:
     cond: Optional[ast.expr] = None    # pl.when guard, if any
 
 
+def _inline_copy_dst(call: ast.Call) -> Optional[Tuple[str, ast.expr]]:
+    """For a direct ``make_async_copy(src, dst, sem)`` call, the
+    destination buffer name and its slot expression (``buf.at[slot]``;
+    a bare ref means slot 0)."""
+    if _terminal_name(call.func) != "make_async_copy" \
+            or len(call.args) < 2:
+        return None
+    dst = call.args[1]
+    if isinstance(dst, ast.Subscript) \
+            and isinstance(dst.value, ast.Attribute) \
+            and dst.value.attr == "at" \
+            and isinstance(dst.value.value, ast.Name):
+        return dst.value.value.id, dst.slice
+    if isinstance(dst, ast.Name):
+        return dst.id, ast.Constant(value=0)
+    return None
+
+
+def _find_inline_dsts(fn: ast.FunctionDef) -> set:
+    """Destination buffer names of chained (helper-free)
+    ``pltpu.make_async_copy(...).start()/.wait()`` calls."""
+    dsts = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            hit = _inline_copy_dst(node)
+            if hit is not None:
+                dsts.add(hit[0])
+    return dsts
+
+
 def _collect_events(stmts: Sequence[ast.stmt],
                     helpers: Dict[str, _CopyHelper],
                     skip_defs: Sequence[str],
-                    cond: Optional[ast.expr] = None) -> List[_Event]:
+                    cond: Optional[ast.expr] = None,
+                    dst_bufs: Optional[set] = None) -> List[_Event]:
     """Events in trace order. ``@pl.when(c)``-decorated inner defs
     execute conditionally at their definition site, so their events are
     collected in place with the guard attached."""
-    dst_bufs = {h.dst_buf for h in helpers.values()}
+    if dst_bufs is None:
+        dst_bufs = {h.dst_buf for h in helpers.values()}
     events: List[_Event] = []
     for stmt in stmts:
         if isinstance(stmt, ast.FunctionDef):
@@ -331,7 +393,7 @@ def _collect_events(stmts: Sequence[ast.stmt],
             elif guard is None:
                 guard = cond
             events.extend(_collect_events(stmt.body, helpers, skip_defs,
-                                          cond=guard))
+                                          cond=guard, dst_bufs=dst_bufs))
             continue
         for node in ast.walk(stmt):
             if isinstance(node, ast.Call) \
@@ -346,6 +408,11 @@ def _collect_events(stmts: Sequence[ast.stmt],
                         events.append(_Event(
                             node.func.attr, inner.args[h.slot_param],
                             node.lineno, cond))
+                else:
+                    hit = _inline_copy_dst(inner)
+                    if hit is not None:
+                        events.append(_Event(node.func.attr, hit[1],
+                                             node.lineno, cond))
             elif isinstance(node, ast.Subscript) \
                     and isinstance(node.value, ast.Name) \
                     and node.value.id in dst_bufs \
@@ -404,47 +471,63 @@ def check_dma_pairing(source: Optional[str] = None,
         return [DmaFinding(RULE_DMA_OPAQUE, 0,
                            f"kernel function {func!r} not found")]
     helpers = _find_copy_helpers(fn)
-    if not helpers:
+    dst_bufs = {h.dst_buf for h in helpers.values()} \
+        | _find_inline_dsts(fn)
+    if not dst_bufs:
         return [DmaFinding(
             RULE_DMA_OPAQUE, fn.lineno,
             f"{func}: no make_async_copy helper found — the DMA "
             f"protocol cannot be verified")]
 
-    # Loop discovery: jax.lax.fori_loop(lo, hi, body, init).
-    loop_call = next(
-        (node for node in ast.walk(fn)
-         if isinstance(node, ast.Call)
-         and _terminal_name(node.func) == "fori_loop"), None)
-    if loop_call is None or len(loop_call.args) < 3 \
-            or not isinstance(loop_call.args[2], ast.Name):
-        return [DmaFinding(RULE_DMA_OPAQUE, fn.lineno,
-                           f"{func}: no fori_loop(lo, hi, body) found")]
-    body_name = loop_call.args[2].id
-    body_fn = next((s for s in fn.body
-                    if isinstance(s, ast.FunctionDef)
-                    and s.name == body_name), None)
-    if body_fn is None:
-        return [DmaFinding(RULE_DMA_OPAQUE, loop_call.lineno,
-                           f"{func}: loop body {body_name!r} not found")]
-    loop_var = body_fn.args.args[0].arg
-
     # Concrete environment: kernel closure params + simple assignments
-    # (e.g. ``total = n_sections * n_ct``) evaluated in order.
+    # (e.g. ``total = n_sections * n_ct``) evaluated in order. Static
+    # kw-only params the caller didn't pin get a small default so a new
+    # kernel's slot arithmetic still evaluates concretely.
     n_sections, n_ct = trip_counts
     env: Dict[str, int] = {"n_sections": n_sections, "n_ct": n_ct,
                            "section": vmem.SUBLANE * 2,
                            "bn": vmem.LANE}
+    for a in fn.args.kwonlyargs:
+        env.setdefault(a.arg, 2)
     _exec_assigns(fn.body, env)
-    lo = _ev(loop_call.args[0], env)
-    hi = _ev(loop_call.args[1], env)
-    if lo is _OPAQUE or hi is _OPAQUE:
-        lo, hi = 0, n_sections * n_ct
 
-    skip = [body_name] + list(helpers)
-    prologue = _collect_events(
-        [s for s in fn.body if not isinstance(s, ast.FunctionDef)],
-        helpers, skip)
-    body_events = _collect_events(body_fn.body, helpers, skip)
+    # Loop discovery: jax.lax.fori_loop(lo, hi, body, init). A kernel
+    # without one is treated as straight-line: its events run once.
+    loop_call = next(
+        (node for node in ast.walk(fn)
+         if isinstance(node, ast.Call)
+         and _terminal_name(node.func) == "fori_loop"), None)
+    if loop_call is not None and (
+            len(loop_call.args) < 3
+            or not isinstance(loop_call.args[2], ast.Name)):
+        return [DmaFinding(RULE_DMA_OPAQUE, fn.lineno,
+                           f"{func}: fori_loop without a named body")]
+    if loop_call is None:
+        body_fn, loop_var, lo, hi = None, None, 0, 0
+        skip = list(helpers)
+        prologue = _collect_events(fn.body, helpers, skip,
+                                   dst_bufs=dst_bufs)
+        body_events: List[_Event] = []
+    else:
+        body_name = loop_call.args[2].id
+        body_fn = next((s for s in fn.body
+                        if isinstance(s, ast.FunctionDef)
+                        and s.name == body_name), None)
+        if body_fn is None:
+            return [DmaFinding(
+                RULE_DMA_OPAQUE, loop_call.lineno,
+                f"{func}: loop body {body_name!r} not found")]
+        loop_var = body_fn.args.args[0].arg
+        lo = _ev(loop_call.args[0], env)
+        hi = _ev(loop_call.args[1], env)
+        if lo is _OPAQUE or hi is _OPAQUE:
+            lo, hi = 0, n_sections * n_ct
+        skip = [body_name] + list(helpers)
+        prologue = _collect_events(
+            [s for s in fn.body if not isinstance(s, ast.FunctionDef)],
+            helpers, skip, dst_bufs=dst_bufs)
+        body_events = _collect_events(body_fn.body, helpers, skip,
+                                      dst_bufs=dst_bufs)
 
     findings: List[DmaFinding] = []
     opaque_lines: set = set()
@@ -504,7 +587,8 @@ def check_dma_pairing(source: Optional[str] = None,
     for slot, cnt in sorted(in_flight.items()):
         if cnt:
             findings.append(DmaFinding(
-                RULE_DMA_LEAK, body_fn.lineno,
+                RULE_DMA_LEAK,
+                body_fn.lineno if body_fn is not None else fn.lineno,
                 f"slot {slot} has {cnt} started cop"
                 f"{'y' if cnt == 1 else 'ies'} never waited at loop "
                 f"exit (semaphore leak / next-launch deadlock)"))
@@ -519,53 +603,130 @@ def check_dma_pairing(source: Optional[str] = None,
 
 
 # ----------------------------------------------------------------------
+# Pattern-driven discovery: any kernel body using make_async_copy gets
+# the pairing proof automatically, whichever module it lives in — the
+# coming SpGEMM merge kernel is covered the day it lands.
+def kernel_modules() -> Tuple[str, ...]:
+    """Kernel module filenames covered by the static passes (the grid
+    interpreter's geometry table is the source of truth)."""
+    from . import grid_interp
+    return tuple(sorted({g.module
+                         for g in grid_interp.GEOMETRIES.values()}))
+
+
+def _module_source(module: str,
+                   sources: Optional[Dict[str, str]] = None) -> str:
+    if sources is not None and module in sources:
+        return sources[module]
+    path = os.path.join(os.path.dirname(kernel_source_path()), module)
+    with open(path) as f:
+        return f.read()
+
+
+def discover_dma_kernels(source: str) -> List[str]:
+    """Names of top-level functions whose body contains a
+    ``make_async_copy`` call (directly or via a local helper)."""
+    names: List[str] = []
+    for node in ast.parse(source).body:
+        if not isinstance(node, ast.FunctionDef):
+            continue
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call) \
+                    and _terminal_name(sub.func) == "make_async_copy":
+                names.append(node.name)
+                break
+    return names
+
+
+def check_dma_pairing_auto(sources: Optional[Dict[str, str]] = None
+                           ) -> List[Tuple[str, DmaFinding]]:
+    """DMA pairing proofs for every discovered async-copy kernel across
+    all kernel modules, as ``(module, finding)`` pairs."""
+    out: List[Tuple[str, DmaFinding]] = []
+    for module in kernel_modules():
+        src = _module_source(module, sources)
+        for func in discover_dma_kernels(src):
+            out.extend((module, f)
+                       for f in check_dma_pairing(src, func=func))
+    return out
+
+
+# ----------------------------------------------------------------------
 # Layer 3: footprint-model drift guard.
-def check_scratch_drift(source: Optional[str] = None) -> List[DmaFinding]:
+def _entry_module(name: str) -> str:
+    from . import grid_interp
+    g = grid_interp.GEOMETRIES.get(name)
+    return g.module if g is not None else "incrs_spmm.py"
+
+
+def _check_entry_scratch(tree: ast.Module, name: str,
+                         expected: Tuple[str, ...]) -> List[DmaFinding]:
+    fn = next((node for node in ast.walk(tree)
+               if isinstance(node, ast.FunctionDef)
+               and node.name == name), None)
+    if fn is None:
+        return [DmaFinding(
+            RULE_DRIFT, 0, f"kernel entry {name!r} not found but "
+            f"modelled in vmem.EXPECTED_SCRATCH")]
+    # scratch_shapes may sit on pallas_call directly or on a grid spec
+    # (PrefetchScalarGridSpec); accept either carrier.
+    kw = next((k for node in ast.walk(fn)
+               if isinstance(node, ast.Call)
+               for k in node.keywords
+               if k.arg == "scratch_shapes"), None)
+    if kw is None:
+        if expected == ():
+            return []
+        return [DmaFinding(
+            RULE_DRIFT, fn.lineno,
+            f"{name}: no literal scratch_shapes list found")]
+    if not isinstance(kw.value, (ast.List, ast.Tuple)):
+        return [DmaFinding(
+            RULE_DRIFT, fn.lineno,
+            f"{name}: scratch_shapes is not a literal list")]
+    kinds = []
+    for el in kw.value.elts:
+        if isinstance(el, ast.Call):
+            parts = []
+            node = el.func
+            while isinstance(node, ast.Attribute):
+                parts.append(node.attr)
+                node = node.value
+            kinds.append(".".join(reversed(parts)) or "?")
+        else:
+            kinds.append("?")
+    # Drop the pltpu prefix for comparison ("pltpu.VMEM" -> "VMEM").
+    kinds = tuple(k.split(".", 1)[-1] if k.startswith("pltpu.")
+                  else k for k in kinds)
+    if kinds != expected:
+        return [DmaFinding(
+            RULE_DRIFT, kw.value.lineno if hasattr(kw.value, "lineno")
+            else fn.lineno,
+            f"{name}: scratch_shapes signature {kinds} != modelled "
+            f"{expected} — update analysis/vmem.py footprints")]
+    return []
+
+
+def check_scratch_drift(source: Optional[str] = None,
+                        sources: Optional[Dict[str, str]] = None
+                        ) -> List[DmaFinding]:
     """Compare each kernel entry point's real ``scratch_shapes``
     signature against ``vmem.EXPECTED_SCRATCH`` — the footprint model
-    must change in lockstep with the kernels."""
-    src = _load_kernel_source(source)
-    tree = ast.parse(src)
+    must change in lockstep with the kernels. ``source`` overrides the
+    incrs module (historical single-module signature); ``sources`` maps
+    module filename -> text for any module."""
     findings: List[DmaFinding] = []
+    trees: Dict[str, ast.Module] = {}
     for name, expected in vmem.EXPECTED_SCRATCH.items():
-        fn = next((node for node in ast.walk(tree)
-                   if isinstance(node, ast.FunctionDef)
-                   and node.name == name), None)
-        if fn is None:
-            findings.append(DmaFinding(
-                RULE_DRIFT, 0, f"kernel entry {name!r} not found but "
-                f"modelled in vmem.EXPECTED_SCRATCH"))
-            continue
-        kw = next((k for node in ast.walk(fn)
-                   if isinstance(node, ast.Call)
-                   and _terminal_name(node.func) == "pallas_call"
-                   for k in node.keywords
-                   if k.arg == "scratch_shapes"), None)
-        if kw is None or not isinstance(kw.value, (ast.List, ast.Tuple)):
-            findings.append(DmaFinding(
-                RULE_DRIFT, fn.lineno,
-                f"{name}: no literal scratch_shapes list found"))
-            continue
-        kinds = []
-        for el in kw.value.elts:
-            if isinstance(el, ast.Call):
-                parts = []
-                node = el.func
-                while isinstance(node, ast.Attribute):
-                    parts.append(node.attr)
-                    node = node.value
-                kinds.append(".".join(reversed(parts)) or "?")
+        module = _entry_module(name)
+        if module not in trees:
+            if source is not None and module == "incrs_spmm.py":
+                src = source
             else:
-                kinds.append("?")
-        # Drop the pltpu prefix for comparison ("pltpu.VMEM" -> "VMEM").
-        kinds = tuple(k.split(".", 1)[-1] if k.startswith("pltpu.")
-                      else k for k in kinds)
-        if kinds != expected:
-            findings.append(DmaFinding(
-                RULE_DRIFT, kw.value.lineno if hasattr(kw.value, "lineno")
-                else fn.lineno,
-                f"{name}: scratch_shapes signature {kinds} != modelled "
-                f"{expected} — update analysis/vmem.py footprints"))
+                src = _module_source(module, sources)
+            trees[module] = ast.parse(src)
+        findings.extend(_check_entry_scratch(trees[module], name,
+                                             expected))
     return findings
 
 
@@ -574,3 +735,19 @@ def check_kernel_invariants(source: Optional[str] = None
     """Everything the checker can prove about the kernel *source*: DMA
     pairing of the pipelined variant + footprint-model drift."""
     return check_dma_pairing(source) + check_scratch_drift(source)
+
+
+def check_repo_invariants(sources: Optional[Dict[str, str]] = None
+                          ) -> List[Tuple[str, DmaFinding]]:
+    """DMA pairing (pattern-driven, all modules) + scratch drift for
+    every modelled kernel, attributed as ``(module, finding)``."""
+    out = list(check_dma_pairing_auto(sources))
+    trees: Dict[str, ast.Module] = {}
+    for name, expected in vmem.EXPECTED_SCRATCH.items():
+        module = _entry_module(name)
+        if module not in trees:
+            trees[module] = ast.parse(_module_source(module, sources))
+        out.extend((module, f)
+                   for f in _check_entry_scratch(trees[module], name,
+                                                 expected))
+    return out

@@ -1,0 +1,87 @@
+"""Single registry of every static-analysis rule and pass.
+
+``python -m repro.analysis --list-rules`` and the ``--check`` gate are
+both driven from here, so a new pass cannot be registered for one and
+silently omitted from the other (the PR-7 CLI hand-enumerated the
+kernel_check rules and dropped two of them — this module is the fix).
+
+Three rule families, one namespace:
+
+* ``lint``         — repo-wide AST lint (asserts, -O safety, pytrees).
+* ``kernel_check`` — config feasibility, DMA pairing, model drift.
+* ``grid_interp``  — the grid abstract interpreter (bounds, accumulator
+  discipline, output coverage, race-freedom).
+
+Rule names are globally unique; :func:`all_rules` raises at import of a
+colliding rule rather than letting one table shadow another.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Callable, Dict, List, Tuple
+
+from . import grid_interp, kernel_check, lint
+
+
+def all_rules() -> Dict[str, str]:
+    """name -> one-line description, every family merged (collision is
+    a programming error and raises)."""
+    merged: Dict[str, str] = {}
+    for family in (lint.RULE_DESCRIPTIONS, kernel_check.RULES,
+                   grid_interp.RULES):
+        for name, desc in family.items():
+            if name in merged and merged[name] != desc:
+                raise ValueError(f"rule name collision: {name!r}")
+            merged[name] = desc
+    return merged
+
+
+@dataclasses.dataclass(frozen=True)
+class Pass:
+    """One registered analysis pass: a callable producing Findings."""
+    name: str
+    rules: Tuple[str, ...]
+    run: Callable[[str], List[lint.Finding]]
+
+
+def _kernel_relpath(module: str, root: str) -> str:
+    path = os.path.join(os.path.dirname(
+        kernel_check.kernel_source_path()), module)
+    return os.path.relpath(path, root).replace(os.sep, "/")
+
+
+def _run_lint(root: str) -> List[lint.Finding]:
+    return lint.lint_tree(root)
+
+
+def _run_kernel_invariants(root: str) -> List[lint.Finding]:
+    return [lint.Finding(_kernel_relpath(module, root), f.line, f.rule,
+                         f.message)
+            for module, f in kernel_check.check_repo_invariants()]
+
+
+def _run_grid_interp(root: str) -> List[lint.Finding]:
+    out: List[lint.Finding] = []
+    for entry in grid_interp.KERNELS:
+        module = grid_interp.GEOMETRIES[entry].module
+        for f in grid_interp.check_kernel_grid(entry):
+            out.append(lint.Finding(_kernel_relpath(module, root),
+                                    f.line, f.rule,
+                                    f"[{f.kernel}] {f.message}"))
+    return out
+
+
+PASSES: Tuple[Pass, ...] = (
+    Pass("lint", lint.ALL_RULES, _run_lint),
+    Pass("kernel-invariants", tuple(kernel_check.RULES),
+         _run_kernel_invariants),
+    Pass("grid-interp", grid_interp.GRID_RULES, _run_grid_interp),
+)
+
+
+def run_all(root: str) -> List[lint.Finding]:
+    findings: List[lint.Finding] = []
+    for p in PASSES:
+        findings.extend(p.run(root))
+    return findings

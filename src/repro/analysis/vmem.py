@@ -63,14 +63,20 @@ ONEHOT_BYTES = 2 * 1024 * 1024
 
 INCRS_VARIANTS = ("expand", "reuse", "pipelined")
 
-# Expected scratch_shapes signature per InCRS kernel entry point, derived
+# Expected scratch_shapes signature per kernel entry point, derived
 # from the footprint builders below. ``kernel_check.check_scratch_drift``
 # parses the real kernel source and compares against this — if someone
 # adds/removes a scratch buffer without updating the model, CI flags it.
+# (Owning module per entry comes from ``grid_interp.GEOMETRIES``.)
 EXPECTED_SCRATCH: Dict[str, Tuple[str, ...]] = {
     "incrs_spmm": ("VMEM",),
     "incrs_spmm_reuse": ("VMEM", "VMEM"),
     "incrs_spmm_pipelined": ("VMEM", "SemaphoreType.DMA", "VMEM"),
+    "bsr_spmm": ("VMEM",),
+    "dense_mm": ("VMEM",),
+    "index_match_spmm": ("VMEM",),
+    "flash_attention": ("VMEM", "VMEM", "VMEM"),
+    "incrs_gather": (),
 }
 
 
@@ -250,6 +256,33 @@ def bsr_footprint(*, n_block_rows: int, n_blocks: int, bm: int, bk: int,
         VmemTerm("acc_scratch", "scratch", (bm, bn), 4, 1),
     )
     return VmemFootprint("bsr_spmm", None, grid, terms)
+
+
+def flash_footprint(*, lanes: int, sq: int, sk: int, hd: int,
+                    bq: int = 128, bk: int = 128,
+                    dtype_bytes: int = 4) -> VmemFootprint:
+    """Footprint of one ``flash_attention`` launch, term-for-term from
+    the BlockSpecs + scratch_shapes in ``kernels/flash_attention.py``
+    (grid over query lanes x q tiles x k tiles; f32 online-softmax
+    state in scratch)."""
+    grid = (lanes, max(1, sq // max(1, bq)), max(1, sk // max(1, bk)))
+    terms = (
+        VmemTerm("q_block", "in_spec", (1, bq, hd), dtype_bytes,
+                 PIPELINE_BUFFERS),
+        VmemTerm("k_block", "in_spec", (1, bk, hd), dtype_bytes,
+                 PIPELINE_BUFFERS),
+        VmemTerm("v_block", "in_spec", (1, bk, hd), dtype_bytes,
+                 PIPELINE_BUFFERS),
+        VmemTerm("out_tile", "out_spec", (1, bq, hd), dtype_bytes,
+                 PIPELINE_BUFFERS),
+        VmemTerm("running_max", "scratch", (bq, 1), 4, 1),
+        VmemTerm("running_denom", "scratch", (bq, 1), 4, 1),
+        VmemTerm("out_accumulator", "scratch", (bq, hd), 4, 1,
+                 note="f32 online-softmax accumulator"),
+        VmemTerm("scores_transient", "transient", (bq, bk), 4, 1,
+                 note="q @ k^T logits tile"),
+    )
+    return VmemFootprint("flash_attention", None, grid, terms)
 
 
 def dense_footprint(*, m: int, k: int, n: int, bm: int, bk: int, bn: int,

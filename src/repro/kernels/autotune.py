@@ -217,9 +217,10 @@ def split_candidates(padded_rows: int, n: int, *, section: int,
                      ) -> Tuple[List[Tuple[str, int, int]], List[dict]]:
     """Partition the sweep space into (feasible, skipped_infeasible)
     through the static checker of ``analysis.kernel_check``: the
-    row-panel working-set heuristic plus the hard VMEM budget. Each
-    skip records the violated budget term so the sweep result can show
-    *why* a candidate was never measured."""
+    row-panel working-set heuristic, the hard VMEM budget, and the grid
+    interpreter's interval bounds proof (out-of-bounds index arithmetic
+    at this exact geometry). Each skip records the violated rule/term so
+    the sweep result can show *why* a candidate was never measured."""
     feasible: List[Tuple[str, int, int]] = []
     skipped: List[dict] = []
     eff_smax = section if smax is None else smax
@@ -227,7 +228,7 @@ def split_candidates(padded_rows: int, n: int, *, section: int,
         vs = kernel_check.check_incrs_config(
             variant, m=padded_rows, n=n, bm=bm, bn=bn,
             n_sections=n_sections, smax=eff_smax, section=section,
-            budget=vmem_budget, rules=kernel_check.BUDGET_RULES)
+            budget=vmem_budget, rules=kernel_check.LAUNCH_RULES)
         if vs:
             v = vs[0]
             skipped.append({"variant": variant, "bm": bm, "bn": bn,
@@ -379,7 +380,7 @@ def model_pick_variant(m: int, n: int, *, n_sections: int, smax: int,
                if not kernel_check.check_incrs_config(
                    v, m=m, n=n, bm=bm, bn=bn, n_sections=n_sections,
                    smax=smax, section=section,
-                   rules=kernel_check.BUDGET_RULES)]
+                   rules=kernel_check.LAUNCH_RULES)]
     if not allowed:
         allowed = ["expand"]           # smallest footprint: last resort
     scored = {v: predict_us(v, m, n, n_sections=n_sections, smax=smax,

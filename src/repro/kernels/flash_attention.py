@@ -11,6 +11,14 @@ Layout: q (L, Sq, hd) with L = B*KV*G flattened lanes; k/v (Lk, Sk, hd)
 with Lk = B*KV (the kernel indexes k by lane // G: GQA sharing without
 materializing repeated heads). Causal/window masking is positional, so
 padded tails are masked out naturally (pad positions < 0).
+
+Statically verified: ``analysis.vmem.flash_footprint`` models this
+launch term-for-term (scratch signature drift-guarded against
+``vmem.EXPECTED_SCRATCH``), and the grid abstract interpreter
+(``analysis.grid_interp``) proves bounds, m/l/acc init+flush
+discipline, output coverage and parallel-axis race-freedom for
+``_kernel`` in CI — safe because only the "arbitrary" K axis carries
+scratch state; the two "parallel" axes are pure tilings.
 """
 from __future__ import annotations
 

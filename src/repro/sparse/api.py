@@ -526,7 +526,9 @@ class MatmulPlan:
 
     def check_feasible(self, n_cols: int) -> None:
         """Prove this plan's tuned config against the static VMEM
-        budgets of ``analysis.kernel_check`` for an ``n_cols``-wide RHS.
+        budgets *and* the grid interpreter's bounds proof
+        (``analysis.kernel_check.LAUNCH_RULES``) for an ``n_cols``-wide
+        RHS.
 
         Raises :class:`repro.analysis.KernelConfigError` naming the
         violated budget term — e.g. a tuned-cache entry swept under a
@@ -540,7 +542,7 @@ class MatmulPlan:
         _kernel_check.require_feasible(
             cfg.variant, m=idx.shape[0], n=int(n_cols), bm=cfg.bm,
             bn=cfg.bn, n_sections=idx.shape[1], smax=idx.shape[2],
-            section=section, rules=_kernel_check.BUDGET_RULES,
+            section=section, rules=_kernel_check.LAUNCH_RULES,
             context=f"plan tuned config ({cfg.variant}, bm={cfg.bm}, "
                     f"bn={cfg.bn})")
 

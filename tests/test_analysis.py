@@ -332,7 +332,7 @@ def test_split_candidates_skips_wide_panels():
         n_sections=WIDE["n_sections"], smax=WIDE["smax"])
     assert feasible and skipped
     assert all(s["variant"] in ("reuse", "pipelined") for s in skipped)
-    assert all(s["rule"] in kernel_check.BUDGET_RULES for s in skipped)
+    assert all(s["rule"] in kernel_check.LAUNCH_RULES for s in skipped)
     assert all(s["bytes"] > s["limit"] for s in skipped)
     skipped_keys = {(s["variant"], s["bm"], s["bn"]) for s in skipped}
     assert skipped_keys.isdisjoint(set(feasible))
@@ -439,3 +439,167 @@ def test_engine_rejects_infeasible_bound_plan(rng, monkeypatch, tmp_path):
     # The identical plan serves fine at a feasible wave width.
     eng = SpMMEngine(bound, max_wave_cols=256, interpret=True)
     assert eng is not None
+
+
+# ----------------------------------------------------------------------
+# PR 8: rule registry, --json mode, pattern-driven DMA, multi-module
+# drift, and the grid-interpreter bounds prefilter.
+from repro.analysis import grid_interp, registry  # noqa: E402
+
+
+def test_registry_merges_every_rule_family():
+    rules = registry.all_rules()
+    assert set(lint.ALL_RULES) <= set(rules)
+    assert set(kernel_check.RULES) <= set(rules)
+    assert set(grid_interp.RULES) <= set(rules)
+    # Every pass-declared rule has a description (no silent omissions).
+    for p in registry.PASSES:
+        for r in p.rules:
+            assert r in rules, f"pass {p.name} rule {r} undescribed"
+    assert all(isinstance(d, str) and d for d in rules.values())
+
+
+def test_list_rules_includes_formerly_omitted_dma_rules(capsys):
+    # PR 7's CLI hand-enumerated kernel rules and dropped these two.
+    assert analysis_main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rule in (kernel_check.RULE_DMA_DOUBLE,
+                 kernel_check.RULE_DMA_OPAQUE, grid_interp.RULE_OOB,
+                 grid_interp.RULE_RACE, grid_interp.RULE_COVERAGE):
+        assert rule in out, f"--list-rules omits {rule}"
+
+
+def test_cli_prints_proof_matrix(capsys):
+    assert analysis_main(["--root", REPO]) == 0
+    out = capsys.readouterr().out
+    assert "bounds" in out and "accumulator" in out
+    assert "incrs_spmm_pipelined" in out
+
+
+def test_json_report_structure(tmp_path, capsys):
+    import json
+    report_path = tmp_path / "report.json"
+    assert analysis_main(["--check", "--root", REPO,
+                          "--json", str(report_path)]) == 0
+    report = json.loads(report_path.read_text())
+    assert report["count"] == 0 and report["findings"] == []
+    assert set(registry.all_rules()) == set(report["rules"])
+    assert set(report["proof_matrix"]) == set(grid_interp.KERNELS)
+    for row in report["proof_matrix"].values():
+        assert set(row) == set(grid_interp.PROPERTIES)
+    assert {p["name"] for p in report["passes"]} == \
+        {p.name for p in registry.PASSES}
+
+
+# Pattern-driven DMA pairing: discovery + a helper-free kernel.
+def test_dma_discovery_finds_the_pipelined_kernel():
+    src = _kernel_src()
+    assert kernel_check.discover_dma_kernels(src) == ["_kernel_pipelined"]
+    auto = kernel_check.check_dma_pairing_auto()
+    assert auto == [], [f.format() for _, f in auto]
+
+
+def test_dma_auto_catches_mutation_in_any_module():
+    mutated = _kernel_src().replace(WAIT_LINE, "")
+    findings = kernel_check.check_dma_pairing_auto(
+        {"incrs_spmm.py": mutated})
+    assert findings
+    assert all(module == "incrs_spmm.py" for module, _ in findings)
+    assert kernel_check.RULE_DMA_READ in {f.rule for _, f in findings}
+
+
+_INLINE_DMA = """
+def _kernel_merge(src_hbm, o_ref, buf, sem):
+    pltpu.make_async_copy(src_hbm.at[0], buf.at[0], sem.at[0]).start()
+    pltpu.make_async_copy(src_hbm.at[0], buf.at[0], sem.at[0]).wait()
+    o_ref[...] = buf[0]
+"""
+
+
+def test_inline_straight_line_dma_kernel_is_verified():
+    # No local copy helper, no fori_loop: the generalized checker still
+    # proves the protocol (the coming SpGEMM merge-kernel shape).
+    assert kernel_check.discover_dma_kernels(_INLINE_DMA) == \
+        ["_kernel_merge"]
+    assert kernel_check.check_dma_pairing(_INLINE_DMA,
+                                          func="_kernel_merge") == []
+    broken = _INLINE_DMA.replace(
+        "    pltpu.make_async_copy(src_hbm.at[0], buf.at[0], "
+        "sem.at[0]).wait()\n", "")
+    findings = kernel_check.check_dma_pairing(broken,
+                                              func="_kernel_merge")
+    rules = {f.rule for f in findings}
+    assert kernel_check.RULE_DMA_READ in rules
+    assert kernel_check.RULE_DMA_LEAK in rules
+
+
+# Multi-module scratch drift (flash attention now modelled).
+def test_expected_scratch_covers_every_kernel():
+    assert set(vmem.EXPECTED_SCRATCH) == set(grid_interp.KERNELS)
+
+
+def test_flash_scratch_drift_is_caught():
+    path = os.path.join(os.path.dirname(
+        kernel_check.kernel_source_path()), "flash_attention.py")
+    with open(path) as f:
+        src = f.read()
+    anchor = "pltpu.VMEM((bq, 1), jnp.float32),     # running max m\n"
+    assert anchor in src
+    findings = kernel_check.check_scratch_drift(
+        sources={"flash_attention.py": src.replace(anchor, "")})
+    assert kernel_check.RULE_DRIFT in {f.rule for f in findings}
+    assert any("flash_attention" in f.message for f in findings)
+
+
+def test_flash_footprint_fits_budget_at_default_tiles():
+    fp = vmem.flash_footprint(lanes=32, sq=2048, sk=2048, hd=128)
+    assert fp.total_bytes == sum(t.nbytes for t in fp.terms)
+    assert fp.total_bytes < vmem.DEFAULT_VMEM_BUDGET
+    # Scratch terms mirror the kernel's three VMEM buffers.
+    scratch = [t for t in fp.terms if t.where == "scratch"]
+    assert len(scratch) == len(vmem.EXPECTED_SCRATCH["flash_attention"])
+
+
+# Autotune + plan() reject bounds-infeasible candidates statically.
+def _oob_incrs_source():
+    anchor = "sl = pl.dslice(j * bn, bn)"
+    src = _kernel_src()
+    assert anchor in src
+    return src.replace(anchor, "sl = pl.dslice(j * bn + 1, bn)", 1)
+
+
+def test_split_candidates_skips_bounds_infeasible(monkeypatch):
+    oob = _oob_incrs_source()
+    monkeypatch.setattr(grid_interp, "_load_source",
+                        lambda module, sources=None: oob)
+    monkeypatch.setattr(grid_interp, "_BOUNDS_CACHE", {})
+    feasible, skipped = autotune.split_candidates(
+        1024, 4096, section=256, n_sections=16, smax=64)
+    oob_skips = [s for s in skipped
+                 if s["rule"] == grid_interp.RULE_OOB]
+    assert oob_skips, "seeded OOB kernel must be recorded as skipped"
+    # The mutation is in the reuse kernel body: every reuse candidate is
+    # rejected before measurement, the other variants are unaffected.
+    assert all(s["variant"] == "reuse" for s in oob_skips)
+    assert all(v != "reuse" for v, _, _ in feasible)
+    assert {(s["variant"], s["bm"], s["bn"])
+            for s in skipped}.isdisjoint(set(feasible))
+
+
+def test_plan_rejects_bounds_infeasible_cached_config(
+        rng, monkeypatch, tmp_path):
+    _own_cache(monkeypatch, tmp_path)
+    oob = _oob_incrs_source()
+    mask = (rng.random((256, 128)) < 0.1)
+    p0 = _incrs_plan(rng, 128, tune="off", mask=mask)
+    idx, section = p0._tuning_arrays()
+    key = autotune.cache_key(idx.shape[0], idx.shape[1], idx.shape[2],
+                             section, 128,
+                             autotune.backend_name(ops.INTERPRET))
+    autotune._MEM[key] = autotune.TunedConfig("reuse", 128, 128, 1.0, 1.0)
+    monkeypatch.setattr(grid_interp, "_load_source",
+                        lambda module, sources=None: oob)
+    monkeypatch.setattr(grid_interp, "_BOUNDS_CACHE", {})
+    with pytest.raises(KernelConfigError) as ei:
+        _incrs_plan(rng, 128, tune="cache", mask=mask)
+    assert ei.value.violations[0].rule == grid_interp.RULE_OOB

@@ -1,0 +1,347 @@
+"""Grid abstract interpreter tests (``repro.analysis.grid_interp``).
+
+Three layers:
+
+* clean-tree proofs — every registered kernel body proves bounds,
+  accumulator discipline, output coverage and race-freedom at its
+  declared geometry, and the proof matrix says so;
+* mutation fixtures — one seeded bug per rule per kernel family
+  (dropped init, dropped/wrong-axis/off-by-one flush guards, off-by-one
+  dslice and index maps, scratch state on a "parallel" axis), each
+  asserted caught with the intended rule name;
+* hypothesis property tests — random affine index expressions and
+  index maps round-trip through the interval analysis soundly (the
+  interval always contains every concrete evaluation; no constructed
+  out-of-bounds map is ever declared in-bounds).
+"""
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st  # noqa: E402  (skips @given tests
+#                                               when hypothesis is absent)
+
+from repro.analysis import grid_interp as gi
+from repro.analysis import kernel_check
+
+# ----------------------------------------------------------------------
+# Clean-tree proofs.
+
+
+def _src(module):
+    return gi._load_source(module)
+
+
+def _mutate(entry, old, new, count=1):
+    module = gi.GEOMETRIES[entry].module
+    src = _src(module)
+    assert old in src, f"fixture anchor not found in {module}: {old!r}"
+    return src.replace(old, new, count)
+
+
+def test_all_kernels_prove_clean():
+    findings = gi.check_all_grids()
+    assert findings == [], "\n".join(f.format() for f in findings)
+
+
+def test_every_registered_kernel_is_covered():
+    # The seven kernel bodies named in the roadmap + the gather helper.
+    assert set(gi.KERNELS) == {
+        "incrs_spmm", "incrs_spmm_reuse", "incrs_spmm_pipelined",
+        "bsr_spmm", "dense_mm", "index_match_spmm", "flash_attention",
+        "incrs_gather"}
+
+
+def test_proof_matrix_statuses():
+    matrix = gi.proof_matrix()
+    assert set(matrix) == set(gi.KERNELS)
+    for entry, row in matrix.items():
+        assert set(row) == set(gi.PROPERTIES)
+        assert all(v in ("proved", "proved*", "n/a") for v in row.values()), \
+            (entry, row)
+    # DMA pairing is proved exactly where make_async_copy is used.
+    assert matrix["incrs_spmm_pipelined"]["dma"] == "proved"
+    assert matrix["incrs_spmm"]["dma"] == "n/a"
+    # BSR's proof is conditional on the host-prep contract.
+    assert matrix["bsr_spmm"]["bounds"] == "proved*"
+    # The gather kernel holds no scratch: nothing to prove there.
+    assert matrix["incrs_gather"]["accumulator"] == "n/a"
+    assert matrix["incrs_gather"]["race"] == "n/a"
+    text = gi.format_proof_matrix(matrix)
+    assert "bounds" in text and "incrs_spmm_pipelined" in text
+    assert "proved*" in text
+
+
+def test_unknown_entry_is_unverifiable():
+    findings = gi.check_kernel_grid("no_such_kernel")
+    assert [f.rule for f in findings] == [gi.RULE_UNVERIFIABLE]
+
+
+# ----------------------------------------------------------------------
+# Mutation fixtures: one seeded bug per rule per kernel family.
+
+_INIT_EXPAND = """\
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+"""
+_INIT_BSR = """\
+    @pl.when(first)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+"""
+_INIT_FLASH = """\
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+"""
+
+MUTATIONS = [
+    # --- dropped init: first visit reads uninitialized scratch.
+    ("incrs_spmm", _INIT_EXPAND, "", gi.RULE_ACC_INIT),
+    ("dense_mm", _INIT_EXPAND, "", gi.RULE_ACC_INIT),
+    ("index_match_spmm", _INIT_EXPAND, "", gi.RULE_ACC_INIT),
+    ("bsr_spmm", _INIT_BSR, "", gi.RULE_ACC_INIT),
+    ("flash_attention", _INIT_FLASH, "", gi.RULE_ACC_INIT),
+    # pipelined: init guard that never covers the first visit.
+    ("incrs_spmm_pipelined",
+     "        @pl.when(s == 0)\n        def _init():",
+     "        @pl.when(s == 999)\n        def _init():",
+     gi.RULE_ACC_INIT),
+    # --- flush on the wrong axis: accumulated state never reaches out.
+    ("incrs_spmm",
+     "    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)\n"
+     "    def _done():",
+     "    @pl.when(pl.program_id(1) == pl.num_programs(1) - 1)\n"
+     "    def _done():",
+     gi.RULE_ACC_FLUSH),
+    # --- off-by-one flush guard: stores before the final visit and
+    # drops the last accumulation step.
+    ("index_match_spmm",
+     "    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)\n"
+     "    def _done():",
+     "    @pl.when(pl.program_id(2) == pl.num_programs(2) - 2)\n"
+     "    def _done():",
+     gi.RULE_STORE_FINAL),
+    # BSR: writing back at the START of an output row stores a
+    # revisited block before its final visit.
+    ("bsr_spmm",
+     "    @pl.when(last)\n    def _done():",
+     "    @pl.when(first)\n    def _done():",
+     gi.RULE_STORE_FINAL),
+    # --- off-by-one dslice / index-map arithmetic.
+    ("incrs_spmm_reuse",
+     "sl = pl.dslice(j * bn, bn)",
+     "sl = pl.dslice(j * bn + 1, bn)",
+     gi.RULE_OOB),
+    ("incrs_spmm_pipelined",
+     "b_hbm.at[pl.dslice(s * section, section), pl.dslice(j * bn, bn)]",
+     "b_hbm.at[pl.dslice(s * section + 1, section), "
+     "pl.dslice(j * bn, bn)]",
+     gi.RULE_OOB),
+    ("dense_mm",
+     "pl.BlockSpec((bk, bn), lambda i, j, t: (t, j)),",
+     "pl.BlockSpec((bk, bn), lambda i, j, t: (t + 1, j)),",
+     gi.RULE_OOB),
+    ("incrs_gather",
+     "out_specs=pl.BlockSpec((bm, section), lambda i, s: (i, s)),",
+     "out_specs=pl.BlockSpec((bm, section), lambda i, s: (i, s + 1)),",
+     gi.RULE_OOB),
+    # --- output tiling that no longer covers the full array.
+    ("incrs_gather",
+     "out_specs=pl.BlockSpec((bm, section), lambda i, s: (i, s)),",
+     "out_specs=pl.BlockSpec((bm, section), lambda i, s: (i, 0)),",
+     gi.RULE_COVERAGE),
+    # --- scratch state carried across a "parallel" grid axis.
+    ("incrs_spmm_reuse",
+     'dimension_semantics=("parallel", "arbitrary", "arbitrary")',
+     'dimension_semantics=("parallel", "parallel", "arbitrary")',
+     gi.RULE_RACE),
+    ("flash_attention",
+     'dimension_semantics=("parallel", "parallel", "arbitrary")',
+     'dimension_semantics=("parallel", "parallel", "parallel")',
+     gi.RULE_RACE),
+]
+
+
+@pytest.mark.parametrize(
+    "entry,old,new,rule", MUTATIONS,
+    ids=[f"{m[0]}-{m[3]}" for m in MUTATIONS])
+def test_seeded_bug_is_caught_with_intended_rule(entry, old, new, rule):
+    mutated = _mutate(entry, old, new)
+    findings = gi.check_kernel_grid(entry, source=mutated)
+    rules = {f.rule for f in findings}
+    assert rule in rules, (
+        f"{entry}: expected {rule!r} among findings, got "
+        + ("\n".join(f.format() for f in findings) or "none"))
+    # The seeded bug must never be reported as merely unverifiable.
+    assert rules != {gi.RULE_UNVERIFIABLE}
+
+
+def test_dropped_flush_is_flush_gap_and_coverage_gap():
+    mutated = _mutate(
+        "incrs_spmm",
+        "    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)\n"
+        "    def _done():\n"
+        "        o_ref[...] = acc_ref[...].astype(o_ref.dtype)\n",
+        "")
+    rules = {f.rule
+             for f in gi.check_kernel_grid("incrs_spmm", source=mutated)}
+    assert gi.RULE_ACC_FLUSH in rules
+    assert gi.RULE_COVERAGE in rules
+
+
+# ----------------------------------------------------------------------
+# Config-level bounds proof (the autotune/plan prefilter hook).
+REAL = dict(m=1024, n=4096, bm=128, bn=512, n_sections=16, smax=64,
+            section=256)
+
+
+def test_config_bounds_clean_at_real_sizes():
+    for variant in ("expand", "reuse", "pipelined"):
+        assert gi.check_config_bounds(variant, **REAL) == []
+
+
+def test_config_bounds_catches_off_by_one_at_any_size():
+    src = _mutate(
+        "incrs_spmm_pipelined",
+        "b_hbm.at[pl.dslice(s * section, section), pl.dslice(j * bn, bn)]",
+        "b_hbm.at[pl.dslice(s * section + 1, section), "
+        "pl.dslice(j * bn, bn)]")
+    vs = gi.check_config_bounds("pipelined", source=src, **REAL)
+    assert vs and vs[0].rule == gi.RULE_OOB
+    assert "b_hbm" in vs[0].message
+
+
+def test_config_bounds_defers_broken_geometry_to_grid_rules():
+    # Non-tileable geometry is RULE_GRID/RULE_ALIGN territory
+    # (check_incrs_config); the bounds pass must stay silent, not crash.
+    assert gi.check_config_bounds("reuse",
+                                  **dict(REAL, n=100, bn=512)) == []
+    assert gi.check_config_bounds("expand",
+                                  **dict(REAL, section=0)) == []
+    assert gi.check_config_bounds("not-a-variant", **REAL) == []
+
+
+def test_config_bounds_memo_invalidates_on_explicit_source():
+    gi.check_config_bounds("reuse", **REAL)          # warm the memo
+    src = _mutate("incrs_spmm_reuse",
+                  "sl = pl.dslice(j * bn, bn)",
+                  "sl = pl.dslice(j * bn + 1, bn)")
+    vs = gi.check_config_bounds("reuse", source=src, **REAL)
+    assert vs and vs[0].rule == gi.RULE_OOB
+    assert gi.check_config_bounds("reuse", **REAL) == []
+
+
+# ----------------------------------------------------------------------
+# Interval analysis unit tests.
+def test_interval_arithmetic_basics():
+    assert gi.interval_of("i * 4 + 2", {"i": (0, 7)}) == (2, 30)
+    assert gi.interval_of("(t + 1) % 2", {"t": (0, 5)}) == (0, 1)
+    assert gi.interval_of("t // 3", {"t": (0, 8)}) == (0, 2)
+    assert gi.interval_of("-i", {"i": (1, 4)}) == (-4, -1)
+    assert gi.interval_of("a - b", {"a": (0, 3), "b": (1, 2)}) == (-2, 2)
+
+
+def test_interval_mod_within_one_period_is_tight():
+    # 3..5 mod 8 never wraps: the interval must not widen to [0, 7].
+    assert gi.interval_of("t % 8", {"t": (3, 5)}) == (3, 5)
+    assert gi.interval_of("t % 8", {"t": (6, 9)}) == (0, 7)
+
+
+def test_map_in_bounds_verdicts():
+    assert gi.map_in_bounds("lambda i, j: (i, j)", (4, 2), (8, 128),
+                            (32, 256))
+    assert not gi.map_in_bounds("lambda i, j: (i + 1, j)", (4, 2),
+                                (8, 128), (32, 256))
+    assert not gi.map_in_bounds("lambda i, j: (i, j)", (4, 2), (8, 128),
+                                (24, 256))       # array one block short
+    # Opaque maps are conservatively out-of-bounds, never "proved".
+    assert not gi.map_in_bounds("lambda i, j: (unknown(i), j)", (4, 2),
+                                (8, 128), (32, 256))
+
+
+# ----------------------------------------------------------------------
+# Hypothesis property tests: interval soundness.
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 30), st.integers(0, 30), st.integers(-8, 8),
+       st.integers(-64, 64), st.integers(1, 9), st.integers(1, 9),
+       st.integers(0, 2 ** 31 - 1))
+def test_interval_contains_every_concrete_evaluation(
+        lo, width, mul, add, div, mod, seed):
+    """[lo, hi] of an affine expr is sound: every concrete evaluation at
+    an in-range point lands inside it."""
+    env = {"i": (lo, lo + width)}
+    expr = f"(i * {mul} + {add}) // {div} % {mod}"
+    ival = gi.interval_of(expr, env)
+    rng = np.random.default_rng(seed)
+    for i in rng.integers(lo, lo + width + 1, size=8):
+        concrete = (int(i) * mul + add) // div % mod
+        assert ival[0] <= concrete <= ival[1], (expr, i, ival)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 6), st.integers(1, 16),
+       st.integers(1, 16))
+def test_exact_tiling_maps_round_trip(g0, g1, b0, b1):
+    """The identity tiling of a (g0*b0, g1*b1) array is always proved
+    in-bounds; any positive offset on a full axis never is (soundness:
+    no false in-bounds on constructed OOB maps)."""
+    grid, block = (g0, g1), (b0, b1)
+    array = (g0 * b0, g1 * b1)
+    assert gi.map_in_bounds("lambda i, j: (i, j)", grid, block, array)
+    assert not gi.map_in_bounds("lambda i, j: (i + 1, j)", grid, block,
+                                array)
+    assert not gi.map_in_bounds("lambda i, j: (i, j + 1)", grid, block,
+                                array)
+    # Shrinking the array below the tiling is caught on either axis.
+    assert not gi.map_in_bounds("lambda i, j: (i, j)", grid, block,
+                                (array[0] - 1, array[1]))
+    assert not gi.map_in_bounds("lambda i, j: (i, j)", grid, block,
+                                (array[0], array[1] - 1))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 8), st.integers(1, 8),
+       st.integers(2, 5))
+def test_broadcast_and_folded_maps_are_proved(g0, g1, b0, div):
+    """Maps that pin an axis (broadcast) or fold a grid axis by integer
+    division — the shapes our kernels actually use — verify in-bounds
+    exactly when the array is large enough."""
+    # Broadcast: every grid point reads block row 0.
+    assert gi.map_in_bounds("lambda i, j: (0, j)", (g0, g1), (b0, 4),
+                            (b0, g1 * 4))
+    # Folded axis (flash GQA: lane // g indexes a smaller operand).
+    folded = -(-g0 // div)             # ceil: worst block index + 1
+    assert gi.map_in_bounds(f"lambda i, j: (i // {div}, j)",
+                            (g0, g1), (b0, 4), (folded * b0, g1 * 4))
+    assert not gi.map_in_bounds(f"lambda i, j: (i // {div}, j)",
+                                (g0, g1), (b0, 4),
+                                ((folded - 1) * b0 if folded > 1 else 0,
+                                 g1 * 4))
+
+
+# ----------------------------------------------------------------------
+# Wiring: the launch gate sees the bounds rule.
+def test_launch_rules_include_bounds():
+    assert gi.RULE_OOB in kernel_check.LAUNCH_RULES
+    assert set(kernel_check.BUDGET_RULES) < set(kernel_check.LAUNCH_RULES)
+
+
+def test_check_incrs_config_fires_oob_through_launch_rules(monkeypatch):
+    src = _mutate("incrs_spmm_reuse",
+                  "sl = pl.dslice(j * bn, bn)",
+                  "sl = pl.dslice(j * bn + 1, bn)")
+    monkeypatch.setattr(gi, "_load_source",
+                        lambda module, sources=None: src)
+    monkeypatch.setattr(gi, "_BOUNDS_CACHE", {})
+    vs = kernel_check.check_incrs_config(
+        "reuse", rules=kernel_check.LAUNCH_RULES, **REAL)
+    assert {v.rule for v in vs} == {gi.RULE_OOB}
+    # Budget-only callers are unaffected by the bounds pass.
+    assert kernel_check.check_incrs_config(
+        "reuse", rules=kernel_check.BUDGET_RULES, **REAL) == []
