@@ -40,31 +40,57 @@ def main(argv=None):
     print(f"workload={wl.name} A={spec.m}x{spec.n} D={spec.density:.3f} "
           f"nnz={a.nnz}")
 
+    # A mixed-width trace — the serving shape that exposes the
+    # scheduler: narrow and wide requests interleaved.
     rng = np.random.default_rng(1)
-    reqs = [SpMMRequest(r, rng.normal(
-        size=(spec.n, args.batch_cols)).astype(np.float32))
-        for r in range(args.requests)]
+    bc = args.batch_cols
+    widths = [(bc, bc // 2, bc // 4, bc + bc // 2)[r % 4]
+              for r in range(args.requests)]
 
-    # Fused path: prep once at engine construction, reuse per wave. The
-    # wave cap covers the whole batch so fused and baselines all run ONE
-    # kernel launch each — the timings compare data paths, not launch
-    # counts. Warm every path first (host prep + jit trace) so the timed
-    # regions compare steady-state execution only.
-    total_cols = args.requests * args.batch_cols
+    def trace():
+        gen = np.random.default_rng(1)
+        return [SpMMRequest(r, gen.normal(
+            size=(spec.n, w)).astype(np.float32))
+            for r, w in enumerate(widths)]
+
+    # Fused path: prep once at engine construction, reuse per wave. Warm
+    # every path first (host prep + jit trace + per-bucket kernel shapes)
+    # so the timed regions compare steady-state execution only.
+    cap = max(128, 2 * bc)
     t0 = time.perf_counter()
-    eng = SpMMEngine(inc, max_wave_cols=max(512, total_cols))
+    eng = SpMMEngine(inc, max_wave_cols=cap)
     t_prep = time.perf_counter() - t0
-    b_all = jnp.asarray(np.concatenate([r.b for r in reqs], axis=1))
-    ops.spmm(inc, b_all).block_until_ready()                  # warm fused
+    b_all = jnp.asarray(np.concatenate([r.b for r in trace()], axis=1))
+    prep = ops.prepare_incrs(inc)
+    for w in range(128, -(-cap // 128) * 128 + 1, 128):       # warm buckets
+        ops.spmm(prep, jnp.zeros((spec.n, w), jnp.float32)).block_until_ready()
     ops.dense_mm(ops.incrs_to_dense(inc), b_all).block_until_ready()
+
+    # Wave-barrier compatibility mode: the old engine's strict FIFO loop,
+    # no prep/compute overlap — the baseline the continuous scheduler is
+    # measured against (benchmarks/serve_bench.py records this per PR).
+    barrier = SpMMEngine(inc, max_wave_cols=cap, continuous=False)
+    for r in trace():
+        barrier.submit(r)
+    barrier.run()
+    sb = barrier.stats_summary()
+
     t0 = time.perf_counter()
-    for r in reqs:
+    for r in trace():
         eng.submit(r)
     done = eng.run()
     t_fused = time.perf_counter() - t0
+    s = eng.stats_summary()
     print(f"  fused incrs_spmm: prep {t_prep*1e3:.1f}ms once, "
           f"{len(done)} requests in {t_fused:.2f}s "
           f"({eng.stats['waves']} waves, {eng.stats['cols']} cols)")
+    print(f"  continuous: {s['requests_per_s']:.1f} req/s "
+          f"p50={s['latency_ms']['p50']:.1f}ms "
+          f"p99={s['latency_ms']['p99']:.1f}ms, "
+          f"prep overlap {s['prep_overlap_fraction']:.0%}  |  "
+          f"wave-barrier: {sb['requests_per_s']:.1f} req/s in "
+          f"{sb['waves']} waves "
+          f"(speedup {s['requests_per_s'] / max(sb['requests_per_s'], 1e-9):.2f}x)")
 
     t0 = time.perf_counter()
     y = ops.dense_mm(ops.incrs_to_dense(inc), b_all)   # the HBM round-trip

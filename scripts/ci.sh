@@ -30,6 +30,12 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 # then refresh the record with this run's numbers.
 python benchmarks/kernel_bench.py --check BENCH_kernels.json \
     --json BENCH_kernels.json
+# Serving-layer bench (continuous scheduler vs wave-barrier baseline on a
+# mixed-width trace): --check fails on any requests/sec row regressing
+# >25% vs the committed record (machine-relative via the dense_mm proxy
+# row), then the smoke record is refreshed for the workflow artifact.
+python benchmarks/serve_bench.py --smoke --check BENCH_serve.json \
+    --json BENCH_serve.json
 # trainable-sparse end-to-end smoke (fused-kernel fwd/bwd + serve round
 # trip) — the kernel family is a SparseSpec --format flag, both paths run
 python examples/train_unstructured.py --steps 8

@@ -173,6 +173,40 @@ def clear_memory_cache() -> None:
     _logged.clear()
 
 
+def cached_configs() -> Dict[str, TunedConfig]:
+    """Every persisted tuning entry (disk merged under in-memory wins),
+    keyed by ``cache_key`` string. The serve scheduler reads this to seed
+    its µs/col cost model from real measurements instead of guessing."""
+    out: Dict[str, TunedConfig] = {}
+    for key, raw in _load_disk().items():
+        try:
+            out[key] = TunedConfig.from_json(raw)
+        except (KeyError, TypeError, ValueError):
+            continue
+    out.update(_MEM)
+    return out
+
+
+def parse_cache_key(key: str) -> Optional[dict]:
+    """Invert ``cache_key``: ``m{rows}.sec{ns}x{sec}.w{smax}.n{cols}.{be}``
+    -> a dict of its fields, or None for a malformed key."""
+    parts = key.split(".")
+    if len(parts) < 5:
+        return None
+    m_s, sec_s, w_s, n_s = parts[0], parts[1], parts[2], parts[3]
+    backend = ".".join(parts[4:])
+    try:
+        if not (m_s.startswith("m") and sec_s.startswith("sec")
+                and w_s.startswith("w") and n_s.startswith("n")):
+            return None
+        ns_s, section_s = sec_s[3:].split("x")
+        return {"padded_rows": int(m_s[1:]), "n_sections": int(ns_s),
+                "section": int(section_s), "smax": int(w_s[1:]),
+                "n_cols": int(n_s[1:]), "backend": backend}
+    except ValueError:
+        return None
+
+
 # ----------------------------------------------------------------------
 # Cost-model prior.
 def predict_us(variant: str, m: int, n: int, *, n_sections: int, smax: int,

@@ -54,7 +54,10 @@ def _main_spmm(args):
     sspec = api.SparseSpec(args.format, mesh=mesh,
                            block=(args.spmm_block
                                   if args.format == "bsr" else None))
-    eng = SpMMEngine(api.plan_for_operand(a, sspec))
+    eng = SpMMEngine(api.plan_for_operand(a, sspec),
+                     max_wave_cols=args.spmm_max_wave_cols,
+                     continuous=not args.spmm_wave_barrier,
+                     latency_budget_us=args.spmm_latency_budget_us)
     rng = np.random.default_rng(args.seed)
     reqs = [SpMMRequest(i, rng.normal(
         size=(spec.n, args.spmm_batch_cols)).astype(np.float32))
@@ -65,10 +68,17 @@ def _main_spmm(args):
     done = eng.run()
     dt = time.time() - t0
     where = f"{args.spmm_shards}-way row-sharded" if mesh else "single-device"
+    s = eng.stats_summary()
     print(f"spmm A={spec.m}x{spec.n} d={spec.density} nnz={a.nnz} "
-          f"format={args.format} ({where}): served {len(done)} requests / "
-          f"{eng.stats['cols']} cols in {dt:.2f}s, "
+          f"format={args.format} ({where}, {s['mode']}): served "
+          f"{len(done)} requests / {eng.stats['cols']} cols in {dt:.2f}s, "
           f"waves={eng.stats['waves']}")
+    print(f"  {s['requests_per_s']:.1f} req/s, latency "
+          f"p50={s['latency_ms']['p50']:.1f}ms "
+          f"p99={s['latency_ms']['p99']:.1f}ms, prep overlap "
+          f"{s['prep_overlap_fraction']:.0%} "
+          f"(cost model: {s['cost_model']['source']}, "
+          f"{s['cost_model']['n_observed']} waves observed)")
     ref = a.to_dense()
     err = max(float(np.abs(r.out - ref @ r.b).max()) for r in done)
     print(f"  max |err| vs dense oracle: {err:.2e}")
@@ -121,6 +131,15 @@ def main(argv=None):
                     help="after the first waves, re-prune the operand to "
                          "half density and hot-swap it into the running "
                          "engine (lifecycle smoke)")
+    ap.add_argument("--spmm-max-wave-cols", type=int, default=512,
+                    help="hard wave cap (the feasibility-proven shape); "
+                         "the cost model chooses widths up to it")
+    ap.add_argument("--spmm-wave-barrier", action="store_true",
+                    help="serve in the wave-barrier compatibility mode "
+                         "(strict FIFO, no prep/compute overlap)")
+    ap.add_argument("--spmm-latency-budget-us", type=float, default=None,
+                    help="per-wave latency target: the cost model narrows "
+                         "waves so each is predicted to finish inside it")
     ap.add_argument("--spmm-rows", type=int, default=256)
     ap.add_argument("--spmm-cols", type=int, default=1024)
     ap.add_argument("--spmm-density", type=float, default=0.03)

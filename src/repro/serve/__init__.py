@@ -1,1 +1,4 @@
 from .engine import Request, ServeEngine, SpMMRequest, SpMMEngine  # noqa: F401
+from .scheduler import (WaveCostModel, WavePacker,  # noqa: F401
+                        seed_cost_model)
+from .tenancy import TenantPool  # noqa: F401

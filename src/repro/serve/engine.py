@@ -14,9 +14,10 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 import warnings
-from collections import defaultdict
-from typing import Dict, List, Optional
+from collections import defaultdict, deque
+from typing import Any, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +25,7 @@ import numpy as np
 
 from ..models import model as M
 from ..models.config import ModelConfig
+from . import scheduler as _sched
 
 
 @dataclasses.dataclass
@@ -147,18 +149,81 @@ class SpMMRequest:
     b: np.ndarray                          # (K, cols) dense operand
     out: Optional[np.ndarray] = None       # (M, cols) result
     done: bool = False
+    t_submit: Optional[float] = None       # stamped by engine.submit()
+    t_done: Optional[float] = None         # stamped when the result lands
+
+
+@dataclasses.dataclass
+class _SplitPart:
+    """One ``<= max_wave_cols``-wide column chunk of an oversized request.
+    Parts flow through the packer like ordinary requests (they expose the
+    same ``.b``); each retires into its parent's preallocated ``out``
+    buffer, and the parent completes when its last part does."""
+    rid: int
+    parent: SpMMRequest
+    offset: int                            # column offset into parent.out
+    b: np.ndarray                          # column-slice VIEW of parent.b
+    t_submit: Optional[float] = None
+
+
+@dataclasses.dataclass
+class _Wave:
+    """A packed wave moving through the stage -> dispatch -> retire
+    pipeline. ``c`` is the dispatched device array (a future under JAX's
+    async dispatch) once the wave is in flight."""
+    items: List[Any]
+    b: Any                                 # device-transferred concat RHS
+    prep_s: float                          # host prep wall time
+    hidden: bool                           # prepped while a wave was in flight
+    c: Any = None
+    t_dispatch: Optional[float] = None
+
+
+# Wave widths are bucketed (zero-padded) up to this quantum before launch
+# — the TPU lane width, and the granularity the kernels pad to anyway.
+WAVE_QUANTUM = 128
+
+
+def _percentiles_ms(samples: List[float]) -> Dict[str, float]:
+    """{p50, p99, mean} in milliseconds from wall-second samples."""
+    if not samples:
+        return {"p50": 0.0, "p99": 0.0, "mean": 0.0}
+    srt = sorted(samples)
+
+    def pct(q: float) -> float:
+        return srt[min(len(srt) - 1, int(round(q * (len(srt) - 1))))] * 1e3
+
+    return {"p50": pct(0.50), "p99": pct(0.99),
+            "mean": sum(srt) / len(srt) * 1e3}
 
 
 class SpMMEngine:
-    """Batched SpMM serving on the fused InCRS kernel, single- or
-    multi-device.
+    """Continuous-batching SpMM serving on the fused InCRS kernel, single-
+    or multi-device.
 
     The sparse operand is format-prepped exactly once (through the
     ``ops.prepare_incrs`` cache) at construction; every request wave reuses
     the ``PreparedOperand``, so steady-state serving cost is the fused
     kernel alone — no per-request host prep, no dense densification of A.
-    Requests are column-concatenated into waves of up to ``max_wave_cols``
-    so small RHSs share one kernel launch.
+
+    Scheduling is cost-model-driven (``serve.scheduler``): wave width is
+    chosen from measured µs/col (autotune cache / bench record, refined
+    online per retired wave) against an optional per-wave
+    ``latency_budget_us`` instead of always packing to one fixed size, and
+    the queue is packed with a bounded skip-scan so a wide head request
+    cannot starve narrower requests that fit. ``max_wave_cols`` remains
+    the HARD cap — the shape the static feasibility check proves — and the
+    budget may only narrow waves below it. Requests wider than the cap are
+    split into parts across waves at ``submit()`` (each launch stays
+    within the proven shape) and reassemble transparently.
+
+    The engine pipelines host prep against device compute: while the
+    device runs wave N (kernel calls return immediately under JAX's async
+    dispatch; only the retiring ``np.asarray`` blocks), the host promotes
+    + concatenates wave N+1, hiding the per-wave prep overhead the
+    ``spmm_plan_vs_adhoc`` bench measured. ``continuous=False`` restores
+    the strict wave-barrier loop (FIFO, no skip-scan, no overlap) as the
+    compatibility baseline ``serve_bench`` measures against.
 
     With a ``mesh`` (or a pre-built ``ops.ShardedPreparedOperand``), the
     operand is row-sharded — one output-row stripe panel per mesh device —
@@ -170,7 +235,10 @@ class SpMMEngine:
 
     def __init__(self, a, *, max_wave_cols: int = 512,
                  variant: str = "auto", interpret: Optional[bool] = None,
-                 mesh=None, shard_axis=None):
+                 mesh=None, shard_axis=None, continuous: bool = True,
+                 latency_budget_us: Optional[float] = None,
+                 scheduler: Optional[_sched.WavePacker] = None,
+                 skip_limit: Optional[int] = None):
         """``a``: an ``InCRS`` (prepped here, once, via the memo cache), an
         already-built ``ops.PreparedOperand`` /
         ``ops.ShardedPreparedOperand``, a ``sparse.Linear`` (its packed
@@ -181,7 +249,15 @@ class SpMMEngine:
         mesh at construction. ``variant`` selects the kernel grid order
         ("expand" | "reuse" | "pipelined" | "auto" — see ``ops.spmm``);
         "auto" rides a tuned config from the autotune cache when one
-        exists for the wave shape, else the autotuner's cost model."""
+        exists for the wave shape, else the autotuner's cost model.
+
+        ``continuous=False`` switches to the wave-barrier compatibility
+        mode (strict FIFO, no prep/compute overlap). ``latency_budget_us``
+        targets a per-wave latency through the cost model (continuous mode
+        only). ``scheduler`` injects a pre-built ``scheduler.WavePacker``
+        (overrides the budget/skip arguments); ``skip_limit`` bounds the
+        head-of-line bypass scan (default ``scheduler.DEFAULT_SKIP_LIMIT``
+        when continuous, 0 when not)."""
         from ..kernels import ops
         if variant not in ("auto", "expand", "reuse", "pipelined"):
             raise ValueError(f"variant must be 'auto', 'expand', 'reuse' "
@@ -192,9 +268,67 @@ class SpMMEngine:
         self.variant = variant
         self._set_operand(a, mesh, shard_axis)
         self.interpret = interpret
-        self.queue: List[SpMMRequest] = []
+        self.continuous = continuous
+        if scheduler is None:
+            if skip_limit is None:
+                skip_limit = _sched.DEFAULT_SKIP_LIMIT if continuous else 0
+            scheduler = _sched.WavePacker(
+                cost=self._seed_cost_model() if continuous
+                else _sched.WaveCostModel(),
+                budget_us=latency_budget_us if continuous else None,
+                skip_limit=skip_limit)
+        self.scheduler = scheduler
+        self.queue: Deque[Any] = deque()
         self.finished: List[SpMMRequest] = []
         self.stats: Dict[str, int] = defaultdict(int)
+        self._staged: Optional[_Wave] = None
+        self._inflight: Optional[_Wave] = None
+        self._wave_wall_s: List[float] = []
+        self._queue_wait_s: List[float] = []
+        self._req_latency_s: List[float] = []
+        self._prep_s_total = 0.0
+        self._prep_s_hidden = 0.0
+        self._t_first_submit: Optional[float] = None
+        self._t_last_done: Optional[float] = None
+
+    def _seed_cost_model(self) -> _sched.WaveCostModel:
+        """Seed the packer's µs/col estimate from measurements this repo
+        already persists: the autotune disk cache for this operand's exact
+        prepared geometry, else the committed bench record, else unseeded
+        (the first retired wave provides the estimate)."""
+        from ..kernels import autotune
+        backend = autotune.backend_name(
+            self._ops.INTERPRET if self.interpret is None
+            else self.interpret)
+        geom = self._operand_geometry()
+        if geom is None:
+            return _sched.seed_cost_model(backend=backend,
+                                          bench_path="BENCH_kernels.json")
+        return _sched.seed_cost_model(
+            padded_rows=geom[0], n_sections=geom[1], smax=geom[2],
+            section=geom[3], backend=backend,
+            bench_path="BENCH_kernels.json")
+
+    def _operand_geometry(self):
+        """(padded_rows, n_sections, smax, section) of the prepared InCRS
+        stripes, or None when the operand has no fused-kernel geometry
+        (e.g. a dense-format plan)."""
+        from ..sparse import api
+        prep = self.prep
+        if isinstance(prep, api.BoundPlan):
+            arrs = prep.plan._tuning_arrays()
+            if arrs is None:
+                return None
+            idx, section = arrs
+            return (int(idx.shape[0]), int(idx.shape[1]),
+                    int(idx.shape[2]), int(section))
+        idx = getattr(prep, "idx", None)
+        if idx is None:
+            return None
+        if idx.ndim == 4:                  # sharded: per-device panel
+            idx = idx[0]
+        return (int(idx.shape[0]), int(idx.shape[1]), int(idx.shape[2]),
+                int(prep.section))
 
     def _build_operand(self, a, mesh, shard_axis):
         """Resolve ``a`` to ``(operand, prep, pattern_version)`` WITHOUT
@@ -326,19 +460,39 @@ class SpMMEngine:
             raise ValueError(
                 f"request {req.rid}: b has shape {req.b.shape}, expected "
                 f"({k}, cols) to multiply against A of shape {self.a.shape}")
-        self.queue.append(req)
+        req.t_submit = time.perf_counter()
+        if self._t_first_submit is None:
+            self._t_first_submit = req.t_submit
+        cols = req.b.shape[1]
+        if cols > self.max_wave_cols:
+            # Wider than the proven wave shape: split into parts that each
+            # fit, instead of admitting a kernel launch the feasibility
+            # check never proved. The parts reassemble into req.out.
+            req.out = np.empty((self.prep.shape[0], cols),
+                               dtype=req.b.dtype)
+            n_parts = -(-cols // self.max_wave_cols)
+            req._parts_left = n_parts
+            for i in range(n_parts):
+                lo = i * self.max_wave_cols
+                hi = min(cols, lo + self.max_wave_cols)
+                self.queue.append(_SplitPart(
+                    rid=req.rid, parent=req, offset=lo,
+                    b=req.b[:, lo:hi], t_submit=req.t_submit))
+            self.stats["split_requests"] += 1
+            self.stats["split_parts"] += n_parts
+        else:
+            self.queue.append(req)
 
-    def _next_wave(self) -> List[SpMMRequest]:
-        wave, cols = [], 0
-        while self.queue and (not wave or
-                              cols + self.queue[0].b.shape[1]
-                              <= self.max_wave_cols):
-            req = self.queue.pop(0)
-            wave.append(req)
-            cols += req.b.shape[1]
-        return wave
-
-    def _run_wave(self, wave: List[SpMMRequest]):
+    # -- pipeline stages ------------------------------------------------
+    def _stage(self, hidden: bool) -> bool:
+        """Pack the next wave off the queue and do ALL its host prep
+        (dtype promotion, column concat, device transfer). ``hidden`` says
+        a dispatched wave is still computing, i.e. this prep overlaps the
+        device and its cost is hidden from the serving critical path."""
+        wave = self.scheduler.next_wave(self.queue, self.max_wave_cols)
+        if not wave:
+            return False
+        t0 = time.perf_counter()
         # Promote WITHIN the wave: a bf16 request sharing a wave with f32
         # neighbours computes at f32, and every request's panel comes back
         # in ITS OWN dtype. The fused kernel accumulates in f32 — that is
@@ -353,28 +507,146 @@ class SpMMEngine:
                 f"SpMMEngine: wave dtype {np.dtype(wave_dt)} exceeds the "
                 f"fused kernel's f32 accumulation — results carry the "
                 f"request dtype but f32 precision", stacklevel=3)
-        b = jnp.asarray(np.concatenate(
-            [np.asarray(r.b, dtype=wave_dt) for r in wave], axis=1))
+        panels = [np.asarray(r.b, dtype=wave_dt) for r in wave]
+        cols = sum(p.shape[1] for p in panels)
+        # Bucket the wave width to the lane quantum: packed widths are
+        # data-dependent sums, and every DISTINCT width pays a one-time
+        # trace/compile cost orders of magnitude above the launch itself.
+        # Padding to the next 128-col bucket collapses all waves onto a
+        # handful of kernel shapes (the kernel pads to 128-multiples
+        # internally anyway, so the zero columns cost no extra compute).
+        bucket = -(-cols // WAVE_QUANTUM) * WAVE_QUANTUM
+        if bucket > cols:
+            panels.append(np.zeros((panels[0].shape[0], bucket - cols),
+                                   dtype=wave_dt))
+            self.stats["pad_cols"] += bucket - cols
+        b = jnp.asarray(np.concatenate(panels, axis=1))
+        prep_s = time.perf_counter() - t0
+        self._prep_s_total += prep_s
+        if hidden:
+            self._prep_s_hidden += prep_s
+        self._staged = _Wave(wave, b, prep_s, hidden)
+        return True
+
+    def _dispatch(self) -> None:
+        """Launch the staged wave. The kernel call returns immediately
+        (async dispatch) — the operand is captured HERE, so a
+        ``swap_pattern`` after dispatch never touches an in-flight wave."""
+        w = self._staged
+        if w is None:
+            return
+        self._staged = None
+        t0 = time.perf_counter()
         if self._bound is not None:
-            c = self._bound(b, variant=self.variant,
-                            interpret=self.interpret)
+            w.c = self._bound(w.b, variant=self.variant,
+                              interpret=self.interpret)
         else:
-            c = self._ops.spmm(self.prep, b, variant=self.variant,
-                               interpret=self.interpret)
-        c = np.asarray(c)
+            w.c = self._ops.spmm(self.prep, w.b, variant=self.variant,
+                                 interpret=self.interpret)
+        w.t_dispatch = t0
+        for r in w.items:
+            if r.t_submit is not None:
+                self._queue_wait_s.append(t0 - r.t_submit)
+        self._inflight = w
+
+    def _finish_item(self, r, panel: np.ndarray, t_done: float) -> None:
+        if isinstance(r, _SplitPart):
+            parent = r.parent
+            parent.out[:, r.offset:r.offset + panel.shape[1]] = \
+                panel.astype(parent.b.dtype)
+            parent._parts_left -= 1
+            if parent._parts_left:
+                return
+            r = parent                     # last part: parent completes
+        else:
+            r.out = panel.astype(r.b.dtype)
+        r.done = True
+        r.t_done = t_done
+        if r.t_submit is not None:
+            self._req_latency_s.append(t_done - r.t_submit)
+        self.stats["requests"] += 1
+        self.finished.append(r)
+
+    def _retire(self) -> None:
+        """Block on the in-flight wave's result and hand each request its
+        panel back in its own dtype. The measured wall time (dispatch ->
+        result on host) feeds the packer's cost model."""
+        w = self._inflight
+        if w is None:
+            return
+        self._inflight = None
+        c = np.asarray(w.c)                # blocks until the device is done
+        t_done = time.perf_counter()
+        wall_s = t_done - w.t_dispatch
         off = 0
-        for r in wave:
-            w = r.b.shape[1]
-            r.out = c[:, off:off + w].astype(r.b.dtype)
-            off += w
-            r.done = True
-            self.finished.append(r)
+        for r in w.items:
+            width = r.b.shape[1]
+            self._finish_item(r, c[:, off:off + width], t_done)
+            off += width
         self.stats["cols"] += off
-        self.stats["requests"] += len(wave)
+        self.stats["waves"] += 1
+        self._wave_wall_s.append(wall_s)
+        self._t_last_done = t_done
+        self.scheduler.observe(off, wall_s * 1e6)
+
+    # -- serving loop ----------------------------------------------------
+    def step(self, retire: bool = True) -> bool:
+        """Advance the pipeline one wave: dispatch (staging first if
+        nothing is prepped), then — in continuous mode — prep the NEXT
+        wave while the device computes, then retire the in-flight wave.
+        ``retire=False`` leaves the wave in flight (callers that want to
+        act between dispatch and retirement, e.g. a mid-stream
+        ``swap_pattern``). Returns False when there was nothing to do."""
+        if self._inflight is None:
+            if self._staged is None and not self._stage(hidden=False):
+                return False
+            self._dispatch()
+        if self.continuous and self._staged is None and self.queue:
+            self._stage(hidden=True)       # overlapped with device compute
+        if retire:
+            self._retire()
+        return True
 
     def run(self) -> List[SpMMRequest]:
-        """Serve until the queue drains; returns finished requests."""
-        while self.queue:
-            self._run_wave(self._next_wave())
-            self.stats["waves"] += 1
+        """Serve until the queue (and pipeline) drains; returns finished
+        requests."""
+        while self.queue or self._staged is not None \
+                or self._inflight is not None:
+            self.step()
         return self.finished
+
+    # -- reporting -------------------------------------------------------
+    def stats_summary(self) -> Dict[str, Any]:
+        """Latency/throughput digest over everything served so far:
+        requests/sec, per-request latency and queue-wait p50/p99, per-wave
+        wall p50/p99, and how much host prep the overlap pipeline hid.
+        ``serve_bench`` records exactly this."""
+        elapsed = 0.0
+        if self._t_first_submit is not None \
+                and self._t_last_done is not None:
+            elapsed = max(0.0, self._t_last_done - self._t_first_submit)
+        n = int(self.stats["requests"])
+        cost = self.scheduler.cost
+        return {
+            "mode": "continuous" if self.continuous else "wave_barrier",
+            "requests": n,
+            "waves": int(self.stats["waves"]),
+            "cols": int(self.stats["cols"]),
+            "elapsed_s": elapsed,
+            "requests_per_s": (n / elapsed) if elapsed > 0 else 0.0,
+            "latency_ms": _percentiles_ms(self._req_latency_s),
+            "queue_wait_ms": _percentiles_ms(self._queue_wait_s),
+            "wave_ms": _percentiles_ms(self._wave_wall_s),
+            "prep_s_total": self._prep_s_total,
+            "prep_s_hidden": self._prep_s_hidden,
+            "prep_overlap_fraction":
+                (self._prep_s_hidden / self._prep_s_total)
+                if self._prep_s_total > 0 else 0.0,
+            "cost_model": {
+                "us_per_col": cost.us_per_col,
+                "launch_overhead_us": cost.launch_overhead_us,
+                "n_observed": cost.n_observed,
+                "source": cost.source,
+                "last_target_cols": self.scheduler.last_target,
+            },
+        }

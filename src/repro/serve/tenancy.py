@@ -1,0 +1,298 @@
+"""Multi-tenant SpMM serving: many resident operands behind one process.
+
+One serving process rarely hosts ONE sparse operand — it hosts a model
+per user, a pruned pattern per checkpoint, a head per task. ``TenantPool``
+keeps many ``SpMMEngine``s (one per named operand) behind a single
+submit/run surface with an LRU byte budget on device-resident operand
+bytes (HBM): when admitting or reviving a tenant would exceed the budget,
+the least-recently-used IDLE tenant is evicted — its prepared arrays are
+dropped (and the ``ops.prepare_incrs`` memo entry invalidated for raw
+InCRS operands) while its constructor-form operand is retained on the
+host, so a later request transparently re-preps it. Tenants with queued
+or in-flight work are never evicted; if every resident tenant is busy the
+pool overcommits and records it (``budget_overcommit``) rather than
+dropping work.
+
+Per-launch VMEM footprints (``analysis/vmem.py``) are reported per tenant
+by :meth:`TenantPool.vmem_report` — residency is an HBM question, launch
+feasibility a VMEM one, and the pool keeps both visible.
+
+``swap_pattern`` works per tenant and stays safe while requests are
+queued — it delegates to the engine's swap (in-flight waves finish on the
+old operand; a rejected swap leaves queue and operand intact) and updates
+the retained host-side operand so a later evict/revive cycle rebuilds the
+NEW pattern, not the stale one.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict, defaultdict
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from .engine import SpMMEngine, SpMMRequest
+
+# Default resident-operand byte budget. Deliberately the ballpark of a
+# couple of large prepared operands, not a real HBM size: the pool's job
+# is the eviction DISCIPLINE; deployments size this to their part.
+DEFAULT_HBM_BUDGET = 256 * 1024 * 1024
+
+
+def operand_bytes(prep) -> int:
+    """Device-resident bytes of one serving operand: the prepared stripe
+    arrays (idx + val) for InCRS preps, the packed values (+ index
+    metadata) for bound plans. Host-side originals don't count — they are
+    what eviction falls back to."""
+    total = 0
+    idx = getattr(prep, "idx", None)
+    if idx is not None:                    # PreparedOperand / sharded
+        return int(idx.nbytes) + int(prep.val.nbytes)
+    values = getattr(prep, "values", None)
+    if values is not None:                 # BoundPlan
+        total += int(np.asarray(values).nbytes) if not hasattr(
+            values, "nbytes") else int(values.nbytes)
+        meta = getattr(getattr(prep, "plan", None), "meta", None)
+        fwd = getattr(meta, "fwd_idx", None)
+        if fwd is not None:
+            total += int(fwd.nbytes)
+    return total
+
+
+@dataclasses.dataclass
+class _Tenant:
+    name: str
+    a: Any                                 # constructor-form operand (host)
+    engine_kwargs: Dict[str, Any]
+    engine: Optional[SpMMEngine] = None    # None = evicted
+    resident_bytes: int = 0
+    finished: List[SpMMRequest] = dataclasses.field(default_factory=list)
+    evictions: int = 0
+
+    @property
+    def resident(self) -> bool:
+        return self.engine is not None
+
+    @property
+    def busy(self) -> bool:
+        """Queued, staged, or in-flight work — never evictable."""
+        e = self.engine
+        return e is not None and bool(e.queue or e._staged is not None
+                                      or e._inflight is not None)
+
+
+class TenantPool:
+    """LRU-budgeted pool of named ``SpMMEngine`` tenants.
+
+    ``engine_kwargs`` passed to :meth:`add` (e.g. ``max_wave_cols``,
+    ``latency_budget_us``, ``variant``) are retained and re-applied when
+    an evicted tenant is revived, so a tenant's serving configuration
+    survives eviction just like its operand does.
+    """
+
+    def __init__(self, *, hbm_budget_bytes: int = DEFAULT_HBM_BUDGET,
+                 **engine_defaults):
+        if hbm_budget_bytes <= 0:
+            raise ValueError(f"hbm_budget_bytes must be positive, got "
+                             f"{hbm_budget_bytes}")
+        self.hbm_budget_bytes = hbm_budget_bytes
+        self.engine_defaults = engine_defaults
+        # OrderedDict IS the LRU: most-recently-used tenants at the end.
+        self._tenants: "OrderedDict[str, _Tenant]" = OrderedDict()
+        self.stats: Dict[str, int] = defaultdict(int)
+
+    # -- residency -------------------------------------------------------
+    def resident_bytes(self) -> int:
+        return sum(t.resident_bytes for t in self._tenants.values()
+                   if t.resident)
+
+    def _touch(self, name: str) -> None:
+        self._tenants.move_to_end(name)
+
+    def _build_engine(self, tenant: _Tenant) -> None:
+        kwargs = dict(self.engine_defaults)
+        kwargs.update(tenant.engine_kwargs)
+        tenant.engine = SpMMEngine(tenant.a, **kwargs)
+        tenant.resident_bytes = operand_bytes(tenant.engine.prep)
+        self.stats["builds"] += 1
+
+    def _evict_for(self, incoming: Optional[str]) -> None:
+        """Evict idle LRU tenants until the pool fits its budget; a fully
+        busy pool overcommits (recorded) instead of dropping work."""
+        while self.resident_bytes() > self.hbm_budget_bytes:
+            victim = None
+            for t in self._tenants.values():         # LRU -> MRU order
+                if t.name != incoming and t.resident and not t.busy:
+                    victim = t
+                    break
+            if victim is None:
+                self.stats["budget_overcommit"] += 1
+                return
+            self.evict(victim.name)
+
+    def evict(self, name: str) -> None:
+        """Drop a tenant's device-resident operand (its host-side form
+        and served results are retained; a later request revives it)."""
+        t = self._require(name)
+        if not t.resident:
+            return
+        if t.busy:
+            raise ValueError(f"tenant {name!r} has queued or in-flight "
+                             f"requests — drain it before evicting")
+        t.finished.extend(t.engine.finished)
+        # Raw InCRS preps are memoized per live object in ops — dropping
+        # the engine alone would keep the stripes alive in that cache.
+        if hasattr(t.a, "crs"):
+            t.engine._ops.invalidate_prepared(t.a)
+        t.engine = None
+        t.resident_bytes = 0
+        t.evictions += 1
+        self.stats["evictions"] += 1
+
+    def _ensure_resident(self, name: str) -> _Tenant:
+        t = self._require(name)
+        if not t.resident:
+            self._build_engine(t)
+            self.stats["revivals"] += 1
+        self._touch(name)
+        self._evict_for(name)
+        return t
+
+    def _require(self, name: str) -> _Tenant:
+        t = self._tenants.get(name)
+        if t is None:
+            raise KeyError(f"unknown tenant {name!r}; resident/known: "
+                           f"{list(self._tenants)}")
+        return t
+
+    # -- tenant surface --------------------------------------------------
+    def add(self, name: str, a, **engine_kwargs) -> SpMMEngine:
+        """Register (and build) a tenant. ``a`` and ``engine_kwargs``
+        accept everything ``SpMMEngine`` does; both are retained so the
+        tenant can be revived after eviction."""
+        if name in self._tenants:
+            raise ValueError(f"tenant {name!r} already exists — use "
+                             f"swap_pattern to change its operand")
+        t = _Tenant(name=name, a=a, engine_kwargs=engine_kwargs)
+        self._tenants[name] = t
+        self._build_engine(t)
+        self._touch(name)
+        self._evict_for(name)
+        return t.engine
+
+    def submit(self, name: str, req: SpMMRequest) -> None:
+        t = self._ensure_resident(name)
+        t.engine.submit(req)
+
+    def swap_pattern(self, name: str, a, **kwargs) -> None:
+        """Swap one tenant's operand (engine semantics: queued work is
+        safe, rejected swaps roll back). On success the retained
+        host-side operand is updated too, so an evict/revive cycle
+        rebuilds the new pattern."""
+        t = self._ensure_resident(name)
+        t.engine.swap_pattern(a, **kwargs)
+        t.a = a
+        t.resident_bytes = operand_bytes(t.engine.prep)
+        self._evict_for(name)
+
+    def run(self, name: Optional[str] = None) -> List[SpMMRequest]:
+        """Drain one tenant (``name``) or every tenant's queue. Across
+        tenants, the next wave goes to the engine whose head request has
+        waited longest — no tenant starves because another is chatty."""
+        if name is not None:
+            t = self._ensure_resident(name)
+            return t.engine.run()
+        served: List[SpMMRequest] = []
+        while True:
+            busy = [t for t in self._tenants.values() if t.busy]
+            if not busy:
+                break
+            t = min(busy, key=_head_wait_key)
+            before = len(t.engine.finished)
+            t.engine.step()
+            served.extend(t.engine.finished[before:])
+            self._touch(t.name)
+        return served
+
+    def results(self, name: str) -> List[SpMMRequest]:
+        """Everything this tenant ever served (across evictions)."""
+        t = self._require(name)
+        out = list(t.finished)
+        if t.resident:
+            out.extend(t.engine.finished)
+        return out
+
+    def engine(self, name: str) -> SpMMEngine:
+        """The tenant's live engine (reviving it if evicted)."""
+        return self._ensure_resident(name).engine
+
+    # -- reporting -------------------------------------------------------
+    def tenants(self) -> List[str]:
+        return list(self._tenants)
+
+    def summary(self) -> Dict[str, Any]:
+        per_tenant = {}
+        for t in self._tenants.values():
+            row: Dict[str, Any] = {
+                "resident": t.resident,
+                "resident_bytes": t.resident_bytes,
+                "evictions": t.evictions,
+            }
+            if t.resident:
+                row["engine"] = t.engine.stats_summary()
+            per_tenant[t.name] = row
+        return {
+            "hbm_budget_bytes": self.hbm_budget_bytes,
+            "resident_bytes": self.resident_bytes(),
+            "n_tenants": len(self._tenants),
+            "n_resident": sum(t.resident for t in self._tenants.values()),
+            "stats": dict(self.stats),
+            "tenants": per_tenant,
+        }
+
+    def vmem_report(self) -> Dict[str, Any]:
+        """Per-launch VMEM footprint of each RESIDENT tenant at its
+        engine's wave cap, from the ``analysis.vmem`` model — residency is
+        an HBM budget, launch feasibility a VMEM one; this reports the
+        latter next to the former."""
+        from ..analysis import vmem
+        rows = {}
+        for t in self._tenants.values():
+            if not t.resident:
+                continue
+            geom = t.engine._operand_geometry()
+            if geom is None:
+                continue
+            m, n_sections, smax, section = geom
+            n = t.engine.max_wave_cols
+            # Same default col-tile heuristic ops.spmm applies at launch.
+            np128 = -(-n // 128) * 128
+            tiles = -(-np128 // 512)
+            bn = -(-np128 // (tiles * 128)) * 128
+            variant = t.engine.variant
+            if variant == "auto":
+                variant = "expand"         # smallest-footprint bound
+            fp = vmem.incrs_footprint(
+                variant, m=m, n=n, bm=128, bn=bn, n_sections=n_sections,
+                smax=smax, section=section)
+            rows[t.name] = {
+                "variant": variant,
+                "max_wave_cols": n,
+                "vmem_bytes": int(fp.total_bytes),
+                "hbm_bytes": t.resident_bytes,
+            }
+        return {"budget_bytes": vmem.vmem_budget(), "tenants": rows}
+
+
+def _head_wait_key(t: _Tenant) -> float:
+    """Sort key: earliest head-of-queue submit time first; tenants with
+    only staged/in-flight work (no queue head) come first of all so the
+    pipeline drains before new admissions."""
+    e = t.engine
+    if e.queue:
+        head = e.queue[0]
+        return head.t_submit if head.t_submit is not None else 0.0
+    return float("-inf")
+
+
+__all__ = ["TenantPool", "operand_bytes", "DEFAULT_HBM_BUDGET"]

@@ -1,0 +1,380 @@
+"""Continuous-batching SpMM engine: cost-model wave packing (skip-scan
+head-of-line fix, latency-budget targeting), oversized-request splitting,
+prep/compute overlap accounting, mid-stream pattern swaps, stats_summary,
+and the multi-tenant LRU pool."""
+import numpy as np
+import pytest
+
+from repro.core.incrs import InCRS
+from repro.serve import scheduler as sched
+from repro.serve.engine import SpMMEngine, SpMMRequest
+from repro.serve.tenancy import TenantPool, operand_bytes
+
+
+def _random_sparse(rng, m, k, density):
+    d = rng.normal(size=(m, k)).astype(np.float32)
+    d[rng.random(size=(m, k)) >= density] = 0.0
+    return d
+
+
+def _reqs(rng, k, widths):
+    return [SpMMRequest(i, rng.normal(size=(k, w)).astype(np.float32))
+            for i, w in enumerate(widths)]
+
+
+def _check_outputs(done, d):
+    for r in done:
+        np.testing.assert_allclose(r.out, d @ r.b, rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------------------------
+# Scheduler units: cost model + packer, no engine, no jax arrays needed.
+class _Stub:
+    def __init__(self, w):
+        self.b = np.empty((1, w), np.float32)
+
+
+def test_cost_model_fit_and_target():
+    # Two measured points -> affine fit; target solves the budget back.
+    slope, overhead = sched.fit_us_per_col([(100, 1100.0), (300, 3100.0)])
+    assert slope == pytest.approx(10.0)
+    assert overhead == pytest.approx(100.0)
+    m = sched.WaveCostModel(us_per_col=10.0, launch_overhead_us=100.0)
+    assert m.predict_us(50) == pytest.approx(600.0)
+    assert m.target_cols(1100.0, hard_cap=512) == 100
+    assert m.target_cols(1100.0, hard_cap=64) == 64     # cap always wins
+    assert m.target_cols(None, hard_cap=512) == 512     # no budget
+    assert m.target_cols(0.0, hard_cap=512) == sched.MIN_TARGET_COLS
+
+
+def test_cost_model_ewma_converges():
+    m = sched.WaveCostModel()
+    assert m.predict_us(10) is None
+    for _ in range(50):
+        m.observe(100, 500.0)             # 5 µs/col, steady
+    assert m.us_per_col == pytest.approx(5.0, rel=1e-3)
+    assert m.n_observed == 50
+
+
+def test_packer_skip_scan_fixes_head_of_line_blocking():
+    """A wide head request must not starve narrower requests that fit in
+    the same wave — the old FIFO stopped at the first non-fit."""
+    from collections import deque
+    q = deque([_Stub(100), _Stub(60), _Stub(20), _Stub(8)])
+    barrier = sched.WavePacker(skip_limit=0)
+    wave = barrier.next_wave(q, hard_cap=128)
+    assert [r.b.shape[1] for r in wave] == [100]        # old behaviour
+    q = deque([_Stub(100), _Stub(60), _Stub(20), _Stub(8)])
+    packer = sched.WavePacker(skip_limit=8)
+    wave = packer.next_wave(q, hard_cap=128)
+    assert [r.b.shape[1] for r in wave] == [100, 20, 8]  # packed densely
+    assert [r.b.shape[1] for r in q] == [60]             # order preserved
+
+
+def test_packer_bypass_preserves_order_and_bound():
+    from collections import deque
+    widths = [90, 50, 50, 50, 30]
+    q = deque(_Stub(w) for w in widths)
+    packer = sched.WavePacker(skip_limit=1)              # bounded scan
+    wave = packer.next_wave(q, hard_cap=100)
+    # 90 admitted; 50 bypassed (1 skip allowed); scan stops at the bound.
+    assert [r.b.shape[1] for r in wave] == [90]
+    assert [r.b.shape[1] for r in q] == [50, 50, 50, 30]
+
+
+def test_packer_budget_narrows_waves():
+    from collections import deque
+    cost = sched.WaveCostModel(us_per_col=10.0)
+    packer = sched.WavePacker(cost=cost, budget_us=320.0)
+    q = deque(_Stub(16) for _ in range(8))
+    wave = packer.next_wave(q, hard_cap=512)
+    assert sum(r.b.shape[1] for r in wave) <= 32         # 320µs / 10µs/col
+    assert packer.last_target == 32
+
+
+def test_seed_from_bench(tmp_path):
+    import json
+    path = tmp_path / "bench.json"
+    path.write_text(json.dumps({"rows": [
+        {"name": "incrs_spmm_fused", "us": 6400.0, "derived": "cols=64"},
+        {"name": "dense_mm_256", "us": 99.0, "derived": ""},
+    ]}))
+    m = sched.seed_from_bench(str(path))
+    assert m.us_per_col == pytest.approx(100.0)
+    assert sched.seed_from_bench(str(tmp_path / "nope.json")) \
+        .us_per_col is None
+
+
+def test_seed_from_autotune_geometry_match(tmp_path, monkeypatch):
+    from repro.kernels import autotune
+    monkeypatch.setenv(autotune.CACHE_ENV, str(tmp_path / "tune.json"))
+    autotune.clear_memory_cache()
+    cfg = autotune.TunedConfig("expand", 128, 128, 640.0, 500.0)
+    autotune._store_disk(autotune.cache_key(128, 4, 7, 64, 64,
+                                            "interpret"), cfg)
+    m = sched.seed_from_autotune(128, 4, 7, 64, "interpret")
+    assert m.us_per_col == pytest.approx(10.0)
+    assert sched.seed_from_autotune(256, 4, 7, 64, "interpret") \
+        .us_per_col is None                              # other geometry
+
+
+# ----------------------------------------------------------------------
+# Engine-level behaviour.
+def test_engine_mixed_width_queue_packs_densely(rng):
+    """Regression for the head-of-line fix at the engine level: the
+    continuous engine serves a mixed-width queue in fewer waves than the
+    wave-barrier baseline, with identical results."""
+    d = _random_sparse(rng, 32, 400, 0.1)
+    inc = InCRS.from_dense(d)
+    widths = [100, 60, 20, 8, 100, 60, 20, 8]
+    barrier = SpMMEngine(inc, max_wave_cols=128, continuous=False)
+    for r in _reqs(rng, 400, widths):
+        barrier.submit(r)
+    done_b = barrier.run()
+    cont = SpMMEngine(inc, max_wave_cols=128)
+    for r in _reqs(rng, 400, widths):
+        cont.submit(r)
+    done_c = cont.run()
+    assert cont.stats["waves"] < barrier.stats["waves"]
+    assert len(done_c) == len(done_b) == len(widths)
+    _check_outputs(done_b, d)
+    _check_outputs(done_c, d)
+
+
+def test_engine_oversized_request_split_across_waves(rng):
+    """A request wider than max_wave_cols must not launch a kernel wider
+    than the proven shape: it is split into parts and reassembled."""
+    d = _random_sparse(rng, 24, 300, 0.1)
+    inc = InCRS.from_dense(d)
+    eng = SpMMEngine(inc, max_wave_cols=64)
+    launched = []
+    real_spmm = eng._ops.spmm
+
+    def spy(prep, b, **kw):
+        launched.append(b.shape[1])
+        return real_spmm(prep, b, **kw)
+
+    eng._ops = type("OpsSpy", (), {"spmm": staticmethod(spy),
+                                   "INTERPRET": eng._ops.INTERPRET})()
+    wide = SpMMRequest(0, rng.normal(size=(300, 150)).astype(np.float32))
+    narrow = SpMMRequest(1, rng.normal(size=(300, 10)).astype(np.float32))
+    eng.submit(wide)
+    eng.submit(narrow)
+    done = eng.run()
+    # Every launch fits the proven cap up to lane bucketing: the engine
+    # zero-pads waves to 128-col buckets, the same shape ops.spmm's
+    # internal 128-multiple padding produces for any width <= the cap.
+    from repro.serve.engine import WAVE_QUANTUM
+    cap128 = -(-eng.max_wave_cols // WAVE_QUANTUM) * WAVE_QUANTUM
+    assert all(w <= cap128 for w in launched)
+    assert eng.stats["split_requests"] == 1
+    assert eng.stats["split_parts"] == 3      # 64 + 64 + 22
+    assert {r.rid for r in done} == {0, 1}
+    assert wide.done and wide.out.shape == (24, 150)
+    _check_outputs(done, d)
+
+
+def test_engine_split_request_preserves_dtype(rng):
+    d = _random_sparse(rng, 16, 200, 0.1)
+    eng = SpMMEngine(InCRS.from_dense(d), max_wave_cols=32)
+    b = rng.normal(size=(200, 70)).astype(np.float64)
+    with pytest.warns(UserWarning, match="f32 precision"):
+        eng.submit(SpMMRequest(0, b))
+        done = eng.run()
+    assert done[0].out.dtype == np.float64
+    np.testing.assert_allclose(done[0].out.astype(np.float32),
+                               (d @ b.astype(np.float32)),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_engine_prep_overlap_accounting(rng):
+    """In continuous mode every wave after the first is prepped while the
+    device computes — overlap fraction approaches (W-1)/W. The barrier
+    mode hides nothing."""
+    d = _random_sparse(rng, 16, 200, 0.1)
+    inc = InCRS.from_dense(d)
+    widths = [32] * 8                          # 8 waves at cap 32
+    eng = SpMMEngine(inc, max_wave_cols=32)
+    for r in _reqs(rng, 200, widths):
+        eng.submit(r)
+    eng.run()
+    s = eng.stats_summary()
+    assert s["waves"] == 8
+    assert s["prep_s_total"] > 0
+    assert s["prep_overlap_fraction"] >= 0.5   # 7 of 8 waves hidden
+    barrier = SpMMEngine(inc, max_wave_cols=32, continuous=False)
+    for r in _reqs(rng, 200, widths):
+        barrier.submit(r)
+    barrier.run()
+    assert barrier.stats_summary()["prep_overlap_fraction"] == 0.0
+
+
+def test_engine_stats_summary_shape(rng):
+    d = _random_sparse(rng, 16, 200, 0.1)
+    eng = SpMMEngine(InCRS.from_dense(d), max_wave_cols=64)
+    for r in _reqs(rng, 200, [20, 20, 20]):
+        eng.submit(r)
+    eng.run()
+    s = eng.stats_summary()
+    assert s["mode"] == "continuous"
+    assert s["requests"] == 3 and s["cols"] == 60
+    assert s["requests_per_s"] > 0 and s["elapsed_s"] > 0
+    for key in ("latency_ms", "queue_wait_ms", "wave_ms"):
+        assert s[key]["p99"] >= s[key]["p50"] >= 0.0
+    cm = s["cost_model"]
+    assert cm["us_per_col"] is not None and cm["n_observed"] >= 1
+
+
+def test_engine_latency_budget_caps_wave_width(rng):
+    d = _random_sparse(rng, 16, 200, 0.1)
+    inc = InCRS.from_dense(d)
+    cost = sched.WaveCostModel(us_per_col=10.0)
+    packer = sched.WavePacker(cost=cost, budget_us=200.0, skip_limit=8)
+    eng = SpMMEngine(inc, max_wave_cols=512, scheduler=packer)
+    for r in _reqs(rng, 200, [10] * 6):
+        eng.submit(r)
+    done = eng.run()
+    assert len(done) == 6
+    # 200µs budget at >=10µs/col (EWMA may only raise it in interpret
+    # mode) keeps waves at <=20 cols -> at least 3 waves, not one.
+    assert eng.stats["waves"] >= 3
+    _check_outputs(done, d)
+
+
+def test_engine_step_retire_false_leaves_wave_in_flight(rng):
+    d = _random_sparse(rng, 16, 200, 0.1)
+    eng = SpMMEngine(InCRS.from_dense(d), max_wave_cols=32)
+    for r in _reqs(rng, 200, [32, 32]):
+        eng.submit(r)
+    assert eng.step(retire=False)
+    assert eng._inflight is not None and not eng.finished
+    eng.run()
+    assert len(eng.finished) == 2 and eng._inflight is None
+
+
+# ----------------------------------------------------------------------
+# swap_pattern while requests are queued / in flight.
+def test_swap_mid_stream_inflight_old_later_new(rng):
+    """An in-flight wave finishes on the operand it was dispatched with;
+    waves staged after the swap take the new one."""
+    d1 = _random_sparse(rng, 24, 300, 0.1)
+    d2 = _random_sparse(np.random.default_rng(7), 24, 300, 0.1)
+    eng = SpMMEngine(InCRS.from_dense(d1), max_wave_cols=32)
+    reqs = _reqs(rng, 300, [32, 32, 32])
+    for r in reqs:
+        eng.submit(r)
+    eng.step(retire=False)                 # wave 0 dispatched on d1
+    eng.swap_pattern(InCRS.from_dense(d2))
+    done = eng.run()
+    assert len(done) == 3 and eng.stats["pattern_swaps"] == 1
+    np.testing.assert_allclose(reqs[0].out, d1 @ reqs[0].b,
+                               rtol=1e-4, atol=1e-4)
+    for r in reqs[1:]:
+        np.testing.assert_allclose(r.out, d2 @ r.b, rtol=1e-4, atol=1e-4)
+
+
+def test_swap_rejected_mid_stream_leaves_queue_and_operand(rng):
+    d = _random_sparse(rng, 24, 300, 0.1)
+    eng = SpMMEngine(InCRS.from_dense(d), max_wave_cols=64)
+    reqs = _reqs(rng, 300, [32, 32, 32])
+    for r in reqs:
+        eng.submit(r)
+    old_prep = eng.prep
+    wrong = InCRS.from_dense(_random_sparse(rng, 24, 200, 0.1))
+    with pytest.raises(ValueError, match="shape"):
+        eng.swap_pattern(wrong)            # shape mismatch -> rejected
+    assert eng.prep is old_prep
+    assert len(eng.queue) == 3 and eng.stats["pattern_swaps"] == 0
+    done = eng.run()                       # still serves on the OLD operand
+    assert len(done) == 3
+    _check_outputs(done, d)
+
+
+# ----------------------------------------------------------------------
+# Multi-tenant pool.
+def _make_inc(rng, m, k, density=0.1):
+    d = _random_sparse(rng, m, k, density)
+    return d, InCRS.from_dense(d)
+
+
+def test_tenant_pool_serves_many_operands(rng):
+    d1, inc1 = _make_inc(rng, 16, 200)
+    d2, inc2 = _make_inc(rng, 32, 100)
+    pool = TenantPool()
+    pool.add("alpha", inc1, max_wave_cols=64)
+    pool.add("beta", inc2, max_wave_cols=64)
+    r1 = SpMMRequest(0, rng.normal(size=(200, 8)).astype(np.float32))
+    r2 = SpMMRequest(1, rng.normal(size=(100, 8)).astype(np.float32))
+    pool.submit("alpha", r1)
+    pool.submit("beta", r2)
+    served = pool.run()
+    assert len(served) == 2 and r1.done and r2.done
+    np.testing.assert_allclose(r1.out, d1 @ r1.b, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(r2.out, d2 @ r2.b, rtol=1e-4, atol=1e-4)
+    s = pool.summary()
+    assert s["n_resident"] == 2 and s["resident_bytes"] > 0
+
+
+def test_tenant_pool_lru_eviction_and_revival(rng):
+    d1, inc1 = _make_inc(rng, 64, 400)
+    d2, inc2 = _make_inc(rng, 64, 400)
+    pool = TenantPool(max_wave_cols=64)
+    one = operand_bytes(pool.add("one", inc1).prep)
+    pool.hbm_budget_bytes = int(one * 1.5)     # room for exactly one
+    pool.add("two", inc2)
+    assert not pool._tenants["one"].resident   # LRU evicted
+    assert pool._tenants["two"].resident
+    assert pool.stats["evictions"] == 1
+    req = SpMMRequest(0, rng.normal(size=(400, 8)).astype(np.float32))
+    pool.submit("one", req)                    # transparently revived
+    pool.run("one")
+    np.testing.assert_allclose(req.out, d1 @ req.b, rtol=1e-4, atol=1e-4)
+    assert pool.stats["revivals"] == 1
+    assert not pool._tenants["two"].resident   # budget held: two evicted
+    assert len(pool.results("one")) == 1
+
+
+def test_tenant_pool_never_evicts_busy_tenant(rng):
+    _, inc1 = _make_inc(rng, 64, 400)
+    _, inc2 = _make_inc(rng, 64, 400)
+    pool = TenantPool(max_wave_cols=64)
+    pool.add("one", inc1)
+    pool.submit("one", SpMMRequest(
+        0, rng.normal(size=(400, 8)).astype(np.float32)))
+    pool.hbm_budget_bytes = 1                  # nothing fits
+    pool.add("two", inc2)                      # "one" is busy: overcommit
+    assert pool._tenants["one"].resident
+    assert pool.stats["budget_overcommit"] >= 1
+    with pytest.raises(ValueError, match="in-flight|queued"):
+        pool.evict("one")
+    pool.run("one")
+    pool.evict("one")                          # drained: now evictable
+    assert not pool._tenants["one"].resident
+
+
+def test_tenant_pool_swap_survives_eviction(rng):
+    """After a swap, an evict/revive cycle must rebuild the NEW operand,
+    not the stale one the tenant was added with."""
+    d1, inc1 = _make_inc(rng, 16, 200)
+    d2, inc2 = _make_inc(np.random.default_rng(3), 16, 200)
+    pool = TenantPool(max_wave_cols=64)
+    pool.add("t", inc1)
+    pool.swap_pattern("t", inc2)
+    pool.evict("t")
+    req = SpMMRequest(0, rng.normal(size=(200, 8)).astype(np.float32))
+    pool.submit("t", req)                      # revive from retained a
+    pool.run("t")
+    np.testing.assert_allclose(req.out, d2 @ req.b, rtol=1e-4, atol=1e-4)
+
+
+def test_tenant_pool_vmem_report(rng):
+    _, inc = _make_inc(rng, 32, 200)
+    pool = TenantPool(max_wave_cols=64)
+    pool.add("t", inc)
+    rep = pool.vmem_report()
+    row = rep["tenants"]["t"]
+    assert 0 < row["vmem_bytes"] <= rep["budget_bytes"]
+    assert row["hbm_bytes"] == pool._tenants["t"].resident_bytes > 0
+    with pytest.raises(KeyError):
+        pool.submit("ghost", SpMMRequest(
+            0, rng.normal(size=(200, 4)).astype(np.float32)))
