@@ -331,6 +331,70 @@ def run(seed: int = 0):
                     f"cold tune with/without static VMEM prefilter",
     }
 
+    # SpGEMM (sparse x sparse) vs densify-then-SpMM, one regime per side
+    # of the modelled crossover. The sparse regime is where the row-wise
+    # product should win (few matches per round window, so densifying the
+    # RHS wastes HBM + gather work); the dense regime is where gathering
+    # B once and streaming it through the fused InCRS kernel wins. Each
+    # row records measurement; the comparison records both engines, the
+    # mesh_sim oracle's pick for THIS backend, and whether the oracle
+    # landed on the measured winner (acceptance: it must, on both sides).
+    from repro.core import mesh_sim
+    from repro.core.crs import CRS
+
+    def _spgemm_regime(m, n, k, density):
+        A = (rng.random((m, k)) < density) * rng.standard_normal((m, k))
+        Bt = (rng.random((n, k)) < density) * rng.standard_normal((n, k))
+        a_crs = CRS.from_dense(A.astype(np.float32))
+        bt_crs = CRS.from_dense(Bt.astype(np.float32))
+        cost = mesh_sim.spgemm_cost_for(a_crs, bt_crs, rounds=128)
+        pick = autotune.pick_spgemm_engine(cost, ops.INTERPRET)
+        # the SpGEMM side's representative: the oracle's pick when it is
+        # a sparse x sparse engine, the fused one-pass engine otherwise
+        sp_engine = pick if pick != "densify" else "reference"
+        sp_us = _time(lambda: ops.spmm(a_crs, bt_crs, rounds=128,
+                                       variant=sp_engine))
+        de_us = _time(lambda: ops.spmm(a_crs, bt_crs, rounds=128,
+                                       variant="densify"))
+        cm_us = _time(lambda: ops.spmm(a_crs, bt_crs, rounds=128,
+                                       variant="condense_merge"), reps=3)
+        winner = "densify" if de_us < sp_us else sp_engine
+        return {
+            "workload": f"{m}x{k} @ {n}x{k}.T d={density} rounds=128",
+            "spgemm_us": sp_us, "densify_us": de_us,
+            "condense_merge_us": cm_us,
+            "speedup_spgemm_over_densify": de_us / sp_us,
+            "oracle_pick": pick,
+            "oracle_cycle_pick": cost.pick,
+            "measured_winner": winner,
+            "oracle_correct": (pick == "densify") == (de_us < sp_us),
+            "model_us": {
+                "fused": autotune.engine_predict_us(cost.fused,
+                                                    ops.INTERPRET),
+                "condense_merge": autotune.engine_predict_us(
+                    cost.spgemm, ops.INTERPRET),
+                "densify": autotune.engine_predict_us(cost.densify,
+                                                      ops.INTERPRET)},
+        }, sp_us, de_us, cm_us
+
+    sp_rec, sp_us, sp_de_us, sp_cm_us = _spgemm_regime(128, 256, 4096, 0.01)
+    de_rec, dn_sp_us, dn_de_us, dn_cm_us = _spgemm_regime(256, 256, 512, 0.5)
+    rows.append(("spgemm_condense_merge", sp_cm_us,
+                 f"two-pass stripe pipeline;{sp_rec['workload']}"))
+    rows.append(("spgemm_auto_sparse_regime", sp_us,
+                 f"engine={sp_rec['oracle_pick']};{sp_rec['workload']}"))
+    rows.append(("spgemm_densify_sparse_regime", sp_de_us,
+                 f"engine=densify;{sp_rec['workload']}"))
+    rows.append(("spgemm_vs_densify_crossover", dn_de_us,
+                 f"engine=densify (dense-regime winner);"
+                 f"{de_rec['workload']}"))
+    comparisons["spgemm_vs_densify_crossover"] = {
+        "sparse_regime": sp_rec,
+        "dense_regime": de_rec,
+        "oracle_correct_both_sides": (sp_rec["oracle_correct"]
+                                      and de_rec["oracle_correct"]),
+    }
+
     # Row-sharded fused SpMM across fake host devices: each count runs in a
     # subprocess (XLA fixes the device count at backend init, so the parent
     # process cannot revisit it). Same operand as the fused rows above.

@@ -24,7 +24,8 @@ Run the whole gate with ``python -m repro.analysis --check`` (as
 no jax.
 """
 from .kernel_check import (KernelConfigError, Violation,  # noqa: F401
-                           check_incrs_config, require_feasible,
+                           check_incrs_config, check_matched_config,
+                           require_feasible,
                            check_dma_pairing, check_dma_pairing_auto,
                            check_scratch_drift, check_kernel_invariants,
                            check_repo_invariants, discover_dma_kernels,
@@ -32,9 +33,9 @@ from .kernel_check import (KernelConfigError, Violation,  # noqa: F401
 from .lint import Finding, lint_source, lint_file, lint_tree  # noqa: F401
 from .grid_interp import (GridFinding, GRID_RULES,  # noqa: F401
                           check_kernel_grid, check_all_grids,
-                          check_config_bounds, proof_matrix,
-                          format_proof_matrix)
+                          check_config_bounds, check_matched_bounds,
+                          proof_matrix, format_proof_matrix)
 from .vmem import (DEFAULT_VMEM_BUDGET, PANEL_BYTES,  # noqa: F401
                    VmemFootprint, VmemTerm, vmem_budget,
                    incrs_footprint, bsr_footprint, dense_footprint,
-                   flash_footprint)
+                   flash_footprint, matched_footprint)

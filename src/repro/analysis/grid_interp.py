@@ -687,6 +687,15 @@ GEOMETRIES: Dict[str, Geometry] = {
         "incrs_gather.py", "incrs_gather",
         dict(m=16, bm=8, n_sections=3, smax=4, section=16),
         ((16, 3, 4), (16, 3, 4))),
+    "spgemm_condense": Geometry(
+        "spgemm/kernels.py", "spgemm_condense",
+        dict(m=16, n=16, bm=8, bn=8, rounds=16, n_rounds=2, rmax_a=3,
+             rmax_b=3),
+        ((16, 2, 3), (16, 2, 3), (16, 2, 3), (16, 2, 3))),
+    "spgemm_merge": Geometry(
+        "spgemm/kernels.py", "spgemm_merge",
+        dict(m=16, n=16, bm=8, bn=8, n_rounds=2),
+        ((2, 16, 16),)),
 }
 
 KERNELS = tuple(GEOMETRIES)
@@ -697,11 +706,24 @@ def kernels_dir() -> str:
                         "kernels")
 
 
+def package_dir() -> str:
+    return os.path.dirname(os.path.dirname(__file__))
+
+
+def module_path(module: str) -> str:
+    """Resolve a ``Geometry.module`` string to a file path. Plain names
+    live under ``repro/kernels/``; "/"-qualified names (e.g.
+    ``spgemm/kernels.py``) are relative to the repro package root."""
+    if "/" in module:
+        return os.path.join(package_dir(), *module.split("/"))
+    return os.path.join(kernels_dir(), module)
+
+
 def _load_source(module: str,
                  sources: Optional[Dict[str, str]] = None) -> str:
     if sources is not None and module in sources:
         return sources[module]
-    with open(os.path.join(kernels_dir(), module)) as f:
+    with open(module_path(module)) as f:
         return f.read()
 
 
@@ -1479,8 +1501,7 @@ def check_config_bounds(variant: str, *, m: int, n: int, bm: int,
     key = None
     if source is None:
         try:
-            mtime = os.stat(os.path.join(kernels_dir(),
-                                         geom.module)).st_mtime_ns
+            mtime = os.stat(module_path(geom.module)).st_mtime_ns
         except OSError:
             mtime = 0
         key = (entry, mp, n, eff_bm, bn, n_sections, smax, section,
@@ -1491,6 +1512,61 @@ def check_config_bounds(variant: str, *, m: int, n: int, bm: int,
     findings, _ = _analyze(geom, source=source, bounds_only=True)
     out = [Violation(f.rule, f"{variant}: {f.message} "
                      f"(line {f.line})")
+           for f in findings]
+    if key is not None:
+        if len(_BOUNDS_CACHE) > 256:
+            _BOUNDS_CACHE.clear()
+        _BOUNDS_CACHE[key] = tuple(out)
+    return out
+
+
+_MATCHED_ENTRY = {
+    "index_match": ("index_match_spmm.py", "index_match_spmm"),
+    "condense": ("spgemm/kernels.py", "spgemm_condense"),
+    "merge": ("spgemm/kernels.py", "spgemm_merge"),
+}
+
+
+def check_matched_bounds(stage: str, *, m: int, n: int, bm: int, bn: int,
+                         rounds: int, n_rounds: int, rmax_a: int,
+                         rmax_b: int,
+                         source: Optional[str] = None) -> List[Violation]:
+    """Interval-prove bounds safety of one matched-family stage (fused
+    index-match, SpGEMM condense, or SpGEMM merge) at one config —
+    the matched-family analogue of ``check_config_bounds``, with the
+    same mtime-keyed memo (``check_matched_config`` runs on the SpGEMM
+    launch path). Assumes a tileable geometry; returns [] when it cannot
+    even form a grid (RULE_GRID/RULE_ALIGN territory)."""
+    info = _MATCHED_ENTRY.get(stage)
+    if info is None:
+        return []
+    module, entry = info
+    if min(m, n, bm, bn, rounds, n_rounds, rmax_a, rmax_b) <= 0:
+        return []
+    if m % bm or n % bn:
+        return []
+    if stage == "merge":
+        env = dict(m=m, n=n, bm=bm, bn=bn, n_rounds=n_rounds)
+        ops: Tuple[Tuple[int, ...], ...] = ((n_rounds, m, n),)
+    else:
+        env = dict(m=m, n=n, bm=bm, bn=bn, rounds=rounds,
+                   n_rounds=n_rounds, rmax_a=rmax_a, rmax_b=rmax_b)
+        ops = ((m, n_rounds, rmax_a), (m, n_rounds, rmax_a),
+               (n, n_rounds, rmax_b), (n, n_rounds, rmax_b))
+    geom = Geometry(module, entry, env, ops)
+    key = None
+    if source is None:
+        try:
+            mtime = os.stat(module_path(module)).st_mtime_ns
+        except OSError:
+            mtime = 0
+        key = (entry, m, n, bm, bn, rounds, n_rounds, rmax_a, rmax_b,
+               mtime)
+        hit = _BOUNDS_CACHE.get(key)
+        if hit is not None:
+            return list(hit)
+    findings, _ = _analyze(geom, source=source, bounds_only=True)
+    out = [Violation(f.rule, f"{stage}: {f.message} (line {f.line})")
            for f in findings]
     if key is not None:
         if len(_BOUNDS_CACHE) > 256:

@@ -238,6 +238,81 @@ def require_feasible(variant: str, *, m: int, n: int, bm: int, bn: int,
         raise KernelConfigError(vs, context=context)
 
 
+def check_matched_config(stage: str, *, m: int, n: int, bm: int, bn: int,
+                         rounds: int, n_rounds: int, rmax_a: int,
+                         rmax_b: int, budget: Optional[int] = None,
+                         rules: Optional[Sequence[str]] = None
+                         ) -> List[Violation]:
+    """All static violations of one matched-family stage config —
+    ``"index_match"`` (the fused Alg. 2 reference), ``"condense"`` or
+    ``"merge"`` (the SpGEMM round-stripe pipeline) — against an
+    ``(m x k) @ (k x n).T`` sparse x sparse problem with per-round
+    prepped operands. Mirrors :func:`check_incrs_config`: alignment and
+    geometry first (a broken geometry short-circuits), then the VMEM
+    budget from :func:`vmem.matched_footprint`, then the grid
+    interpreter's interval bounds proof. ``ops.spmm``'s SpGEMM path and
+    ``autotune.tune_index_match`` gate launches on :data:`LAUNCH_RULES`
+    through this."""
+    if stage not in ("index_match", "condense", "merge"):
+        raise ValueError(f"unknown matched stage {stage!r}; expected "
+                         f"'index_match', 'condense' or 'merge'")
+    out: List[Violation] = []
+
+    def want(rule: str) -> bool:
+        return rules is None or rule in rules
+
+    if want(RULE_ALIGN):
+        if bm % vmem.SUBLANE != 0 and bm != m:
+            out.append(Violation(
+                RULE_ALIGN,
+                f"bm={bm} is not a multiple of the f32 sublane "
+                f"({vmem.SUBLANE}); padded panels will not map onto "
+                f"native (8, 128) vregs"))
+        if bn % vmem.SUBLANE != 0 and bn != n:
+            out.append(Violation(
+                RULE_ALIGN,
+                f"bn={bn} is not a multiple of the f32 sublane "
+                f"({vmem.SUBLANE}); the stripe's row dim is the RHS "
+                f"row-tile here, not a lane dim"))
+    if want(RULE_GRID):
+        if min(rounds, n_rounds, rmax_a, rmax_b) <= 0:
+            out.append(Violation(
+                RULE_GRID, f"non-positive round geometry (rounds={rounds}, "
+                f"n_rounds={n_rounds}, rmax={rmax_a}/{rmax_b})"))
+        elif max(rmax_a, rmax_b) > rounds:
+            out.append(Violation(
+                RULE_GRID,
+                f"rmax={max(rmax_a, rmax_b)} exceeds rounds={rounds}: a "
+                f"round window cannot hold more non-zeros than slots"))
+        if m % bm or n % bn:
+            out.append(Violation(
+                RULE_GRID,
+                f"padded shape {(m, n)} does not tile by "
+                f"(bm={bm}, bn={bn})"))
+    if out:
+        return out
+
+    fp = vmem.matched_footprint(stage, m=m, n=n, bm=bm, bn=bn,
+                                n_rounds=n_rounds, rmax_a=rmax_a,
+                                rmax_b=rmax_b, rounds=rounds)
+    if want(RULE_VMEM):
+        hard = vmem.vmem_budget(budget)
+        if fp.total_bytes > hard:
+            big = fp.largest
+            out.append(Violation(
+                RULE_VMEM,
+                f"{stage}: total VMEM footprint exceeds the "
+                f"{hard // (1024 * 1024)} MiB core budget (largest "
+                f"term: {big.name} {big.formula} = {big.nbytes} B)",
+                term=big.name, nbytes=fp.total_bytes, limit=hard))
+    if want(RULE_OOB):
+        from . import grid_interp
+        out.extend(grid_interp.check_matched_bounds(
+            stage, m=m, n=n, bm=bm, bn=bn, rounds=rounds,
+            n_rounds=n_rounds, rmax_a=rmax_a, rmax_b=rmax_b))
+    return out
+
+
 # ----------------------------------------------------------------------
 # Layer 2: DMA pairing (AST + symbolic loop execution).
 @dataclasses.dataclass(frozen=True)
@@ -618,8 +693,8 @@ def _module_source(module: str,
                    sources: Optional[Dict[str, str]] = None) -> str:
     if sources is not None and module in sources:
         return sources[module]
-    path = os.path.join(os.path.dirname(kernel_source_path()), module)
-    with open(path) as f:
+    from . import grid_interp
+    with open(grid_interp.module_path(module)) as f:
         return f.read()
 
 

@@ -77,6 +77,8 @@ EXPECTED_SCRATCH: Dict[str, Tuple[str, ...]] = {
     "index_match_spmm": ("VMEM",),
     "flash_attention": ("VMEM", "VMEM", "VMEM"),
     "incrs_gather": (),
+    "spgemm_condense": (),
+    "spgemm_merge": ("VMEM",),
 }
 
 
@@ -283,6 +285,53 @@ def flash_footprint(*, lanes: int, sq: int, sk: int, hd: int,
                  note="q @ k^T logits tile"),
     )
     return VmemFootprint("flash_attention", None, grid, terms)
+
+
+def matched_footprint(stage: str, *, m: int, n: int, bm: int, bn: int,
+                      n_rounds: int, rmax_a: int, rmax_b: int,
+                      rounds: int) -> VmemFootprint:
+    """Footprint of one matched-family launch, term-for-term from the
+    BlockSpecs + scratch_shapes of ``kernels/index_match_spmm.py`` and
+    ``spgemm/kernels.py``.
+
+    Stages: ``"index_match"`` (fused reference), ``"condense"`` (stripe
+    writer — NO scratch, but two (rows, rmax, R) one-hot transients),
+    ``"merge"`` (stripe reader with the f32 accumulator scratch).
+    """
+    if stage not in ("index_match", "condense", "merge"):
+        raise ValueError(f"unknown matched stage {stage!r}; expected "
+                         f"'index_match', 'condense' or 'merge'")
+    mp = -(-m // bm) * bm
+    np_ = -(-n // bn) * bn
+    P = PIPELINE_BUFFERS
+    grid = (mp // bm, np_ // bn, n_rounds)
+    if stage == "merge":
+        terms = (
+            VmemTerm("stripe_block", "in_spec", (1, bm, bn), 4, P),
+            VmemTerm("out_tile", "out_spec", (bm, bn), 4, P),
+            VmemTerm("acc_scratch", "scratch", (bm, bn), 4, 1),
+        )
+        return VmemFootprint("spgemm_merge", None, grid, terms)
+    operand_terms = (
+        VmemTerm("a_idx_block", "in_spec", (bm, 1, rmax_a), 4, P),
+        VmemTerm("a_val_block", "in_spec", (bm, 1, rmax_a), 4, P),
+        VmemTerm("b_idx_block", "in_spec", (bn, 1, rmax_b), 4, P),
+        VmemTerm("b_val_block", "in_spec", (bn, 1, rmax_b), 4, P),
+        VmemTerm("a_onehot_transient", "transient", (bm, rmax_a, rounds),
+                 4, 1, note="_densify compare tensor"),
+        VmemTerm("b_onehot_transient", "transient", (bn, rmax_b, rounds),
+                 4, 1, note="_densify compare tensor"),
+    )
+    if stage == "condense":
+        terms = operand_terms + (
+            VmemTerm("stripe_tile", "out_spec", (1, bm, bn), 4, P),
+        )
+        return VmemFootprint("spgemm_condense", None, grid, terms)
+    terms = operand_terms + (
+        VmemTerm("out_tile", "out_spec", (bm, bn), 4, P),
+        VmemTerm("acc_scratch", "scratch", (bm, bn), 4, 1),
+    )
+    return VmemFootprint("index_match_spmm", None, grid, terms)
 
 
 def dense_footprint(*, m: int, k: int, n: int, bm: int, bk: int, bn: int,

@@ -347,6 +347,178 @@ def fused_spmm_cost(variant: str, m: int, n: int, *, n_sections: int,
 
 
 # ----------------------------------------------------------------------
+# SpGEMM dispatch oracle: which engine multiplies sparse x sparse faster —
+# the condense/merge round-stripe pipeline (spgemm/) or densify-then-SpMM
+# (incrs_gather on the RHS, then the fused InCRS kernel)? Same cycle
+# vocabulary as ``fused_spmm_cost``; ``ops.spmm(variant="auto")`` consults
+# the resulting ``SpGEMMCost.pick`` and kernel_bench validates the
+# predicted crossover against measurement.
+
+@dataclasses.dataclass(frozen=True)
+class MatchedKernelCost:
+    """Cycle breakdown of one sparse x sparse engine at a given tiling."""
+    engine: str               # "index_match" | "condense_merge" | "densify"
+    grid_steps: int           # Pallas grid invocations (all passes)
+    expansions: int           # one-hot stripe expansions (VPU)
+    dots: int                 # MXU contractions
+    expand_elems: int         # total one-hot elements materialized (VPU adds
+                              # count here too — the interpreter's unit)
+    hbm_bytes: int            # operand + intermediate + output HBM traffic
+    compute_cycles: int
+    memory_cycles: int
+    cycles: int               # modelled total (serialized, like expand/reuse)
+    interp_copy_bytes: int = 0  # interpret-mode-only tax: bytes re-copied
+                              # because a pass re-materializes a whole
+                              # intermediate per grid step (the merge pass's
+                              # stripes). Zero-cost on real hardware, the
+                              # dominant term for merge on a CPU host.
+
+
+def index_match_cost(m: int, n: int, *, rounds: int, n_rounds: int,
+                     rmax_a: int, rmax_b: int, bm: int, bn: int
+                     ) -> MatchedKernelCost:
+    """Cycle model of the fused ``index_match_spmm`` launch (also the sum
+    of the condense pass's per-step work — the two share every term except
+    the stripe round-trip, see ``spgemm_cost``)."""
+    mp = -(-m // bm) * bm
+    np_ = -(-n // bn) * bn
+    steps = (mp // bm) * (np_ // bn) * n_rounds
+    elems_per = (bm * rmax_a + bn * rmax_b) * rounds   # two one-hot tensors
+    exp_cycles = 2 * elems_per // VPU_LANES            # compare + FMA
+    dot_cycles = bm * rounds * bn // MXU_MACS
+    hbm_bytes = (steps * (bm * rmax_a + bn * rmax_b) * 8   # idx i32 + val f32
+                 + mp * np_ * 4)                           # output
+    compute = steps * (exp_cycles + dot_cycles)
+    memory = -(-hbm_bytes // HBM_BYTES_PER_CYCLE)
+    cycles = compute + memory + steps * GRID_STEP_CYCLES
+    return MatchedKernelCost("index_match", steps, steps, steps,
+                             steps * elems_per, hbm_bytes, compute, memory,
+                             cycles)
+
+
+@dataclasses.dataclass(frozen=True)
+class SpGEMMCost:
+    """The dispatch oracle's candidate engines, ready to compare.
+
+    ``fused`` and ``spgemm`` are the two SpGEMM-side engines (one-pass
+    index match vs the condense/merge stripe pipeline — the latter is the
+    former plus the stripe round-trip, so in pure cycle terms fused always
+    bounds it from below); ``densify`` is the gather-then-dense-SpMM
+    baseline the paper's representation is meant to beat.
+    """
+    spgemm: MatchedKernelCost     # condense/merge round-stripe pipeline
+    fused: MatchedKernelCost      # one-pass fused index-match engine
+    densify: MatchedKernelCost    # gather-densify RHS + fused InCRS SpMM
+
+    @property
+    def sparse_side(self) -> MatchedKernelCost:
+        """Cheaper of the two sparse x sparse engines."""
+        return (self.fused if self.fused.cycles <= self.spgemm.cycles
+                else self.spgemm)
+
+    @property
+    def pick(self) -> str:
+        """Cheapest engine by modelled cycles, as an ``ops.spmm`` variant
+        name: "reference" | "condense_merge" | "densify"."""
+        side = self.sparse_side
+        if side.cycles <= self.densify.cycles:
+            return ("reference" if side.engine == "index_match"
+                    else "condense_merge")
+        return "densify"
+
+
+def spgemm_cost(m: int, n: int, k: int, *, rounds: int, n_rounds: int,
+                rmax_a: int, rmax_b: int, bm: int, bn: int,
+                section: int, n_sections: int, smax_a: int, smax_b: int,
+                gather_bm: int = 8) -> SpGEMMCost:
+    """Model both sparse x sparse engines for C[M, N] = A[M, K] @ B[N, K].T.
+
+    condense_merge: the fused index-match work plus the stripe round-trip
+    (the (n_rounds, M, N) partial-product array is written by condense and
+    re-read by merge) and the merge pass's VPU adds + grid overhead.
+
+    densify: run the gather kernel over B's InCRS (its repo-default
+    ``bm=8`` row tile), write the dense (N, K) intermediate to HBM, then
+    the fused InCRS SpMM at the dispatcher's default tiling, taking the
+    cheapest of its three variants (that is what ``variant="auto"`` does).
+    """
+    base = index_match_cost(m, n, rounds=rounds, n_rounds=n_rounds,
+                            rmax_a=rmax_a, rmax_b=rmax_b, bm=bm, bn=bn)
+    mp = -(-m // bm) * bm
+    np_ = -(-n // bn) * bn
+    stripe_bytes = n_rounds * mp * np_ * 4
+    merge_steps = base.grid_steps
+    merge_compute = merge_steps * (bm * bn // VPU_LANES)
+    sp_hbm = base.hbm_bytes + 2 * stripe_bytes      # written then re-read
+    sp_compute = base.compute_cycles + merge_compute
+    sp_memory = -(-sp_hbm // HBM_BYTES_PER_CYCLE)
+    sp_steps = base.grid_steps + merge_steps
+    sp_cycles = sp_compute + sp_memory + sp_steps * GRID_STEP_CYCLES
+    sp = MatchedKernelCost(
+        "condense_merge", sp_steps, base.expansions, base.dots,
+        base.expand_elems + merge_steps * bm * bn, sp_hbm, sp_compute,
+        sp_memory, sp_cycles,
+        # interpret mode re-materializes the full stripes array on every
+        # merge step (measured ~0.2 us/MB/step on the CPU host)
+        interp_copy_bytes=merge_steps * stripe_bytes)
+
+    # densify engine: gather B -> dense, then fused SpMM at the
+    # dispatcher's default tiles (ops.spmm bm=128, bn from the 512 rule).
+    g_steps = -(-n // gather_bm) * n_sections
+    g_elems = g_steps * gather_bm * smax_b * section
+    g_compute = 2 * g_elems // VPU_LANES
+    g_hbm = g_steps * gather_bm * smax_b * 8 + n * k * 4
+    bm_f = 128
+    np128 = -(-n // 128) * 128
+    tiles = -(-np128 // 512)
+    bn_f = -(-np128 // (tiles * 128)) * 128
+    fused = min((fused_spmm_cost(v, m, n, n_sections=n_sections,
+                                 smax=smax_a, section=section,
+                                 bm=bm_f, bn=bn_f)
+                 for v in ("expand", "reuse", "pipelined")),
+                key=lambda c: c.cycles)
+    de_hbm = g_hbm + fused.hbm_bytes + n * k * 4    # dense B re-read by SpMM
+    de_compute = g_compute + fused.compute_cycles
+    de_memory = -(-de_hbm // HBM_BYTES_PER_CYCLE)
+    de_steps = g_steps + fused.grid_steps
+    de_cycles = de_compute + de_memory + de_steps * GRID_STEP_CYCLES
+    de = MatchedKernelCost(
+        "densify", de_steps, g_steps + fused.expansions, fused.dots,
+        g_elems + fused.expansions * bm_f * smax_a * section, de_hbm,
+        de_compute, de_memory, de_cycles)
+    return SpGEMMCost(sp, base, de)
+
+
+def spgemm_cost_for(a: CRS, bt: CRS, *, rounds: int = 128, bm: int = 128,
+                    bn: int = 128, section: int = 256,
+                    gather_bm: int = 8) -> SpGEMMCost:
+    """``spgemm_cost`` with every density-derived term measured from the
+    actual operands (round rmax via ``_round_lengths``, section smax via
+    per-(row, section) counts) — the form ``ops.spmm``'s auto dispatch
+    uses."""
+    m, k = a.shape
+    n = bt.shape[0]
+    n_rounds = max(1, -(-k // rounds))
+    rmax_a = max(1, int(_round_lengths(a, rounds).max(initial=1)))
+    rmax_b = max(1, int(_round_lengths(bt, rounds).max(initial=1)))
+    n_sections = max(1, -(-k // section))
+
+    def _smax(crs: CRS) -> int:
+        c = np.zeros((crs.shape[0], n_sections), dtype=np.int64)
+        if crs.nnz:
+            row_of = np.repeat(np.arange(crs.shape[0]),
+                               np.diff(crs.row_ptr).astype(np.int64))
+            np.add.at(c, (row_of, crs.col_idx // section), 1)
+        return max(1, int(c.max(initial=1)))
+
+    return spgemm_cost(m, n, k, rounds=rounds, n_rounds=n_rounds,
+                       rmax_a=rmax_a, rmax_b=rmax_b, bm=bm, bn=bn,
+                       section=section, n_sections=n_sections,
+                       smax_a=_smax(a), smax_b=_smax(bt),
+                       gather_bm=gather_bm)
+
+
+# ----------------------------------------------------------------------
 # Resource matching (paper §V-C equations 1 / 2 and Table V).
 def fpic_units_same_bw(n_synch: int) -> int:
     """Eq. 1: 2*N*W = 2*8*k*W  ->  k = N/8."""

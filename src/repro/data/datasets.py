@@ -15,6 +15,7 @@ column degrees are non-uniform, as in real bag-of-words/ratings data.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Dict, Optional, Tuple
 
 import numpy as np
@@ -83,8 +84,14 @@ def _row_degrees(spec: DatasetSpec, rng: np.random.Generator) -> np.ndarray:
 
 
 def synthesize(spec: DatasetSpec, seed: int = 0) -> CRS:
-    """Generate a CRS matrix with the spec's statistics (deterministic)."""
-    rng = np.random.default_rng(seed ^ hash(spec.name) & 0xFFFF)
+    """Generate a CRS matrix with the spec's statistics (deterministic).
+
+    The name is folded in with crc32, not ``hash()`` — str hashing is
+    randomized per process (PYTHONHASHSEED), which made "deterministic"
+    datasets differ across runs.
+    """
+    rng = np.random.default_rng(seed ^ zlib.crc32(spec.name.encode())
+                                & 0xFFFF)
     deg = _row_degrees(spec, rng)
     # column popularity: mixture of uniform and Zipf-like weights
     pop = 1.0 / np.arange(1, spec.n + 1) ** spec.skew

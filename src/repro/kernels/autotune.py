@@ -35,7 +35,8 @@ import jax
 import jax.numpy as jnp
 
 from ..analysis import kernel_check, vmem
-from ..core.mesh_sim import FusedKernelCost, fused_spmm_cost
+from ..core.mesh_sim import (FusedKernelCost, MatchedKernelCost, SpGEMMCost,
+                             fused_spmm_cost, index_match_cost)
 from .incrs_spmm import (incrs_spmm, incrs_spmm_pipelined,
                          incrs_spmm_reuse, _resolve_row_tile)
 
@@ -63,6 +64,17 @@ TPU_CLOCK_HZ = 940e6
 _I_STEP_US = 500.0
 _I_EXPAND_US = 400.0
 _I_DOT_US = 90.0
+# The matched/SpGEMM family has its own interpret-mode constants: its
+# per-step overhead is far lower than the fused InCRS family's (no DMA
+# emulation), its wall time scales with how many one-hot elements each
+# step materializes (the (bm, rmax, R) compare tensors), and the merge
+# pass additionally re-copies the full stripes array every step
+# (``MatchedKernelCost.interp_copy_bytes``). Fit against measured
+# engine timings on the kernel_bench workloads (see the spgemm rows of
+# BENCH_kernels.json).
+_IM_STEP_US = 15.0
+_IM_ELEM_US = 0.0007
+_IM_COPY_US_PER_BYTE = 0.00017
 
 # How many candidates (in cost-model order) get measured per sweep.
 MEASURE_TOP_K = 4
@@ -74,12 +86,17 @@ _KERNELS = {"expand": incrs_spmm, "reuse": incrs_spmm_reuse,
 # ----------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class TunedConfig:
-    """One winning kernel configuration with its prediction audit trail."""
+    """One winning kernel configuration with its prediction audit trail.
+
+    ``rounds`` is only meaningful for the matched family (the index-match /
+    SpGEMM kernels, where the round window R is itself tuned); 0 = n/a for
+    the fused InCRS family."""
     variant: str
     bm: int
     bn: int
     measured_us: float
     predicted_us: float
+    rounds: int = 0
 
     @property
     def overhead_factor(self) -> float:
@@ -95,7 +112,8 @@ class TunedConfig:
     @staticmethod
     def from_json(d: dict) -> "TunedConfig":
         return TunedConfig(str(d["variant"]), int(d["bm"]), int(d["bn"]),
-                           float(d["measured_us"]), float(d["predicted_us"]))
+                           float(d["measured_us"]), float(d["predicted_us"]),
+                           int(d.get("rounds", 0)))
 
 
 def backend_name(interpret: bool) -> str:
@@ -107,6 +125,14 @@ def cache_key(padded_rows: int, n_sections: int, smax: int, section: int,
     """Tuning-cache key: prepared-operand shape + RHS width + backend."""
     return (f"m{padded_rows}.sec{n_sections}x{section}.w{smax}"
             f".n{n_cols}.{backend}")
+
+
+def matched_cache_key(m: int, n: int, k: int, backend: str) -> str:
+    """Tuning-cache key for the matched family (index-match / SpGEMM):
+    logical problem shape + backend. The round window R is part of the
+    tuned *result* (``TunedConfig.rounds``), not the key — retuning the
+    same shape reconsiders every R."""
+    return f"im.m{m}.n{n}.k{k}.{backend}"
 
 
 # ----------------------------------------------------------------------
@@ -221,6 +247,49 @@ def predict_us(variant: str, m: int, n: int, *, n_sections: int, smax: int,
     return cost.cycles / TPU_CLOCK_HZ * 1e6
 
 
+def engine_predict_us(cost: MatchedKernelCost, interpret: bool) -> float:
+    """Predicted wall µs of one matched-family engine launch (fused
+    index-match, condense/merge, or gather-densify) from its cycle
+    breakdown."""
+    if interpret:
+        return (cost.grid_steps * _IM_STEP_US
+                + cost.expand_elems * _IM_ELEM_US
+                + cost.interp_copy_bytes * _IM_COPY_US_PER_BYTE)
+    return cost.cycles / TPU_CLOCK_HZ * 1e6
+
+
+def predict_matched_us(m: int, n: int, *, rounds: int, n_rounds: int,
+                       rmax_a: int, rmax_b: int, bm: int, bn: int,
+                       interpret: bool) -> float:
+    """Predicted wall µs of one fused ``index_match_spmm`` launch."""
+    return engine_predict_us(
+        index_match_cost(m, n, rounds=rounds, n_rounds=n_rounds,
+                         rmax_a=rmax_a, rmax_b=rmax_b, bm=bm, bn=bn),
+        interpret)
+
+
+def pick_spgemm_engine(cost: SpGEMMCost, interpret: bool) -> str:
+    """The SpGEMM auto-dispatch decision — fused one-pass vs condense/
+    merge vs densify, by predicted wall time on THIS backend (TPU uses
+    modelled cycles, the interpreter its per-step/per-element µs model,
+    which knows about the merge pass's per-step stripe re-copy). One-time
+    log explains the pick per cost signature."""
+    us = {"condense_merge": engine_predict_us(cost.spgemm, interpret),
+          "reference": engine_predict_us(cost.fused, interpret),
+          "densify": engine_predict_us(cost.densify, interpret)}
+    pick = min(us, key=us.get)
+    sig = ("spgemm", cost.spgemm.grid_steps, cost.densify.grid_steps,
+           interpret)
+    if sig not in _logged:
+        _logged.add(sig)
+        log.info("spmm auto (sparse RHS): picked %r "
+                 "(predicted µs: fused=%.0f condense_merge=%.0f "
+                 "densify=%.0f)",
+                 pick, us["reference"], us["condense_merge"],
+                 us["densify"])
+    return pick
+
+
 def kernel_cost(variant: str, m: int, n: int, *, n_sections: int,
                 smax: int, section: int, bm: int, bn: int,
                 nnz: int | None = None) -> FusedKernelCost:
@@ -282,6 +351,24 @@ def candidates(padded_rows: int, n: int, *, section: int,
     return split_candidates(padded_rows, n, section=section,
                             n_sections=n_sections, smax=smax,
                             vmem_budget=vmem_budget)[0]
+
+
+# Round windows the matched-family sweep considers: the paper's R=32, the
+# TPU lane-aligned 128, and the midpoint.
+MATCHED_ROUNDS: Tuple[int, ...] = (32, 64, 128)
+
+
+def matched_candidate_space(m: int, n: int,
+                            rounds_options: Tuple[int, ...] = MATCHED_ROUNDS
+                            ) -> List[Tuple[int, int, int]]:
+    """The raw ``(rounds, bm, bn)`` sweep space for one index-match /
+    SpGEMM problem, before feasibility filtering. Tiles are capped at the
+    (8/128-aligned) padded operand extents — a 16-row problem never sweeps
+    bm=256."""
+    bms = sorted({min(bm, -(-m // 8) * 8) for bm in (32, 64, 128, 256)})
+    bns = sorted({min(bn, -(-n // 128) * 128) for bn in (128, 256)})
+    return [(r, bm, bn)
+            for r in rounds_options for bm in bms for bn in bns]
 
 
 # ----------------------------------------------------------------------
@@ -396,6 +483,103 @@ def tune(idx, val, b, *, section: int, interpret: bool,
              "%.0fµs, overhead %.2fx)", key, best_cfg.variant, best_cfg.bm,
              best_cfg.bn, best_cfg.measured_us, best_cfg.predicted_us,
              best_cfg.overhead_factor)
+    return best_cfg
+
+
+def tune_index_match(a, bt, *, interpret: bool, reps: int = 3,
+                     persist: bool = True, top_k: int = MEASURE_TOP_K,
+                     rounds_options: Tuple[int, ...] = MATCHED_ROUNDS
+                     ) -> TunedConfig:
+    """Sweep ``(rounds, bm, bn)`` for one CRS x CRS matched-family problem
+    (``a @ bt.T``, both row-stored sparse).
+
+    Same protocol as ``tune``: cache hit returns immediately; otherwise
+    statically drop infeasible candidates (VMEM / bounds via
+    ``check_matched_config``), rank the rest by the cycle-model prior,
+    measure the ``top_k`` most promising through the fused kernel (prep
+    re-done per candidate — rounds changes the prepped layout), keep the
+    fastest, persist under ``matched_cache_key``. The winner's round
+    window lands in ``TunedConfig.rounds``; ``ops.spmm`` picks it up for
+    every later call at this shape.
+    """
+    global LAST_SWEEP
+    from . import ops as _ops               # circular at module scope
+    from ..core import mesh_sim as _ms
+    t_sweep = time.perf_counter()
+    m, k = a.shape
+    n = bt.shape[0]
+    key = matched_cache_key(m, n, k, backend_name(interpret))
+    hit = lookup(key)
+    if hit is not None:
+        LAST_SWEEP = SweepRecord(key, True, 0, [], [],
+                                 time.perf_counter() - t_sweep, hit)
+        return hit
+
+    rmax_of = {r: (max(1, int(_ms._round_lengths(a, r).max(initial=1))),
+                   max(1, int(_ms._round_lengths(bt, r).max(initial=1))))
+               for r in rounds_options}
+    cands: List[Tuple[int, int, int]] = []
+    skipped: List[dict] = []
+    for r, bm, bn in matched_candidate_space(m, n, rounds_options):
+        n_rounds = max(1, -(-k // r))
+        rmax_a, rmax_b = rmax_of[r]
+        rmax = max(rmax_a, rmax_b)          # prepped pads to common rmax
+        vs = kernel_check.check_matched_config(
+            "index_match", m=-(-m // bm) * bm, n=-(-n // bn) * bn,
+            bm=bm, bn=bn, rounds=r, n_rounds=n_rounds,
+            rmax_a=rmax, rmax_b=rmax, rules=kernel_check.LAUNCH_RULES)
+        if vs:
+            v = vs[0]
+            skipped.append({"rounds": r, "bm": bm, "bn": bn,
+                            "rule": v.rule, "term": v.term,
+                            "bytes": v.nbytes, "limit": v.limit,
+                            "message": v.message})
+        else:
+            cands.append((r, bm, bn))
+    if not cands:
+        raise kernel_check.KernelConfigError(
+            [kernel_check.Violation(s["rule"], s["message"], s["term"],
+                                    s["bytes"], s["limit"])
+             for s in skipped[:3]],
+            context=f"autotune {key}: no feasible candidate under the "
+                    f"VMEM budget")
+
+    def _predict(c):
+        r, bm, bn = c
+        rmax = max(rmax_of[r])
+        return predict_matched_us(
+            -(-m // bm) * bm, -(-n // bn) * bn, rounds=r,
+            n_rounds=max(1, -(-k // r)), rmax_a=rmax, rmax_b=rmax,
+            bm=bm, bn=bn, interpret=interpret)
+
+    ranked = sorted(cands, key=_predict)
+    best_cfg: Optional[TunedConfig] = None
+    measured_log: List[dict] = []
+    for r, bm, bn in ranked[:max(1, top_k)]:
+        predicted = _predict((r, bm, bn))
+        ai, av = _ops.prep_rounds(a, r, pad_rows_to=bm)
+        bi, bv = _ops.prep_rounds(bt, r, pad_rows_to=bn)
+        measured = _measure_us(
+            lambda: _ops.index_match_prepped(ai, av, bi, bv, rounds=r,
+                                             bm=bm, bn=bn,
+                                             interpret=interpret), reps)
+        measured_log.append({"rounds": r, "bm": bm, "bn": bn,
+                             "us": measured, "predicted_us": predicted})
+        cfg = TunedConfig("index_match", bm, bn, measured, predicted,
+                          rounds=r)
+        if best_cfg is None or cfg.measured_us < best_cfg.measured_us:
+            best_cfg = cfg
+    assert best_cfg is not None  # lint: allow-assert (ranked is non-empty)
+    _MEM[key] = best_cfg
+    LAST_SWEEP = SweepRecord(key, False, len(cands) + len(skipped),
+                             skipped, measured_log,
+                             time.perf_counter() - t_sweep, best_cfg)
+    if persist:
+        _store_disk(key, best_cfg)
+    log.info("autotune: %s -> rounds=%d bm=%d bn=%d (measured %.0fµs, "
+             "predicted %.0fµs, overhead %.2fx)", key, best_cfg.rounds,
+             best_cfg.bm, best_cfg.bn, best_cfg.measured_us,
+             best_cfg.predicted_us, best_cfg.overhead_factor)
     return best_cfg
 
 

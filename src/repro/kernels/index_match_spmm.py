@@ -63,16 +63,24 @@ def _kernel(a_idx_ref, a_val_ref, b_idx_ref, b_val_ref, o_ref, acc_ref, *,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("rounds", "bm", "bn", "interpret"))
+                   static_argnames=("rounds", "bm", "bn", "out_dtype",
+                                    "interpret"))
 def index_match_spmm(a_idx: jnp.ndarray, a_val: jnp.ndarray,
                      b_idx: jnp.ndarray, b_val: jnp.ndarray, *,
                      rounds: int = 128, bm: int = 128, bn: int = 128,
-                     interpret: bool = False) -> jnp.ndarray:
+                     out_dtype=None, interpret: bool = False) -> jnp.ndarray:
     """C[M, N] = A[M, K] @ B[N, K].T from per-round padded sparse rows.
 
     The paper uses R=32; on TPU the stripe is the lane dimension so R=128
     is the hardware-aligned default (tests sweep both in interpret mode).
+
+    Accumulation is always f32 in VMEM scratch; the single cast to
+    ``out_dtype`` happens at the final flush (promote-in-wave, return in
+    the operands' own dtype — same contract as the serve path since PR 3).
+    ``out_dtype=None`` returns ``result_type(a_val, b_val)``.
     """
+    if out_dtype is None:
+        out_dtype = jnp.result_type(a_val.dtype, b_val.dtype)
     m, n_rounds, rmax_a = a_idx.shape
     n, n_rounds_b, rmax_b = b_idx.shape
     if n_rounds != n_rounds_b:
@@ -94,7 +102,7 @@ def index_match_spmm(a_idx: jnp.ndarray, a_val: jnp.ndarray,
             pl.BlockSpec((bn, 1, rmax_b), lambda i, j, t: (j, t, 0)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, t: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.dtype(out_dtype)),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
         compiler_params=CompilerParams(

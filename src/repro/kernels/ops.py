@@ -29,6 +29,7 @@ from .._deprecation import deprecated
 from ..core.bsr import BSR
 from ..core.crs import CRS
 from ..core.incrs import InCRS
+from ..core import mesh_sim as _mesh_sim
 from . import ref
 from ._compat import SHARD_MAP_KW, shard_map
 from .bsr_spmm import bsr_spmm as _bsr_spmm_kernel
@@ -129,12 +130,14 @@ def bsr_matmul_arrays(row_of, col_of, values, b, *, n_block_rows: int,
 
 # ----------------------------------------------------------------------
 def prep_rounds(crs: CRS, rounds: int, rmax: int | None = None,
-                pad_rows_to: int = 128, on_overflow: str = "raise"
-                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                pad_rows_to: int = 128, on_overflow: str = "raise",
+                dtype=np.float32) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """CRS -> padded per-round (idx, val); idx local in [0, R), -1 = pad.
 
     Rows are padded up to a multiple of ``pad_rows_to``; at most R non-zeros
-    fit in one round window, so rmax <= R always holds.
+    fit in one round window, so rmax <= R always holds. ``dtype`` sets the
+    value array's dtype (the kernels promote to f32 in-wave and return the
+    operands' result dtype — see ``index_match_spmm``).
 
     A caller-supplied ``rmax`` smaller than the densest (row, round) count
     cannot hold every non-zero: ``on_overflow="raise"`` (default) rejects it
@@ -166,7 +169,7 @@ def prep_rounds(crs: CRS, rounds: int, rmax: int | None = None,
             f"(densest holds {rmax_true})", stacklevel=2)
     mp = -(-m // pad_rows_to) * pad_rows_to
     idx = np.full((mp, n_rounds, rmax), -1, dtype=np.int32)
-    val = np.zeros((mp, n_rounds, rmax), dtype=np.float32)
+    val = np.zeros((mp, n_rounds, rmax), dtype=dtype)
     if crs.nnz:
         # Non-zeros are sorted by (row, col), hence by (row, round): each
         # (row, round) group is one contiguous run. Slot-within-round =
@@ -189,7 +192,7 @@ def prep_rounds(crs: CRS, rounds: int, rmax: int | None = None,
 
 
 def index_match_prepped(ai, av, bi, bv, *, rounds: int = 128,
-                        bm: int = 128, bn: int = 128,
+                        bm: int = 128, bn: int = 128, out_dtype=None,
                         interpret: bool | None = None):
     """Round-synchronized index-matching SpMM from PRE-PREPPED per-round
     (idx, val) operand arrays (``prep_rounds`` output): pads both sides to
@@ -204,23 +207,113 @@ def index_match_prepped(ai, av, bi, bv, *, rounds: int = 128,
     bi = jnp.pad(bi, ((0, 0), (0, 0), (0, rmax - bi.shape[2])),
                  constant_values=-1)
     bv = jnp.pad(bv, ((0, 0), (0, 0), (0, rmax - bv.shape[2])))
+    out_dtype = (jnp.result_type(av.dtype, bv.dtype) if out_dtype is None
+                 else jnp.dtype(out_dtype))
     return _index_match_kernel(ai, av, bi, bv, rounds=rounds, bm=bm, bn=bn,
-                               interpret=interpret)
+                               out_dtype=out_dtype, interpret=interpret)
 
 
-def _spmm_index_match(a: CRS, bt: CRS, *, rounds: int = 128,
-                      bm: int = 128, bn: int = 128,
+def _resolve_matched_tiles(m: int, n: int, k: int, rounds, bm, bn,
+                           interpret: bool):
+    """Fill ``None`` (rounds, bm, bn) from the autotuner's matched-family
+    cache for this (m, n, k, backend); hardware defaults otherwise."""
+    if rounds is None or bm is None or bn is None:
+        tuned = _autotune.lookup(_autotune.matched_cache_key(
+            m, n, k, _autotune.backend_name(interpret)))
+        if tuned is not None:
+            rounds = (tuned.rounds or 128) if rounds is None else rounds
+            bm = tuned.bm if bm is None else bm
+            bn = tuned.bn if bn is None else bn
+    return (128 if rounds is None else rounds,
+            128 if bm is None else bm,
+            128 if bn is None else bn)
+
+
+def _spmm_index_match(a: CRS, bt: CRS, *, rounds: int | None = None,
+                      bm: int | None = None, bn: int | None = None,
                       interpret: bool | None = None):
     """C = A @ Bt.T via the round-synchronized index-matching kernel
-    (paper Alg. 2 on the MXU). Returns C[:M, :N] unpadded."""
+    (paper Alg. 2 on the MXU). Returns C[:M, :N] unpadded. ``None``
+    tile/round params resolve from the autotuner's matched-family cache
+    (``autotune.tune_index_match``) before falling back to 128."""
+    interpret = INTERPRET if interpret is None else interpret
     if a.shape[1] != bt.shape[1]:
         raise ValueError(f"inner dims disagree: A is {a.shape}, "
                          f"Bt is {bt.shape} (expected equal col counts)")
+    rounds, bm, bn = _resolve_matched_tiles(
+        a.shape[0], bt.shape[0], a.shape[1], rounds, bm, bn, interpret)
     ai, av = prep_rounds(a, rounds, pad_rows_to=bm)
     bi, bv = prep_rounds(bt, rounds, pad_rows_to=bn)
     out = index_match_prepped(ai, av, bi, bv, rounds=rounds, bm=bm, bn=bn,
                               interpret=interpret)
     return out[:a.shape[0], :bt.shape[0]]
+
+
+# id()-keyed weakref memo, same contract as _PREP_CACHE: the CRS is
+# immutable once converted; entries die with their operand.
+_INCRS_CACHE: Dict[int, Tuple[weakref.ref, InCRS]] = {}
+
+
+def _incrs_of(crs: CRS) -> InCRS:
+    """InCRS view of a CRS operand, memoized per live object (the densify
+    engine of the SpGEMM dispatch converts both operands; repeated calls
+    must not re-pack counters every time)."""
+    hit = _INCRS_CACHE.get(id(crs))
+    if hit is not None and hit[0]() is crs:
+        return hit[1]
+    incrs = InCRS.from_crs(crs)
+    key = id(crs)
+    _INCRS_CACHE[key] = (weakref.ref(crs), incrs)
+    weakref.finalize(crs, _INCRS_CACHE.pop, key, None)
+    return incrs
+
+
+_SPGEMM_VARIANTS = ("auto", "condense_merge", "densify", "reference")
+
+
+def _spmm_spgemm(a: CRS, b, *, rounds: int | None = None,
+                 bm: int | None = None, bn: int | None = None,
+                 variant: str = "auto", interpret: bool | None = None):
+    """C = A @ Bt.T for sparse A and sparse Bt — the SpGEMM dispatch.
+
+    Engines:
+      * ``"condense_merge"`` — the two-pass round-stripe pipeline
+        (``spgemm.condense_merge_prepped``), bitwise identical to the
+        reference on identically prepped operands;
+      * ``"densify"``        — gather Bt dense on-device, then the fused
+        InCRS SpMM (the pre-existing two-pass baseline);
+      * ``"reference"``      — the fused one-pass ``index_match_spmm``
+        engine, also the bitwise oracle for condense_merge;
+      * ``"auto"``           — ``mesh_sim.spgemm_cost`` +
+        ``autotune.pick_spgemm_engine`` pick among the three for this
+        operand pair and backend.
+    """
+    if variant not in _SPGEMM_VARIANTS:
+        raise ValueError(f"variant must be one of {_SPGEMM_VARIANTS}, "
+                         f"got {variant!r}")
+    interpret = INTERPRET if interpret is None else interpret
+    bt = b.crs if isinstance(b, InCRS) else b
+    if a.shape[1] != bt.shape[1]:
+        raise ValueError(f"inner dims disagree: A is {a.shape}, "
+                         f"Bt is {bt.shape} (expected equal col counts)")
+    m, n = a.shape[0], bt.shape[0]
+    rounds, bm, bn = _resolve_matched_tiles(m, n, a.shape[1], rounds, bm, bn,
+                                            interpret)
+    if variant == "auto":
+        cost = _mesh_sim.spgemm_cost_for(a, bt, rounds=rounds, bm=bm, bn=bn)
+        variant = _autotune.pick_spgemm_engine(cost, interpret)
+    if variant == "reference":
+        return _spmm_index_match(a, bt, rounds=rounds, bm=bm, bn=bn,
+                                 interpret=interpret)
+    if variant == "densify":
+        dense_b = incrs_to_dense(_incrs_of(bt), interpret=interpret).T
+        return _spmm_incrs(_incrs_of(a), dense_b, interpret=interpret)
+    from .. import spgemm as _spgemm            # circular at module scope
+    ai, av = prep_rounds(a, rounds, pad_rows_to=bm)
+    bi, bv = prep_rounds(bt, rounds, pad_rows_to=bn)
+    out = _spgemm.condense_merge_prepped(ai, av, bi, bv, rounds=rounds,
+                                         bm=bm, bn=bn, interpret=interpret)
+    return out[:m, :n]
 
 
 # ----------------------------------------------------------------------
@@ -632,7 +725,8 @@ def incrs_to_dense(incrs: InCRS, *, bm: int = 8,
 
 
 # ----------------------------------------------------------------------
-def spmm(a, b, *, mesh: Mesh | None = None, axis=None, rounds: int = 128,
+def spmm(a, b, *, mesh: Mesh | None = None, axis=None,
+         rounds: int | None = None,
          bm: int = 128, bn: int | None = None, variant: str = "auto",
          pad_rows_to: int = 128, interpret: bool | None = None):
     """C = A @ B — THE kernel front door, dispatched on the format of A.
@@ -647,8 +741,11 @@ def spmm(a, b, *, mesh: Mesh | None = None, axis=None, rounds: int = 128,
         -> row-sharded fused SpMM under ``shard_map``;
       * ``BSR``                              -> block-sparse kernel
         steered by prefix counters;
-      * ``CRS`` (B must be the CRS of B^T)   -> round-synchronized
-        index-matching kernel (paper Alg. 2), window = ``rounds``;
+      * ``CRS`` x ``CRS``/``InCRS`` (B = the sparse B^T, row-stored)
+        -> SpGEMM: ``variant`` picks "condense_merge" (round-stripe
+        two-pass), "densify" (gather-then-fused-SpMM), "reference" (the
+        fused index-matching kernel, paper Alg. 2) or "auto" (the
+        ``mesh_sim.spgemm_cost`` oracle decides); window = ``rounds``;
       * a plain dense 2-D array              -> tiled dense matmul.
 
     Returns C[:M, :N] unpadded, f32 accumulation everywhere. The
@@ -676,14 +773,15 @@ def spmm(a, b, *, mesh: Mesh | None = None, axis=None, rounds: int = 128,
         return _spmm_bsr(a, b, bn=128 if bn is None else bn,
                          interpret=interpret)
     if isinstance(a, CRS):
-        if not isinstance(b, CRS):
+        if not isinstance(b, (CRS, InCRS)):
             raise TypeError(
-                "spmm with a CRS left operand runs the index-matching "
-                "kernel C = A @ B^T and needs B^T as a CRS too; densify "
-                "one side or use the InCRS path for sparse-times-dense")
-        return _spmm_index_match(a, b, rounds=rounds, bm=bm,
-                                 bn=128 if bn is None else bn,
-                                 interpret=interpret)
+                "spmm with a CRS left operand runs sparse x sparse "
+                "C = A @ B^T and needs B^T sparse too (CRS or InCRS); "
+                "densify one side or use the InCRS path for "
+                "sparse-times-dense")
+        return _spmm_spgemm(a, b, rounds=rounds,
+                            bm=None if bm == 128 else bm, bn=bn,
+                            variant=variant, interpret=interpret)
     if hasattr(a, "ndim") and np.ndim(a) == 2:
         return dense_mm(jnp.asarray(a), b, interpret=interpret)
     raise TypeError(f"spmm does not know the operand format "

@@ -37,6 +37,7 @@ names used, so outputs are bit-identical (``tests/test_api.py`` pins it).
 from __future__ import annotations
 
 import dataclasses
+import weakref
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -73,7 +74,10 @@ class SparseSpec:
     geometry      ``section``/``block`` for InCRS stripes (defaults
                   ``core.incrs.S_DEFAULT``/``B_DEFAULT``), ``block`` is the
                   tile side for ``bsr``, ``rounds`` the index-match window
-                  for ``crs``.
+                  for ``crs``. ``rhs_format`` (crs only) declares the
+                  streamed right-hand side sparse too (``"crs"`` or
+                  ``"incrs"``): execution takes the SpGEMM condense/merge
+                  pipeline instead of the fused reference kernel.
     layout        ``mesh`` (+ optional ``shard_axis``) row-shards an
                   ``incrs`` operand across that mesh — one contiguous
                   output-row stripe panel per device; omitted -> one
@@ -92,11 +96,21 @@ class SparseSpec:
     rounds: int = 128
     mesh: Optional[Mesh] = None
     shard_axis: Any = None
+    rhs_format: Optional[str] = None
 
     def __post_init__(self):
         if self.format not in FORMATS:
             raise ValueError(f"format must be one of {FORMATS}, "
                              f"got {self.format!r}")
+        if self.rhs_format is not None:
+            if self.rhs_format not in ("dense", "crs", "incrs"):
+                raise ValueError(f"rhs_format must be None, 'dense', 'crs' "
+                                 f"or 'incrs', got {self.rhs_format!r}")
+            if self.rhs_format != "dense" and self.format != "crs":
+                raise ValueError(
+                    f"a sparse rhs_format ({self.rhs_format!r}) is the "
+                    f"SpGEMM path and needs format='crs' (both operands "
+                    f"sparse); format {self.format!r} streams a dense RHS")
         n_sel = sum(x is not None
                     for x in (self.density, self.mask, self.pattern))
         if n_sel > 1:
@@ -205,9 +219,30 @@ class CRSPlanMeta:
     shape: Tuple[int, int]    # (M, K) of A
     rounds: int
     pattern: Any = None
+    rhs_format: Optional[str] = None   # None/dense -> fused reference;
+    #                                    "crs"/"incrs" -> condense/merge
+    # Per-RHS-object round-prep memo (weakref-guarded, like
+    # ops._PREP_CACHE): the plan carries BOTH operands' prepped metadata —
+    # A's is built once at plan time, each streamed RHS pays prep once.
+    _rhs_prep: Dict = dataclasses.field(default_factory=dict, repr=False)
 
 
-def _crs_plan_meta(pat: SparsityPattern, rounds: int) -> CRSPlanMeta:
+_RHS_PREP_MAX = 8
+
+
+def _rhs_rounds_prep(meta: CRSPlanMeta, b: CRS):
+    hit = meta._rhs_prep.get(id(b))
+    if hit is not None and hit[0]() is b:
+        return hit[1]
+    prep = ops.prep_rounds(b, meta.rounds, pad_rows_to=128)
+    if len(meta._rhs_prep) >= _RHS_PREP_MAX:
+        meta._rhs_prep.pop(next(iter(meta._rhs_prep)))
+    meta._rhs_prep[id(b)] = (weakref.ref(b), prep)
+    return prep
+
+
+def _crs_plan_meta(pat: SparsityPattern, rounds: int,
+                   rhs_format: Optional[str] = None) -> CRSPlanMeta:
     mask_a = np.ascontiguousarray(pat.mask.T)          # A = W^T (M, K)
     m, k = mask_a.shape
     crs0 = CRS.from_mask(np.zeros((m, k), np.float32), mask_a)
@@ -229,20 +264,28 @@ def _crs_plan_meta(pat: SparsityPattern, rounds: int) -> CRSPlanMeta:
     else:
         flat = np.zeros((0,), np.int64)
     return CRSPlanMeta(ai, jnp.asarray(flat, jnp.int32), (m, k), rounds,
-                       pattern=pat)
+                       pattern=pat, rhs_format=rhs_format)
 
 
 def _crs_call(meta: CRSPlanMeta, values, b, variant, interpret,
               config=None):
+    if isinstance(b, InCRS):
+        b = b.crs
     if not isinstance(b, CRS):
-        raise TypeError("a 'crs' plan runs the index-matching kernel "
-                        "C = A @ B^T and needs B^T as a CRS")
+        raise TypeError("a 'crs' plan runs sparse x sparse C = A @ B^T "
+                        "and needs B^T as a CRS (or InCRS)")
     av = jnp.zeros((int(np.prod(meta.ai.shape)),), jnp.float32
                    ).at[meta.scatter].set(jnp.asarray(values, jnp.float32)
                                           ).reshape(meta.ai.shape)
-    bi, bv = ops.prep_rounds(b, meta.rounds, pad_rows_to=128)
-    out = ops.index_match_prepped(meta.ai, av, bi, bv, rounds=meta.rounds,
-                                  interpret=interpret)
+    bi, bv = _rhs_rounds_prep(meta, b)
+    if meta.rhs_format in ("crs", "incrs") and variant != "reference":
+        from .. import spgemm as _spgemm       # circular at module scope
+        out = _spgemm.condense_merge_prepped(
+            meta.ai, av, bi, bv, rounds=meta.rounds, interpret=interpret)
+    else:
+        out = ops.index_match_prepped(meta.ai, av, bi, bv,
+                                      rounds=meta.rounds,
+                                      interpret=interpret)
     return out[:meta.shape[0], :b.shape[0]]
 
 
@@ -450,7 +493,8 @@ register_format("crs", False, None, FormatAdapter(
     "crs",
     make=_make_crs, apply=None, call=_crs_call, pack=_crs_pack,
     spec_of=lambda meta: SparseSpec("crs", rounds=meta.rounds,
-                                    pattern=meta.pattern)))
+                                    pattern=meta.pattern,
+                                    rhs_format=meta.rhs_format)))
 
 
 # ----------------------------------------------------------------------
@@ -637,7 +681,8 @@ def plan(spec: SparseSpec, rhs_shape: Optional[Tuple[int, ...]] = None, *,
     spec = dataclasses.replace(spec, density=None, mask=None, pattern=pat,
                                policy="magnitude")
     if spec.format == "crs":
-        return MatmulPlan(spec, _crs_plan_meta(pat, spec.rounds))
+        return MatmulPlan(spec, _crs_plan_meta(pat, spec.rounds,
+                                               rhs_format=spec.rhs_format))
     inner = _adapter(spec).make(np.zeros(pat.shape, np.float32), spec)
     built = MatmulPlan(spec, inner.meta)
     if spec.format == "incrs" and rhs_shape is not None \
@@ -682,7 +727,7 @@ def plan_for_operand(a, spec: Optional[SparseSpec] = None) -> BoundPlan:
         p = MatmulPlan(
             dataclasses.replace(spec, density=None, mask=None, pattern=pat,
                                 policy="magnitude"),
-            _crs_plan_meta(pat, spec.rounds))
+            _crs_plan_meta(pat, spec.rounds, rhs_format=spec.rhs_format))
         return p.bind(p.pack(w))
     return Linear.from_dense(w, spec).bound()
 

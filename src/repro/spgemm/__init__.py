@@ -1,0 +1,21 @@
+"""Sparse × sparse (SpGEMM) subsystem: condense/merge round-stripe pipeline.
+
+The fifth plan format: both operands sparse. ``kernels`` holds the two
+Pallas bodies (condense → per-round partial stripes, merge → round-
+synchronized accumulation); ``pipeline`` holds the drivers, the output-
+density estimator, and the standalone ``spgemm`` entry. Dispatch between
+this path and densify-then-SpMM is decided by ``core.mesh_sim.spgemm_cost``
+(the comparator-mesh latency model) via ``ops.spmm(variant="auto")``.
+"""
+from .kernels import spgemm_condense, spgemm_merge
+from .pipeline import (SPARSE_OUTPUT_THRESHOLD, condense_merge_prepped,
+                       estimate_output_density, spgemm)
+
+__all__ = [
+    "spgemm_condense",
+    "spgemm_merge",
+    "condense_merge_prepped",
+    "estimate_output_density",
+    "spgemm",
+    "SPARSE_OUTPUT_THRESHOLD",
+]

@@ -44,11 +44,12 @@ def test_all_kernels_prove_clean():
 
 
 def test_every_registered_kernel_is_covered():
-    # The seven kernel bodies named in the roadmap + the gather helper.
+    # The seven kernel bodies named in the roadmap + the gather helper
+    # + the SpGEMM condense/merge pair.
     assert set(gi.KERNELS) == {
         "incrs_spmm", "incrs_spmm_reuse", "incrs_spmm_pipelined",
         "bsr_spmm", "dense_mm", "index_match_spmm", "flash_attention",
-        "incrs_gather"}
+        "incrs_gather", "spgemm_condense", "spgemm_merge"}
 
 
 def test_proof_matrix_statuses():
